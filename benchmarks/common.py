@@ -1,0 +1,66 @@
+"""Shared benchmark utilities: stream runners + timing."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.dynlp import DynLP
+from repro.core.itlp import ITLP
+from repro.core.snapshot import build_problem
+from repro.core.stlp import STLP
+from repro.data.synth import StreamSpec, accuracy, gaussian_mixture_stream
+from repro.graph.dynamic import UNLABELED, DynamicGraph
+
+
+def run_stream(engine_cls, spec: StreamSpec, k: int = 5, **engine_kw):
+    """Run a full stream; returns (graph, per-batch stats, truth map)."""
+    g = DynamicGraph(emb_dim=spec.emb_dim, k=k)
+    eng = engine_cls(g, **engine_kw)
+    truth = {}
+    stats = []
+    for batch, cls in gaussian_mixture_stream(spec):
+        base = g.num_nodes
+        stats.append(eng.step(batch))
+        for i, c in enumerate(cls):
+            truth[base + i] = c
+    ids = np.flatnonzero(g.alive & (g.labels == UNLABELED))
+    pred = (g.f[ids] >= 0.5).astype(np.int8)
+    tr = np.array([truth[i] for i in ids]) if len(ids) else np.zeros(0, np.int8)
+    return {
+        "graph": g, "engine": eng, "stats": stats, "ids": ids, "pred": pred,
+        "truth": tr,
+        "acc_vs_truth": accuracy(pred, tr),
+        "total_ms": sum(s.wall_ms for s in stats),
+        "total_iters": sum(getattr(s, "iterations", 0) for s in stats),
+    }
+
+
+def harmonic_reference(g, delta=1e-7):
+    """Binary labels of the near-exact harmonic solution (iterated)."""
+    import jax.numpy as jnp
+
+    from repro.core.propagate import propagate_full
+
+    snap = build_problem(g)
+    u = len(snap.unl_ids)
+    res = propagate_full(snap.problem, jnp.full((snap.problem.num_unlabeled,), 0.5),
+                         delta=delta, max_iters=500_000)
+    f = np.asarray(res.f)[:u]
+    return snap.unl_ids, f
+
+
+def spec_for(n: int, batch: int | None = None, seed: int = 0,
+             sep: float = 6.0, noise: float = 0.9) -> StreamSpec:
+    return StreamSpec(total_vertices=n, batch_size=batch or n, seed=seed,
+                      class_sep=sep, noise=noise)
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.ms = (time.perf_counter() - self.t0) * 1e3

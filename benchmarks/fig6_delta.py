@@ -1,0 +1,61 @@
+"""Paper Fig. 6: impact of the update threshold δ on iterations, time and
+accuracy (accuracy measured against the harmonic solution, as in the paper:
+"relative to the baseline method of Wagner et al., which optimally minimizes
+the energy function").
+
+Claims under test: larger δ ⇒ fewer iterations & lower accuracy;
+δ = 1e-4 is near-optimal (≈99%); accuracy decreases with batch size (6b).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import harmonic_reference, run_stream, spec_for
+from repro.core.dynlp import DynLP
+from repro.data.synth import accuracy
+
+
+def run(n=8_000, deltas=(1e-1, 1e-2, 1e-3, 1e-4, 1e-5)):
+    rows = []
+    for d in deltas:
+        out = run_stream(DynLP, spec_for(n, seed=9, noise=1.1), delta=d)
+        ids, f_h = harmonic_reference(out["graph"])
+        pred_h = (f_h >= 0.5).astype(np.int8)
+        acc_h = accuracy(out["pred"], pred_h)
+        rows.append({"delta": d, "iterations": out["total_iters"],
+                     "ms": out["total_ms"], "acc_vs_harmonic": acc_h})
+    return rows
+
+
+def run_batch_sweep(n=12_000, batches=(2_000, 6_000, 12_000), delta=1e-4):
+    rows = []
+    for b in batches:
+        out = run_stream(DynLP, spec_for(n, batch=b, seed=11, noise=1.1),
+                         delta=delta)
+        ids, f_h = harmonic_reference(out["graph"])
+        acc_h = accuracy(out["pred"], (f_h >= 0.5).astype(np.int8))
+        rows.append({"batch": b, "acc_vs_harmonic": acc_h,
+                     "iterations": out["total_iters"]})
+    return rows
+
+
+def main(full: bool = False):
+    rows = run(8_000 if full else 3_000)
+    print("fig6a: delta,iterations,ms,acc_vs_harmonic")
+    for r in rows:
+        print(f"fig6a,{r['delta']},{r['iterations']},{r['ms']:.0f},"
+              f"{r['acc_vs_harmonic']:.4f}")
+    iters = [r["iterations"] for r in rows]
+    assert iters[0] <= iters[-1], iters  # larger δ terminates earlier
+    assert rows[-2]["acc_vs_harmonic"] >= 0.98  # δ=1e-4 near-optimal
+    rows_b = run_batch_sweep(12_000 if full else 4_000,
+                             (2_000, 6_000, 12_000) if full else (1_000, 2_000, 4_000))
+    print("fig6b: batch,iterations,acc_vs_harmonic")
+    for r in rows_b:
+        print(f"fig6b,{r['batch']},{r['iterations']},{r['acc_vs_harmonic']:.4f}")
+    return rows, rows_b
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""Shim: the analyzer lives in repro.launch.hlo_analysis (src tree)."""
+from repro.launch.hlo_analysis import *  # noqa: F401,F403

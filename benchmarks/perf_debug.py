@@ -1,0 +1,114 @@
+"""Perf-loop profiler: lower one cell and print the TOP collective sites
+(op, result shape, enclosing computation, trip multiplier, total bytes) and
+top dot sites — the dry-run 'profile' that drives §Perf iterations.
+
+    PYTHONPATH=src python -m benchmarks.perf_debug --arch deepseek-67b \
+        --shape train_4k [--layout tp] [--fsdp off] [--microbatches 16]
+"""
+
+from __future__ import annotations
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse
+import re
+from collections import defaultdict
+
+from repro.launch import hlo_analysis as H
+
+
+def site_breakdown(text: str):
+    comps = H.split_computations(text)
+    # first pass: multipliers via call graph from ENTRY
+    stats = {}
+    for name, lines in comps.items():
+        calls = []
+        trip_map = {}
+        for line in lines:
+            if " while(" in line:
+                body = H._CALL_RE.search(line)
+                cond = H._COND_RE.search(line)
+                trips = 1
+                if cond and cond.group(1) in comps:
+                    consts = []
+                    for cl in comps[cond.group(1)]:
+                        consts += [int(c) for c in H._CONST_CMP_RE.findall(cl)]
+                    if consts:
+                        trips = max(consts)
+                if body:
+                    calls.append((body.group(1), trips))
+            elif " fusion(" in line or " call(" in line or "custom-call" in line:
+                m = H._CALL_RE.search(line)
+                if m:
+                    calls.append((m.group(1), 1))
+        stats[name] = calls
+
+    mult = defaultdict(float)
+
+    def walk(name, m, seen=()):
+        if name in seen or name not in stats:
+            return
+        mult[name] += m
+        for callee, trips in stats[name]:
+            walk(callee, m * trips, seen + (name,))
+
+    entry = "ENTRY" if "ENTRY" in comps else next(iter(comps))
+    walk(entry, 1.0)
+
+    sites = []
+    for name, lines in comps.items():
+        m = mult.get(name, 0.0)
+        if m == 0:
+            continue
+        for line in lines:
+            coll = next((c for c in H.COLLECTIVES if f" {c}(" in line
+                         or f" {c}-start(" in line), None)
+            if coll:
+                ty = line.split("=", 1)[1].split(coll)[0] if "=" in line else line
+                nbytes = H._type_bytes(ty)
+                sites.append((nbytes * m, coll, ty.strip()[:60], name[:40], m))
+    return sorted(sites, reverse=True)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--layout", default="tp")
+    ap.add_argument("--fsdp", default="auto")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--top", type=int, default=20)
+    args = ap.parse_args()
+
+    from repro.launch.dryrun import lower_cell  # noqa: E402 (env flag set above)
+
+    # re-lower with text capture
+    import repro.launch.dryrun as DR
+
+    captured = {}
+    orig_analyze = DR.hlo_analysis.analyze
+
+    def capture(text, *a, **k):
+        captured["text"] = text
+        return orig_analyze(text, *a, **k)
+
+    DR.hlo_analysis.analyze = capture
+    fsdp = {"auto": None, "on": True, "off": False}[args.fsdp]
+    rec = lower_cell(args.arch, args.shape, args.multi_pod,
+                     microbatches=args.microbatches, fsdp=fsdp,
+                     layout=args.layout)
+    DR.hlo_analysis.analyze = orig_analyze
+    print(f"total collective bytes/device: {rec['hlo']['collective_total']:.3e}")
+    print(f"flops/device: {rec['hlo']['flops']:.3e}   "
+          f"peak mem: {rec['memory']['peak_estimate_bytes']/2**30:.2f} GiB")
+    print(f"\ntop {args.top} collective sites (bytes×trips, op, result, "
+          f"computation, mult):")
+    for nbytes, op, ty, comp, m in site_breakdown(captured["text"])[: args.top]:
+        print(f"  {nbytes:.3e}  {op:18s} {ty:60s} {comp:40s} x{m:.0f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,252 @@
+"""Roofline derivation from the dry-run records (EXPERIMENTS.md §Roofline).
+
+Per (arch × shape × mesh):
+    compute term    = HLO_FLOPs/device / 197 TFLOP/s
+    memory term     = HBM_bytes/device / 819 GB/s
+    collective term = collective_bytes/device / 50 GB/s/link
+
+HLO_FLOPs comes from the loop-aware static analyzer (launch.hlo_analysis) —
+``compiled.cost_analysis()`` counts while bodies once and is kept only as a
+cross-check.  HBM bytes are estimated as
+``cost_bytes × (hlo_flops / cost_flops)``: the flops undercount ratio equals
+the loop-trip multiplicity of the dominant (layer-scan) loops, and the bytes
+live in the same loops.  MODEL_FLOPS = 6·N·D (train), 2·N·D (prefill),
+2·N·B (decode: one token per sequence), N = active params for MoE.
+
+Usage:  PYTHONPATH=src python -m benchmarks.roofline [--mesh 16x16] [--json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+SHAPE_TOKENS = {
+    "train_4k": 4096 * 256,
+    "prefill_32k": 32768 * 32,
+    "decode_32k": 128,  # one new token per sequence
+    "long_500k": 1,
+}
+
+
+def model_flops(rec) -> float:
+    shape = rec["shape"]
+    n = rec["num_active_params"]
+    tokens = SHAPE_TOKENS[shape]
+    if shape == "train_4k":
+        return 6.0 * n * tokens
+    return 2.0 * n * tokens
+
+
+def _mesh_dims(rec):
+    dims = [int(x) for x in rec["mesh"].split("x")]
+    tp = dims[-1]
+    dp = 1
+    for d in dims[:-1]:
+        dp *= d
+    return dp, tp
+
+
+def analytic_bytes(rec) -> float:
+    """Per-device HBM traffic model (documented in EXPERIMENTS.md §Roofline).
+
+    weights: bf16 reads — train: fwd + remat-fwd + bwd per microbatch (+ the
+    gathered copies under FSDP); prefill/decode: one read.
+    optimizer: master/m/v read+write + grads + param write ≈ 34 B/param,
+    sharded tp×dp (ZeRO).
+    activations: c·D_model·L·tokens_per_device·2 bytes with c≈120 (train:
+    fwd+bwd+remat reads/writes of block intermediates), c≈40 (prefill).
+    KV cache: full read per decoded token; write during prefill.
+    """
+    from repro.configs.registry import get_config
+
+    cfg = get_config(rec["arch"])
+    dp, tp = _mesh_dims(rec)
+    chips = rec["n_chips"]
+    p = rec["num_params"]
+    mb = rec.get("microbatches", 1)
+    shape = rec["shape"]
+    d, l_eff = cfg.d_model, cfg.n_layers + cfg.n_enc_layers
+
+    if shape == "train_4k":
+        tokens_dev = SHAPE_TOKENS[shape] / dp
+        w = 3 * (2 * p / tp) * mb * (2 if rec.get("fsdp") else 1)
+        opt = 34 * p / (tp * dp)
+        act = 120 * d * l_eff * tokens_dev * 2
+        return w + opt + act
+    if shape == "prefill_32k":
+        tokens_dev = SHAPE_TOKENS[shape] / dp
+        w = 2 * p / tp
+        act = 40 * d * l_eff * tokens_dev * 2
+        cache = _cache_bytes(cfg, 32, 32768) / chips
+        return w + act + cache
+    # decode: read all (active) weights + the full cache once per token
+    b = 128 if shape == "decode_32k" else 1
+    s = 32768 if shape == "decode_32k" else 524_288
+    w = 2 * rec["num_active_params"] / tp
+    cache = _cache_bytes(cfg, b, s) / chips
+    act = 20 * d * l_eff * b / dp * 2
+    return w + cache + act
+
+
+def _cache_bytes(cfg, batch: int, s: int) -> float:
+    """Global KV/state cache bytes for this architecture."""
+    if cfg.xlstm is not None:  # recurrent: matrix memories, no KV growth
+        d_in = int(cfg.d_model * cfg.xlstm.proj_factor)
+        per_layer = batch * (d_in // cfg.n_heads) * d_in * 4
+        return cfg.n_layers * per_layer
+    kv = 2 * batch * s * cfg.n_kv_heads * cfg.hd * 2
+    if cfg.sliding_window:
+        kv = 2 * batch * min(s, cfg.sliding_window) * cfg.n_kv_heads * cfg.hd * 2
+    if cfg.attn_every:  # zamba: shared attn blocks + mamba states
+        n_macro = max(1, round(cfg.n_layers / (cfg.attn_every + 1)))
+        d_in = cfg.ssm.expand * cfg.d_model
+        states = cfg.n_layers * batch * (d_in // cfg.ssm.head_dim) * \
+            cfg.ssm.d_state * cfg.ssm.head_dim * 4
+        return n_macro * kv + states
+    if cfg.enc_dec:
+        return cfg.n_layers * kv * 2  # self (bounded) + cross approximated
+    return cfg.n_layers * kv
+
+
+def derive(rec) -> dict:
+    chips = rec["n_chips"]
+    flops_dev = rec["hlo"]["flops"]
+    cost_flops = max(rec["cost"]["flops"], 1.0)
+    cost_bytes = rec["cost"]["bytes_accessed"]
+    loop_ratio = max(1.0, flops_dev / cost_flops)
+    bytes_dev = analytic_bytes(rec)
+    bytes_dev_alt = cost_bytes * loop_ratio  # cost-scaled cross-check
+    coll_dev = rec["hlo"]["collective_total"]
+
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+    t_coll = coll_dev / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    step_time = max(terms.values())
+    mf = model_flops(rec)
+    useful_ratio = mf / max(flops_dev * chips, 1.0)
+    # achievable fraction of compute roofline at the modeled step time
+    mfu = (mf / chips / max(step_time, 1e-12)) / PEAK_FLOPS
+    return {
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "mesh": rec["mesh"],
+        "flops_dev": flops_dev,
+        "bytes_dev": bytes_dev,
+        "bytes_dev_cost_scaled": bytes_dev_alt,
+        "coll_dev": coll_dev,
+        "t_compute": t_compute,
+        "t_memory": t_memory,
+        "t_collective": t_coll,
+        "dominant": dominant,
+        "model_flops": mf,
+        "useful_flops_ratio": useful_ratio,
+        "roofline_fraction": mfu,
+        "peak_mem_gib": rec["memory"]["peak_estimate_bytes"] / 2**30,
+        "fits_hbm": rec.get("fits_hbm", True),
+        "microbatches": rec.get("microbatches", 1),
+        "fsdp": rec.get("fsdp", False),
+        "suggestion": suggest(dominant, rec),
+    }
+
+
+def suggest(dominant: str, rec) -> str:
+    kind = rec["shape"]
+    if dominant == "collective":
+        if kind == "train_4k":
+            return ("shrink per-layer resharding: drop sequence-parallel "
+                    "all-gathers or widen DP vs TP for this model size")
+        return ("shard KV/state on a dimension that avoids per-layer score "
+                "all-reduce (flash-decode style seq sharding)")
+    if dominant == "memory":
+        if "decode" in kind or kind == "long_500k":
+            return ("decode is weight/cache-bandwidth bound by nature; raise "
+                    "batch per chip or quantize KV cache to int8")
+        return "increase arithmetic intensity: larger microbatches or fusion"
+    return ("compute-bound: skip fully-masked causal KV blocks in chunked "
+            "attention and cut remat recompute on cheap ops")
+
+
+def load_records(mesh_filter=None, tag="", directory=None):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(directory or DRYRUN_DIR, "*.json"))):
+        base = os.path.basename(path)[:-5]
+        parts = base.split("__")
+        if len(parts) != 3:
+            continue
+        mesh_part = parts[2]
+        file_tag = ""
+        for mesh_base in ("2x16x16", "16x16"):
+            if mesh_part.startswith(mesh_base):
+                file_tag = mesh_part[len(mesh_base):].lstrip("_")
+                break
+        if file_tag != tag:
+            continue
+        r = json.load(open(path))
+        if "arch" not in r:  # lp_dynlp records have their own format
+            continue
+        if r.get("status") != "ok":
+            recs.append(r)
+            continue
+        if mesh_filter and r["mesh"] != mesh_filter:
+            continue
+        recs.append(r)
+    return recs
+
+
+def fmt_s(x):
+    return f"{x*1e3:8.2f}ms" if x < 10 else f"{x:8.2f}s "
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--dir", default=None,
+                    help="records dir (e.g. experiments/dryrun_baseline)")
+    ap.add_argument("--json", action="store_true")
+    args = ap.parse_args()
+
+    rows, skipped, failed = [], [], []
+    for rec in load_records(args.mesh, args.tag, directory=args.dir):
+        if rec.get("status") == "skipped":
+            if not rec.get("multi_pod"):
+                skipped.append(rec)
+            continue
+        if rec.get("status") == "failed":
+            failed.append(rec)
+            continue
+        rows.append(derive(rec))
+
+    if args.json:
+        print(json.dumps(rows, indent=1))
+        return
+
+    hdr = (f"{'arch':22s} {'shape':12s} {'comp':>10s} {'mem':>10s} "
+           f"{'coll':>10s} {'dominant':>10s} {'useful':>7s} {'roofl%':>7s} "
+           f"{'mem GiB':>8s} {'mb':>3s}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        print(f"{r['arch']:22s} {r['shape']:12s} {fmt_s(r['t_compute'])} "
+              f"{fmt_s(r['t_memory'])} {fmt_s(r['t_collective'])} "
+              f"{r['dominant']:>10s} {r['useful_flops_ratio']*100:6.1f}% "
+              f"{r['roofline_fraction']*100:6.2f}% "
+              f"{r['peak_mem_gib']:8.2f} {r['microbatches']:3d}")
+    for rec in skipped:
+        print(f"{rec['arch']:22s} {rec['shape']:12s}  SKIPPED: {rec['reason'][:70]}")
+    for rec in failed:
+        print(f"{rec['arch']:22s} {rec['shape']:12s}  FAILED: {rec['error'][:70]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+"""DynLP core: the paper's contribution as composable JAX modules."""
+from repro.core.components import CCResult, compact_labels, connected_components
+from repro.core.dynlp import DynLP, StepStats
+from repro.core.init_labels import supernode_init
+from repro.core.itlp import ITLP, ITLPStats
+from repro.core.propagate import (
+    PropagateResult,
+    PropagationProblem,
+    harmonic_residual,
+    lp_update,
+    propagate,
+    propagate_full,
+)
+from repro.core.snapshot import Snapshot, build_problem
+from repro.core.stlp import STLP, STLPStats, harmonic_solve

@@ -1,0 +1,217 @@
+"""Vertex-partitioned distributed label propagation (DESIGN.md §4).
+
+Rows (vertices) are partitioned across a 1-D device view of the mesh via
+``shard_map``; each device owns a contiguous ELL row block whose neighbor
+ids index the GLOBAL label vector.  Per iteration:
+
+    all-gather F  →  local fused update  →  δ-threshold + local frontier
+    →  psum(any frontier) convergence flag
+
+F is N·4 bytes total, so the all-gather is cheap relative to the edge work
+(50M vertices → 200 MB across the pod, ~4 ms at ICI bandwidth — the
+roofline's collective term; a halo-exchange variant that ships only
+boundary labels is the documented §Perf iteration for higher-diameter
+partitionings).
+
+The body reuses the exact update semantics of ``core.propagate`` (same
+fixpoint, same iteration count), so single-device tests transfer.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.propagate import PropagateResult, PropagationProblem
+from repro.graph.structures import PAD
+
+
+class ShardedProblem(NamedTuple):
+    """PropagationProblem padded to a multiple of the device count."""
+
+    problem: PropagationProblem
+    n_orig: int
+
+
+def pad_problem(problem: PropagationProblem, n_devices: int) -> ShardedProblem:
+    n = problem.num_unlabeled
+    pad = (-n) % n_devices
+    if pad == 0:
+        return ShardedProblem(problem, n)
+    padded = PropagationProblem(
+        nbr=jnp.pad(problem.nbr, ((0, pad), (0, 0)), constant_values=PAD),
+        wgt=jnp.pad(problem.wgt, ((0, pad), (0, 0))),
+        wl0=jnp.pad(problem.wl0, (0, pad)),
+        wl1=jnp.pad(problem.wl1, (0, pad)),
+        valid=jnp.pad(problem.valid, (0, pad)),
+    )
+    return ShardedProblem(padded, n)
+
+
+def make_propagate_fn(mesh, delta: float = 1e-4, max_iters: int = 100_000):
+    """Build the jitted all-gather propagation step (lowerable with
+    ShapeDtypeStructs for the LP roofline dry-run)."""
+    axes = mesh.axis_names
+    delta_ = jnp.float32(delta)
+    row = P(axes)  # rows sharded over ALL mesh axes (flattened view)
+    row2 = P(axes, None)
+
+    @functools.partial(
+        jax.shard_map,
+        mesh=mesh,
+        in_specs=(row2, row2, row, row, row, row, row),
+        out_specs=(row, P(), P(), P()),
+    )
+    def run(nbr, wgt, wl0, wl1, valid, f_loc, fr_loc):
+        mask = nbr != PAD
+        idx = jnp.where(mask, nbr, 0)
+
+        def gather_full(x_loc):
+            return jax.lax.all_gather(x_loc, axes, tiled=True)
+
+        def body(state):
+            f_l, fr_l, it, _ = state
+            f_full = gather_full(f_l)  # (N,) — the collective
+            f_u = f_l
+            f_v = f_full[idx]
+            nbr_term = jnp.sum(wgt * jnp.where(mask, f_v - f_u[:, None], 0.0),
+                               axis=1)
+            wall = jnp.sum(wgt, axis=1) + wl0 + wl1
+            d_f = (0.0 - f_u) * wl0 + (1.0 - f_u) * wl1 + nbr_term
+            f_new = f_u + jnp.where(wall > 0, d_f / jnp.maximum(wall, 1e-30), 0)
+            f_new = jnp.where(fr_l, f_new, f_u)
+            resid_l = jnp.abs(f_new - f_u)
+            changed_l = (resid_l > delta_) & valid
+            changed_full = gather_full(changed_l)
+            nbr_changed = jnp.any(changed_full[idx] & mask, axis=1)
+            fr_new = (changed_l | nbr_changed) & valid
+            resid = jax.lax.pmax(jnp.max(resid_l, initial=0.0), axes)
+            return f_new, fr_new, it + 1, resid
+
+        def cond(state):
+            _, fr_l, it, _ = state
+            any_frontier = jax.lax.pmax(fr_l.any().astype(jnp.int32), axes)
+            return jnp.logical_and(any_frontier > 0, it < max_iters)
+
+        f_l, fr_l, iters, resid = jax.lax.while_loop(
+            cond, body, (f_loc, fr_loc, jnp.int32(0), jnp.float32(0)))
+        done = jax.lax.pmax(fr_l.any().astype(jnp.int32), axes) == 0
+        return f_l, iters, done, resid
+
+    return jax.jit(run)
+
+
+def distributed_propagate(
+    problem: PropagationProblem,
+    f0: jax.Array,
+    frontier0: jax.Array,
+    mesh: jax.sharding.Mesh,
+    delta: float = 1e-4,
+    max_iters: int = 100_000,
+) -> PropagateResult:
+    """Run DynLP Step 3 with vertices sharded over every mesh device."""
+    n_dev = mesh.devices.size
+    sp = pad_problem(problem, n_dev)
+    p = sp.problem
+    n = p.num_unlabeled
+    f0 = jnp.pad(f0.astype(jnp.float32), (0, n - len(f0)))
+    frontier0 = jnp.pad(frontier0, (0, n - len(frontier0))) & p.valid
+    run = make_propagate_fn(mesh, delta=delta, max_iters=max_iters)
+    f, iters, converged, resid = run(
+        p.nbr, p.wgt, p.wl0, p.wl1, p.valid, f0, frontier0)
+    return PropagateResult(
+        f=f[: sp.n_orig], iterations=iters, converged=converged,
+        max_residual=resid)
+
+
+def make_propagate_halo_fn(mesh, rows_per_shard: int, export_max: int,
+                           delta: float = 1e-4, max_iters: int = 100_000):
+    """Build the jitted halo-exchange propagation step.
+
+    Only each shard's EXPORT PREFIX is all-gathered per iteration
+    (cross-shard-referenced rows lead each shard —
+    ``graph.partition.build_halo_plan``).  For locality-ordered graphs the
+    exchanged bytes drop from N·4 to Σ|exports|·4 — the §Perf iteration on
+    the collective term.  Fixpoint and iteration count are identical to
+    the all-gather transport (same Jacobi update)."""
+    axes = mesh.axis_names
+    m = rows_per_shard
+    delta_ = jnp.float32(delta)
+    row = P(axes)
+    row2 = P(axes, None)
+
+    @functools.partial(
+        jax.shard_map,
+        mesh=mesh,
+        in_specs=(row2, row2, row, row, row, row, row),
+        out_specs=(row, P(), P(), P()),
+    )
+    def run(nbr, wgt, wl0, wl1, valid, f_loc, fr_loc):
+        mask = nbr != PAD
+        gid = jnp.where(mask, nbr, 0)
+        owner = gid // m  # (m, K) owning shard of each neighbor
+        offset = gid % m
+        my = jax.lax.axis_index(axes)  # linearized index over all mesh axes
+        local_ref = owner == my
+
+        def body(state):
+            f_l, fr_l, it, _ = state
+            exports = jax.lax.all_gather(f_l[:export_max], axes)  # (D, E)
+            f_local_v = f_l[offset]  # own-shard values
+            f_remote_v = exports[owner, jnp.minimum(offset, export_max - 1)]
+            f_v = jnp.where(local_ref, f_local_v, f_remote_v)
+            f_u = f_l
+            nbr_term = jnp.sum(wgt * jnp.where(mask, f_v - f_u[:, None], 0.0),
+                               axis=1)
+            wall = jnp.sum(wgt, axis=1) + wl0 + wl1
+            d_f = (0.0 - f_u) * wl0 + (1.0 - f_u) * wl1 + nbr_term
+            f_new = f_u + jnp.where(wall > 0, d_f / jnp.maximum(wall, 1e-30), 0)
+            f_new = jnp.where(fr_l, f_new, f_u)
+            resid_l = jnp.abs(f_new - f_u)
+            changed_l = (resid_l > delta_) & valid
+            # frontier expansion needs changed flags of remote neighbors too
+            ch_exp = jax.lax.all_gather(changed_l[:export_max], axes)
+            ch_local = changed_l[offset]
+            ch_remote = ch_exp[owner, jnp.minimum(offset, export_max - 1)]
+            ch_v = jnp.where(local_ref, ch_local, ch_remote)
+            nbr_changed = jnp.any(ch_v & mask, axis=1)
+            fr_new = (changed_l | nbr_changed) & valid
+            resid = jax.lax.pmax(jnp.max(resid_l, initial=0.0), axes)
+            return f_new, fr_new, it + 1, resid
+
+        def cond(state):
+            _, fr_l, it, _ = state
+            any_frontier = jax.lax.pmax(fr_l.any().astype(jnp.int32), axes)
+            return jnp.logical_and(any_frontier > 0, it < max_iters)
+
+        f_l, fr_l, iters, resid = jax.lax.while_loop(
+            cond, body, (f_loc, fr_loc, jnp.int32(0), jnp.float32(0)))
+        done = jax.lax.pmax(fr_l.any().astype(jnp.int32), axes) == 0
+        return f_l, iters, done, resid
+
+    return jax.jit(run)
+
+
+def distributed_propagate_halo(
+    problem: PropagationProblem,  # rows already in HaloPlan layout
+    f0: jax.Array,
+    frontier0: jax.Array,
+    mesh: jax.sharding.Mesh,
+    export_max: int,
+    delta: float = 1e-4,
+    max_iters: int = 100_000,
+) -> PropagateResult:
+    n_dev = mesh.devices.size
+    n = problem.num_unlabeled
+    assert n % n_dev == 0, "caller pads via build_halo_plan"
+    run = make_propagate_halo_fn(mesh, n // n_dev, export_max,
+                                 delta=delta, max_iters=max_iters)
+    p = problem
+    f, iters, converged, resid = run(
+        p.nbr, p.wgt, p.wl0, p.wl1, p.valid, f0.astype(jnp.float32), frontier0)
+    return PropagateResult(f=f, iterations=iters, converged=converged,
+                           max_residual=resid)

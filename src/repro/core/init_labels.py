@@ -1,0 +1,31 @@
+"""Supernode label initialization (paper Alg. 2 Step 2).
+
+Each connected component c of the new-vertex graph G' is a supernode; the two
+ground-truth classes are supernodes L0/L1.  With parallel-edge sums
+W_c^{L0} = Σ_{u∈c} Σ_{v∈L0} w(u,v) (and likewise L1), every vertex of c is
+initialized to
+
+    F = 0.5 + (0−0.5)·W^{L0}/(W^{L0}+W^{L1}) + (1−0.5)·W^{L1}/(W^{L0}+W^{L1})
+      = W^{L1} / (W^{L0} + W^{L1})            (0.5 when both sums are zero)
+
+The per-component sums are two ``segment_sum``s keyed by component id.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def supernode_init(
+    comp: jax.Array,  # (M,) int32 component id per new vertex (0..num_segments-1)
+    wl0: jax.Array,  # (M,) float32 — Σ w(u, v∈L0) for each new vertex u
+    wl1: jax.Array,  # (M,) float32
+    num_segments: int,
+) -> jax.Array:
+    """Returns (M,) float32 initial labels for the new vertices."""
+    cw0 = jax.ops.segment_sum(wl0, comp, num_segments=num_segments)
+    cw1 = jax.ops.segment_sum(wl1, comp, num_segments=num_segments)
+    tot = cw0 + cw1
+    f_comp = jnp.where(tot > 0, cw1 / jnp.maximum(tot, 1e-30), 0.5)
+    return f_comp[comp]

@@ -1,0 +1,99 @@
+"""Build device ``PropagationProblem``s from the host ``DynamicGraph``.
+
+Labeled classes are folded into the per-node supernode weights wl0/wl1; the
+ELL tensor holds only unlabeled↔unlabeled edges (paper §4 "three kinds of
+vertices that can impact the label").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graph.structures import ELLGraph
+
+from repro.core.propagate import PropagationProblem
+from repro.graph.dynamic import UNLABELED, DynamicGraph
+from repro.graph.structures import coo_to_csr, csr_to_ell_fast
+
+
+@dataclasses.dataclass
+class Snapshot:
+    problem: PropagationProblem
+    unl_ids: np.ndarray  # (U,) global ids of the unlabeled alive vertices
+    remap: np.ndarray  # (num_nodes,) global -> compact (or -1)
+
+
+def bucket(n: int, ratio: float = 1.3, floor: int = 256) -> int:
+    """Round ``n`` up to a geometric bucket so jit caches hit across batches
+    (the evolving graph would otherwise trigger one recompile per Δ_t)."""
+    b = floor
+    while b < n:
+        b = int(np.ceil(b * ratio))
+    return b
+
+
+def build_problem(
+    g: DynamicGraph,
+    max_degree: int | None = None,
+    pad_to: int | None = None,
+    auto_bucket: bool = False,
+) -> Snapshot:
+    alive_unl = g.alive & (g.labels == UNLABELED)
+    unl_ids = np.flatnonzero(alive_unl)
+    u = len(unl_ids)
+    remap = np.full(g.num_nodes, -1, np.int64)
+    remap[unl_ids] = np.arange(u)
+
+    src, dst, wgt = g.src, g.dst, g.wgt
+    live = g.alive[src] & g.alive[dst] if len(src) else np.zeros(0, bool)
+    src, dst, wgt = src[live], dst[live], wgt[live]
+
+    s_unl = alive_unl[src]
+    d_unl = alive_unl[dst]
+
+    # unlabeled -> unlabeled edges form the ELL tensor
+    uu = s_unl & d_unl
+    csr = coo_to_csr(u, remap[src[uu]], remap[dst[uu]], wgt[uu])
+    ell = csr_to_ell_fast(csr, max_degree=max_degree)
+    if auto_bucket:
+        pad_to = bucket(u)
+        k = ell.nbr.shape[1]
+        kb = max(8, -8 * (-k // 8))  # K rounded up to a multiple of 8
+        if kb != k:
+            pad_n = jnp.full((ell.nbr.shape[0], kb - k), -1, jnp.int32)
+            pad_w = jnp.zeros((ell.nbr.shape[0], kb - k), jnp.float32)
+            ell = ELLGraph(
+                nbr=jnp.concatenate([ell.nbr, pad_n], axis=1),
+                wgt=jnp.concatenate([ell.wgt, pad_w], axis=1),
+            )
+
+    # unlabeled -> labeled edges fold into wl0 / wl1
+    wl0 = np.zeros(u, np.float32)
+    wl1 = np.zeros(u, np.float32)
+    ul = s_unl & ~d_unl
+    lab = g.labels[dst[ul]]
+    rows = remap[src[ul]]
+    np.add.at(wl0, rows[lab == 0], wgt[ul][lab == 0])
+    np.add.at(wl1, rows[lab == 1], wgt[ul][lab == 1])
+
+    nbr, w = np.asarray(ell.nbr), np.asarray(ell.wgt)
+    valid = np.ones(u, bool)
+    if pad_to is not None and u < pad_to:  # shard padding rows
+        k = nbr.shape[1]
+        nbr = np.concatenate([nbr, np.full((pad_to - u, k), -1, np.int32)])
+        w = np.concatenate([w, np.zeros((pad_to - u, k), np.float32)])
+        wl0 = np.concatenate([wl0, np.zeros(pad_to - u, np.float32)])
+        wl1 = np.concatenate([wl1, np.zeros(pad_to - u, np.float32)])
+        valid = np.concatenate([valid, np.zeros(pad_to - u, bool)])
+
+    problem = PropagationProblem(
+        nbr=jnp.asarray(nbr),
+        wgt=jnp.asarray(w),
+        wl0=jnp.asarray(wl0),
+        wl1=jnp.asarray(wl1),
+        valid=jnp.asarray(valid),
+    )
+    return Snapshot(problem=problem, unl_ids=unl_ids, remap=remap)

@@ -1,0 +1,250 @@
+"""Logical-axis partitioning.
+
+Models annotate activations with *logical* axes ("dp", "sp", "tp", "ep",
+None); the launcher installs a rule set mapping logical → mesh axes before
+tracing.  With no rules installed (unit tests, single device) every
+annotation is a no-op, so the same model code runs everywhere.
+
+Parameter shardings are derived from leaf *names* + shapes by
+``param_specs`` — a rule table in the spirit of MaxText's logical axis rules,
+but resolved at pytree level so the optimizer/checkpoint layers can reuse the
+spec tree directly.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+_RULES: dict[str, Any] | None = None
+
+
+def set_axis_rules(rules: dict[str, Any] | None) -> None:
+    """rules e.g. {"dp": ("pod", "data"), "tp": "model", "sp": "model",
+    "ep": "model"}.  None disables all constraints."""
+    global _RULES
+    _RULES = rules
+
+
+def get_axis_rules() -> dict[str, Any] | None:
+    return _RULES
+
+
+def logical_to_spec(*logical: str | None) -> P:
+    assert _RULES is not None
+    return P(*[_RULES.get(a) if a is not None else None for a in logical])
+
+
+_MESH_SIZES: dict[str, int] | None = None
+
+
+def set_mesh_sizes(sizes: dict[str, int] | None) -> None:
+    """Axis sizes for divisibility-aware constraint resolution."""
+    global _MESH_SIZES
+    _MESH_SIZES = sizes
+
+
+def shard(x: jax.Array, *logical: str | None) -> jax.Array:
+    """Annotate an intermediate with logical axes (no-op without rules).
+
+    Divisibility-aware when mesh sizes are installed: a non-dividing "tp"
+    shifts right to the next free dividing dim (e.g. 8 kv-heads under
+    16-way TP falls through to the 128-wide head dim); other non-dividing
+    axes drop to replication."""
+    if _RULES is None:
+        return x
+    if _MESH_SIZES is None:
+        return jax.lax.with_sharding_constraint(x, logical_to_spec(*logical))
+    resolved: list = [None] * x.ndim
+    for i, ax in enumerate(logical):
+        if ax is None:
+            continue
+        mesh_ax = _RULES.get(ax)
+        size = _axis_size(mesh_ax, _MESH_SIZES)
+        if size and x.shape[i] % size == 0:
+            resolved[i] = mesh_ax
+        elif ax == "tp" and size:
+            for j in range(i + 1, x.ndim):
+                if (j >= len(logical) or logical[j] is None) and \
+                        resolved[j] is None and x.shape[j] % size == 0:
+                    resolved[j] = mesh_ax
+                    break
+    return jax.lax.with_sharding_constraint(x, P(*resolved))
+
+
+# --------------------------------------------------------------------- #
+# Parameter partitioning rules
+# --------------------------------------------------------------------- #
+# (regex on the leaf path, rule) — first match wins.  The rule is a tuple of
+# logical axes for the *trailing* dims of the leaf; leading stacked-layer
+# dims are padded with None automatically.
+_PARAM_RULES: list[tuple[str, tuple]] = [
+    (r"embed$", (None, "tp")),  # (V, D): shard D
+    (r"lm_head$", (None, "tp")),  # (D, V): shard V
+    (r"pos_embed$", (None, None)),
+    (r"frontend_proj$", (None, "tp")),
+    (r"router$", (None, None)),
+    # MoE expert banks (E, D, F) / (E, F, D): expert-parallel over tp
+    (r"moe/w[123]$", ("ep", None, None)),
+    # attention
+    (r"w[qkv]$", (None, "tp")),
+    (r"wo$", ("tp", None)),
+    # dense mlp
+    (r"mlp/w[13]$", (None, "tp")),
+    (r"mlp/w2$", ("tp", None)),
+    (r"w_ff1$", (None, "tp")),
+    (r"w_ff2$", ("tp", None)),
+    # mamba / mlstm projections
+    (r"w[xz]$", (None, "tp")),
+    (r"w[xz]_up$", (None, "tp")),
+    (r"wbc$", (None, None)),
+    (r"wdt$", (None, None)),
+    (r"out_proj$", ("tp", None)),
+    (r"down_proj$", ("tp", None)),
+    (r"conv_x$", (None, "tp")),
+    (r"conv_x_b$", ("tp",)),
+    (r"conv_w$", (None, "tp")),
+    (r"conv_b$", ("tp",)),
+    # sLSTM recurrent (H, hd, 4hd): shard heads
+    (r"/r$", ("tp", None, None)),
+    (r"w_in$", (None, "tp")),
+    # everything else (norm scales, biases, gates, a_log, ...): replicate
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if isinstance(k, jax.tree_util.DictKey):
+            parts.append(str(k.key))
+        elif isinstance(k, jax.tree_util.SequenceKey):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def _spec_for_leaf(path: str, ndim: int, shape, mesh_axis_sizes) -> P:
+    for pat, rule in _PARAM_RULES:
+        if re.search(pat, path):
+            trailing = list(rule)
+            lead = [None] * (ndim - len(trailing))
+            axes = lead + trailing
+            # drop shardings that do not divide the dim evenly
+            resolved = []
+            for dim, ax in zip(shape, axes):
+                if ax is None:
+                    resolved.append(None)
+                    continue
+                mesh_ax = _RULES.get(ax) if _RULES else None
+                size = _axis_size(mesh_ax, mesh_axis_sizes)
+                resolved.append(mesh_ax if size and dim % size == 0 else None)
+            return P(*resolved)
+    return P(*([None] * ndim))
+
+
+def _axis_size(mesh_ax, sizes) -> int:
+    if mesh_ax is None or sizes is None:
+        return 0
+    if isinstance(mesh_ax, tuple):
+        n = 1
+        for a in mesh_ax:
+            n *= sizes[a]
+        return n
+    return sizes[mesh_ax]
+
+
+def resolve_spec(shape, logical, mesh) -> P:
+    """Resolve logical axes against concrete dims: a sharding that does not
+    divide its dim evenly is shifted right ("tp" only) or dropped.  Used for
+    KV-cache / state trees where the natural shard target (kv-heads) may be
+    smaller than the tensor-parallel degree."""
+    assert _RULES is not None
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    resolved = [None] * len(shape)
+    for i, ax in enumerate(logical):
+        if ax is None:
+            continue
+        mesh_ax = _RULES.get(ax)
+        size = _axis_size(mesh_ax, sizes)
+        if size and shape[i] % size == 0:
+            resolved[i] = mesh_ax
+        elif ax == "tp" and size:
+            for j in range(i + 1, len(shape)):
+                if logical[j] is None and resolved[j] is None and shape[j] % size == 0:
+                    resolved[j] = mesh_ax
+                    break
+    return P(*resolved)
+
+
+class Axes:
+    """Leaf wrapper for logical-axis tuples (tuples are pytree nodes)."""
+
+    def __init__(self, *axes):
+        self.axes = axes
+
+    def __repr__(self):
+        return f"Axes{self.axes}"
+
+
+def resolve_spec_tree(shapes_tree, logical_tree, mesh):
+    """Map ``resolve_spec`` over matching (shape, logical) trees; the logical
+    tree mirrors the shapes tree with ``Axes(...)`` leaves."""
+    s_flat, treedef = jax.tree.flatten(shapes_tree)
+    l_flat = jax.tree.flatten(
+        logical_tree, is_leaf=lambda x: isinstance(x, Axes))[0]
+    assert len(s_flat) == len(l_flat), (len(s_flat), len(l_flat))
+    specs = [resolve_spec(s.shape, l.axes, mesh) for s, l in zip(s_flat, l_flat)]
+    return jax.tree.unflatten(treedef, specs)
+
+
+def zero_specs(pspecs_tree, params_tree, mesh):
+    """ZeRO-style specs: extend each param spec by sharding the first
+    unsharded, divisible dim over the data axes.  Used for optimizer state
+    (ZeRO-1) and gradient reduce-scatter (ZeRO-2): a 67B model's fp32
+    master+m+v would otherwise replicate 12 B/param across the data axis."""
+    assert _RULES is not None
+    dp_ax = _RULES.get("dp")
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp_size = _axis_size(dp_ax, sizes)
+
+    def leaf(spec, arr):
+        shape = arr.shape
+        parts = list(spec) + [None] * (len(shape) - len(spec))
+        if dp_size <= 1:
+            return P(*parts)
+        dp_entry = dp_ax if isinstance(dp_ax, str) else tuple(dp_ax)
+        dp_names = {dp_ax} if isinstance(dp_ax, str) else set(dp_ax)
+
+        def axes_of(p):
+            if p is None:
+                return set()
+            return set(p) if isinstance(p, tuple) else {p}
+
+        if any(axes_of(p) & dp_names for p in parts):  # idempotent
+            return P(*parts)
+        for i, (dim, cur) in enumerate(zip(shape, parts)):
+            if cur is None and dim % dp_size == 0:
+                parts[i] = dp_entry
+                break
+        return P(*parts)
+
+    return jax.tree.map(leaf, pspecs_tree, params_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def param_specs(params_tree, mesh=None):
+    """PartitionSpec tree matching ``params_tree`` (arrays or
+    ShapeDtypeStructs).  Dims that don't divide the mesh axis evenly fall
+    back to replication (logged by the caller)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape)) if mesh is not None else None
+
+    def leaf_spec(path, leaf):
+        shape = np.shape(leaf) if not hasattr(leaf, "shape") else leaf.shape
+        return _spec_for_leaf(_path_str(path), len(shape), shape, sizes)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, params_tree)

@@ -1,0 +1,177 @@
+"""Host-side dynamic similarity graph (paper §3.2, §6.3).
+
+The paper keeps the evolving graph in CPU memory (growable 2-D vectors) and
+ships per-batch subgraphs to the device.  We mirror that: numpy edge arrays
+grow per batch; every batch produces (i) the updated topology, (ii) the
+affected-vertex set, and (iii) the new-vertex subgraph G' used for
+connected-component label initialization (Alg. 2 Step 1).
+
+Vertices carry an embedding; edges of inserted vertices come from kNN against
+the current population (the paper's dataset construction: cosine similarity +
+kNN sparsification, §7.1).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .knn import knn_edges, normalize_rows
+from .structures import CSRGraph, ELLGraph, coo_to_csr, csr_to_ell_fast
+
+UNLABELED = -1
+
+
+@dataclasses.dataclass
+class BatchUpdate:
+    """One Δ_t = {Δ_ins, Δ_del}."""
+
+    ins_emb: np.ndarray  # (M, D) float32 — embeddings of inserted vertices
+    ins_labels: np.ndarray  # (M,) int8 — ground truth 0/1 or UNLABELED
+    del_ids: np.ndarray  # (R,) int64 — global ids to delete
+
+
+@dataclasses.dataclass
+class BatchEffect:
+    """What the batch touched — inputs to DynLP's update."""
+
+    new_ids: np.ndarray  # global ids assigned to inserted vertices
+    affected: np.ndarray  # global ids requiring label updates (V_aff seed)
+    gprime_src: np.ndarray  # COO among new vertices, *local* new-vertex ids
+    gprime_dst: np.ndarray
+    gprime_wgt: np.ndarray
+
+
+class DynamicGraph:
+    """Evolving undirected weighted similarity graph."""
+
+    def __init__(self, emb_dim: int, k: int = 5, knn_block: int = 4096):
+        self.emb_dim = emb_dim
+        self.k = k
+        self.knn_block = knn_block
+        self.emb = np.zeros((0, emb_dim), np.float32)
+        self.labels = np.zeros((0,), np.int8)
+        self.alive = np.zeros((0,), bool)
+        self.f = np.zeros((0,), np.float32)  # current fractional labels
+        # directed edge arrays (both directions stored)
+        self.src = np.zeros((0,), np.int64)
+        self.dst = np.zeros((0,), np.int64)
+        self.wgt = np.zeros((0,), np.float32)
+
+    # ------------------------------------------------------------------ #
+    @property
+    def num_nodes(self) -> int:
+        return len(self.labels)
+
+    @property
+    def num_alive(self) -> int:
+        return int(self.alive.sum())
+
+    @property
+    def num_edges(self) -> int:
+        """Undirected edge count."""
+        return len(self.src) // 2
+
+    def mean_edge_weight(self) -> float:
+        return float(self.wgt.mean()) if len(self.wgt) else 0.0
+
+    # ------------------------------------------------------------------ #
+    def apply_batch(self, batch: BatchUpdate, tau: float | None = None) -> BatchEffect:
+        """Apply Δ_t; returns the affected set and G' (Alg. 2 Step 1)."""
+        affected: list[np.ndarray] = []
+
+        # --- deletions: mark dead, drop incident edges, flag neighbors ---
+        del_ids = np.unique(np.asarray(batch.del_ids, np.int64))
+        del_ids = del_ids[(del_ids >= 0) & (del_ids < self.num_nodes)]
+        del_ids = del_ids[self.alive[del_ids]]
+        if len(del_ids):
+            dead = np.zeros(self.num_nodes, bool)
+            dead[del_ids] = True
+            incident = dead[self.src] | dead[self.dst]
+            affected.append(self.dst[incident & dead[self.src]])  # nbrs of deleted
+            self.src, self.dst, self.wgt = (
+                self.src[~incident],
+                self.dst[~incident],
+                self.wgt[~incident],
+            )
+            self.alive[del_ids] = False
+
+        # --- insertions: assign ids, kNN edges against current population ---
+        m = len(batch.ins_emb)
+        base_id = self.num_nodes
+        new_ids = np.arange(base_id, base_id + m, dtype=np.int64)
+        if m:
+            ins_emb = np.asarray(batch.ins_emb, np.float32)
+            self.emb = np.concatenate([self.emb, ins_emb])
+            self.labels = np.concatenate(
+                [self.labels, np.asarray(batch.ins_labels, np.int8)]
+            )
+            self.alive = np.concatenate([self.alive, np.ones(m, bool)])
+            init_f = np.where(
+                batch.ins_labels == 1, 1.0, np.where(batch.ins_labels == 0, 0.0, 0.5)
+            ).astype(np.float32)
+            self.f = np.concatenate([self.f, init_f])
+
+            # candidate base = alive old vertices + the new batch itself
+            old_alive = np.flatnonzero(self.alive[:base_id])
+            if len(old_alive):
+                base = np.concatenate([self.emb[old_alive], ins_emb])
+                base_map = np.concatenate([old_alive, new_ids])
+            else:
+                base = ins_emb
+                base_map = new_ids
+            s, d, w = knn_edges(
+                ins_emb, k=self.k, block=self.knn_block, base=base,
+                base_offset=0, self_offset=len(base) - m,
+            )
+            # map local base indices to global ids; s is an index into the
+            # query block offset by (len(base)-m) so it already matches base_map
+            gs, gd = base_map[s], base_map[d]
+            # dedupe + symmetrize against the *batch's* new edges only
+            und_src = np.concatenate([gs, gd])
+            und_dst = np.concatenate([gd, gs])
+            und_w = np.concatenate([w, w])
+            key = und_src * np.int64(self.num_nodes) + und_dst
+            _, first = np.unique(key, return_index=True)
+            und_src, und_dst, und_w = und_src[first], und_dst[first], und_w[first]
+            self.src = np.concatenate([self.src, und_src])
+            self.dst = np.concatenate([self.dst, und_dst])
+            self.wgt = np.concatenate([self.wgt, und_w])
+            affected.append(new_ids)
+            affected.append(und_dst)  # neighbors of inserted
+
+            # --- G': edges among new vertices with w > τ (local ids) ---
+            tau = self.mean_edge_weight() if tau is None else tau
+            both_new = (gs >= base_id) & (gd >= base_id) & (w > tau)
+            gp_s = (gs[both_new] - base_id).astype(np.int64)
+            gp_d = (gd[both_new] - base_id).astype(np.int64)
+            gp_w = w[both_new]
+        else:
+            gp_s = gp_d = np.zeros((0,), np.int64)
+            gp_w = np.zeros((0,), np.float32)
+
+        aff = (
+            np.unique(np.concatenate(affected)) if affected else np.zeros(0, np.int64)
+        )
+        aff = aff[self.alive[aff]]
+        return BatchEffect(
+            new_ids=new_ids, affected=aff, gprime_src=gp_s, gprime_dst=gp_d,
+            gprime_wgt=gp_w,
+        )
+
+    # ------------------------------------------------------------------ #
+    def snapshot_csr(self) -> tuple[CSRGraph, np.ndarray]:
+        """CSR over alive vertices (compact ids); returns (csr, global_ids)."""
+        alive_ids = np.flatnonzero(self.alive)
+        remap = np.full(self.num_nodes, -1, np.int64)
+        remap[alive_ids] = np.arange(len(alive_ids))
+        keep = self.alive[self.src] & self.alive[self.dst]
+        csr = coo_to_csr(
+            len(alive_ids), remap[self.src[keep]], remap[self.dst[keep]], self.wgt[keep]
+        )
+        return csr, alive_ids
+
+    def snapshot_ell(self, max_degree: int | None = None) -> tuple[ELLGraph, np.ndarray]:
+        csr, alive_ids = self.snapshot_csr()
+        return csr_to_ell_fast(csr, max_degree=max_degree), alive_ids

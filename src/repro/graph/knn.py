@@ -1,0 +1,88 @@
+"""Similarity-graph construction (paper §7.1 datasets pipeline).
+
+Non-graph data is modeled as a graph: embeddings → pairwise cosine
+similarity → kNN sparsification (k=5 default, following [19] as the paper
+does).  We compute blockwise top-k so construction is O(N²/B) memory and runs
+for hundreds of thousands of points on the host.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .structures import CSRGraph, coo_to_csr
+
+
+def normalize_rows(x: np.ndarray) -> np.ndarray:
+    n = np.linalg.norm(x, axis=1, keepdims=True)
+    return x / np.maximum(n, 1e-12)
+
+
+def knn_edges(
+    emb: np.ndarray,
+    k: int = 5,
+    block: int = 4096,
+    base: np.ndarray | None = None,
+    base_offset: int = 0,
+    self_offset: int = 0,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Top-k cosine neighbors of ``emb`` within ``base`` (defaults to emb).
+
+    Returns COO (src, dst, wgt) with global ids ``src+self_offset`` /
+    ``dst+base_offset``.  Self matches are excluded when the id spaces
+    overlap.  Similarities are shifted into [0, 1]: w = (cos + 1) / 2.
+    """
+    q = normalize_rows(emb.astype(np.float32))
+    b = q if base is None else normalize_rows(base.astype(np.float32))
+    n = len(q)
+    srcs, dsts, ws = [], [], []
+    for lo in range(0, n, block):
+        hi = min(lo + block, n)
+        sim = q[lo:hi] @ b.T  # (blk, M)
+        # mask self-similarity where id spaces overlap
+        for i in range(lo, hi):
+            gi = i + self_offset
+            j = gi - base_offset
+            if 0 <= j < sim.shape[1]:
+                sim[i - lo, j] = -np.inf
+        kk = min(k, sim.shape[1] - 1) if sim.shape[1] > 1 else 1
+        idx = np.argpartition(-sim, kth=kk - 1, axis=1)[:, :kk]
+        rows = np.arange(lo, hi)[:, None]
+        vals = sim[rows - lo, idx]
+        valid = np.isfinite(vals)
+        srcs.append((rows + self_offset).repeat(kk, axis=1)[valid])
+        dsts.append((idx + base_offset)[valid])
+        ws.append(((vals + 1.0) * 0.5)[valid])
+    if not srcs:
+        z = np.zeros(0)
+        return z.astype(np.int64), z.astype(np.int64), z.astype(np.float32)
+    return (
+        np.concatenate(srcs).astype(np.int64),
+        np.concatenate(dsts).astype(np.int64),
+        np.concatenate(ws).astype(np.float32),
+    )
+
+
+def symmetrize(
+    num_nodes: int, src: np.ndarray, dst: np.ndarray, wgt: np.ndarray
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Union of directed kNN edges; duplicate (u,v) keeps the max weight."""
+    u = np.concatenate([src, dst])
+    v = np.concatenate([dst, src])
+    w = np.concatenate([wgt, wgt])
+    key = u * np.int64(num_nodes) + v
+    order = np.argsort(key, kind="stable")
+    key, u, v, w = key[order], u[order], v[order], w[order]
+    first = np.ones(len(key), dtype=bool)
+    first[1:] = key[1:] != key[:-1]
+    # max weight within duplicate group
+    grp = np.cumsum(first) - 1
+    wmax = np.zeros(grp[-1] + 1 if len(grp) else 0, dtype=np.float32)
+    np.maximum.at(wmax, grp, w)
+    return u[first], v[first], wmax
+
+
+def build_knn_graph(emb: np.ndarray, k: int = 5, block: int = 4096) -> CSRGraph:
+    src, dst, wgt = knn_edges(emb, k=k, block=block)
+    s, d, w = symmetrize(len(emb), src, dst, wgt)
+    return coo_to_csr(len(emb), s, d, w)

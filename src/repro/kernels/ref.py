@@ -1,0 +1,53 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose reference)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ell_propagate_ref(nbr, wgt, wl0, wl1, frontier, f, delta=1e-4):
+    """Reference for kernels.ell_propagate.ell_propagate_step."""
+    mask = nbr >= 0
+    idx = jnp.where(mask, nbr, 0)
+    f_v = f[idx]
+    nbr_term = jnp.sum(wgt * jnp.where(mask, f_v - f[:, None], 0.0), axis=1)
+    wall = jnp.sum(wgt, axis=1) + wl0 + wl1
+    delta_f = (0.0 - f) * wl0 + (1.0 - f) * wl1 + nbr_term
+    f_new = f + jnp.where(wall > 0, delta_f / jnp.maximum(wall, 1e-30), 0.0)
+    f_new = jnp.where(frontier, f_new, f)
+    return f_new, jnp.abs(f_new - f) > delta
+
+
+def cc_hook_ref(nbr, par):
+    """Reference for kernels.cc_hook.cc_hook_step: one fused SV hook+jump.
+
+    The jump gathers through the PREVIOUS parent vector (Jacobi-style, as
+    the kernel reads its VMEM-resident input), not through the freshly
+    hooked values — both iterate to the same min-label fixpoint."""
+    mask = nbr >= 0
+    idx = jnp.where(mask, nbr, jnp.arange(nbr.shape[0], dtype=nbr.dtype)[:, None])
+    nbr_par = jnp.where(mask, par[idx], jnp.iinfo(jnp.int32).max)
+    hooked = jnp.minimum(par, jnp.min(nbr_par, axis=1))
+    return par[hooked]
+
+
+def bsr_spmv_ref(blocks, block_cols, x):
+    """Reference for kernels.bsr_spmv.bsr_spmv.
+
+    blocks: (R, J, BS, BS) dense tiles of a block-sparse matrix (row-padded
+    BSR: each block row has J slots; unused slots have block_cols == -1 and
+    zero tiles).  block_cols: (R, J) int32.  x: (R*BS,) wait — x is (C*BS,).
+    Returns y = A @ x with A the (R*BS, C*BS) matrix the blocks describe.
+    """
+    r, j, bs, _ = blocks.shape
+    y = jnp.zeros((r, bs), jnp.float32)
+    for jj in range(j):
+        cols = block_cols[:, jj]
+        valid = cols >= 0
+        xi = x.reshape(-1, bs)[jnp.where(valid, cols, 0)]  # (R, BS)
+        y += jnp.where(valid[:, None],
+                       jnp.einsum("rab,rb->ra", blocks[:, jj].astype(jnp.float32),
+                                  xi.astype(jnp.float32)),
+                       0.0)
+    return y.reshape(r * bs)

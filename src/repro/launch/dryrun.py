@@ -1,0 +1,333 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks device count on first init).
+
+"""Multi-pod dry-run: lower + compile every (architecture × input-shape) cell
+on the single-pod 16×16 mesh and the 2×16×16 multi-pod mesh, recording
+memory_analysis / cost_analysis / the collective schedule for §Roofline.
+
+One JSON per cell under experiments/dryrun/ so reruns are incremental:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-0.6b \
+        --shape train_4k [--multi-pod] [--force]
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.registry import ARCH_IDS, canonical, get_config
+from repro.distribution import partition
+from repro.launch import hlo_analysis
+from repro.launch import mesh as meshlib
+from repro.launch.specs import batch_logical, input_specs
+from repro.models.api import build_model
+from repro.models.common import SHAPES
+from repro.training import optim
+from repro.training.trainer import make_train_step
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "../../../experiments/dryrun")
+
+# long_500k needs sub-quadratic attention / bounded state (DESIGN.md §5).
+LONG_OK = {"xlstm_350m", "zamba2_7b", "h2o_danube_3_4b"}
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s+(.+?)\s+(all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start|-done)?\("
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum result-operand bytes of every collective op in the compiled HLO."""
+    per_op: dict[str, int] = {}
+    counts: dict[str, int] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        result_ty, op = m.group(1), m.group(2)
+        nbytes = 0
+        for dt, dims in _SHAPE_RE.findall(result_ty):
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _DTYPE_BYTES[dt]
+        per_op[op] = per_op.get(op, 0) + nbytes
+        counts[op] = counts.get(op, 0) + 1
+    return {"bytes": per_op, "counts": counts, "total": sum(per_op.values())}
+
+
+def skip_reason(arch: str, shape_name: str) -> str | None:
+    if shape_name == "long_500k" and canonical(arch) not in LONG_OK:
+        return ("pure full attention: 500k-token KV cache / O(S^2) prefill "
+                "exceeds HBM; see DESIGN.md §5")
+    return None
+
+
+def _ns(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool, microbatches: int = 1,
+               overrides: dict | None = None, fsdp: bool | None = None,
+               unroll_micro: bool = False, layout: str = "tp"):
+    """Lower+compile one cell; returns the result record."""
+    cfg = get_config(arch)
+    if overrides:
+        import dataclasses as dc
+        cfg = dc.replace(cfg, **overrides)
+    spec = SHAPES[shape_name]
+    mesh = meshlib.make_production_mesh(multi_pod=multi_pod)
+    # hybrid: storage specs (params/opt/batch) use the standard tp rules;
+    # the manual-dp rules are installed later, just before tracing.
+    spec_layout = "tp" if layout == "hybrid" else layout
+    partition.set_axis_rules(meshlib.axis_rules(multi_pod, layout=spec_layout))
+    partition.set_mesh_sizes(dict(zip(mesh.axis_names, mesh.devices.shape)))
+    model = build_model(cfg)
+    key = jax.random.PRNGKey(0)
+    param_shapes = jax.eval_shape(model.init, key)
+    pspecs = partition.param_specs(param_shapes, mesh)
+    if fsdp is None:  # auto: FSDP when TP-sharded bf16 weights exceed 2 GiB/dev
+        tp = mesh.devices.shape[-1]
+        fsdp = spec.kind == "train" and cfg.num_params() * 2 / tp > 2 * 2**30
+    zspecs = partition.zero_specs(pspecs, param_shapes, mesh)
+    if fsdp:
+        pspecs = zspecs
+    batch = input_specs(cfg, spec)
+    bspecs = partition.resolve_spec_tree(batch, batch_logical(cfg, spec), mesh)
+
+    t0 = time.time()
+    with mesh:
+        if spec.kind == "train":
+            opt_shapes = optim.state_shapes(param_shapes)
+            # ZeRO-1: optimizer state sharded over data axes too; ZeRO-2:
+            # grads constrained to the same specs => reduce-scatter.
+            opt_specs = {"master": zspecs, "m": zspecs, "v": zspecs, "step": P()}
+            if layout == "hybrid":
+                from repro.training.trainer import make_hybrid_train_step
+
+                dp_axes = ("pod", "data") if multi_pod else ("data",)
+                # model traces inside the manual region: "dp" must vanish
+                # from logical constraints there.
+                partition.set_axis_rules(
+                    meshlib.axis_rules(multi_pod, layout="hybrid"))
+                step = make_hybrid_train_step(
+                    model, optim.OptConfig(), mesh, zspecs, bspecs,
+                    microbatches=microbatches, dp_axes=dp_axes, pspecs=pspecs)
+            else:
+                step = make_train_step(model, optim.OptConfig(),
+                                       microbatches=microbatches,
+                                       grad_specs=zspecs,
+                                       unroll_micro=unroll_micro)
+            jitted = jax.jit(
+                step,
+                in_shardings=(_ns(mesh, pspecs), _ns(mesh, opt_specs), _ns(mesh, bspecs)),
+                out_shardings=(_ns(mesh, pspecs), _ns(mesh, opt_specs), None, None),
+                donate_argnums=(0, 1),
+            )
+            lowered = jitted.lower(param_shapes, opt_shapes, batch)
+        elif spec.kind == "prefill":
+            def prefill_step(params, b):
+                logits, cache = model.prefill(params, b)
+                return logits, cache
+
+            jitted = jax.jit(
+                prefill_step,
+                in_shardings=(_ns(mesh, pspecs), _ns(mesh, bspecs)),
+            )
+            lowered = jitted.lower(param_shapes, batch)
+        else:  # decode
+            cache_shapes = model.cache_shape(spec.global_batch, spec.seq_len)
+            cspecs = partition.resolve_spec_tree(
+                cache_shapes, model.cache_logical(), mesh)
+
+            def serve_step(params, cache, b):
+                return model.decode_step(params, cache, b)
+
+            jitted = jax.jit(
+                serve_step,
+                in_shardings=(_ns(mesh, pspecs), _ns(mesh, cspecs), _ns(mesh, bspecs)),
+                out_shardings=(None, _ns(mesh, cspecs)),
+                donate_argnums=(1,),
+            )
+            lowered = jitted.lower(param_shapes, cache_shapes, batch)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo_text = compiled.as_text()
+    coll = collective_bytes(hlo_text)
+    # loop-aware static analysis: cost_analysis counts while bodies ONCE, so
+    # scanned-layer models are undercounted by ~n_layers without this.
+    deep = hlo_analysis.analyze(hlo_text)
+    n_chips = int(np.prod(mesh.devices.shape))
+    record = {
+        "arch": canonical(arch),
+        "shape": shape_name,
+        "mesh": "x".join(map(str, mesh.devices.shape)),
+        "multi_pod": multi_pod,
+        "status": "ok",
+        "seconds_lower": round(t_lower, 1),
+        "seconds_compile": round(t_compile, 1),
+        "num_params": cfg.num_params(),
+        "num_active_params": cfg.num_active_params(),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_estimate_bytes": mem.argument_size_in_bytes
+            + mem.temp_size_in_bytes
+            + mem.output_size_in_bytes
+            - mem.alias_size_in_bytes,
+        },
+        "cost": {
+            "flops": cost.get("flops", 0.0),
+            "bytes_accessed": cost.get("bytes accessed", 0.0),
+        },
+        "hlo": {
+            "flops": deep["flops"],
+            "collective_bytes": deep["collective_bytes"],
+            "collective_total": deep["collective_total"],
+            "while_trip_counts": deep["while_trip_counts"],
+        },
+        "collectives_flat": coll,
+        "n_chips": n_chips,
+        "microbatches": microbatches,
+        "fsdp": bool(fsdp),
+        "layout": layout,
+    }
+    return record
+
+
+def cell_path(arch, shape_name, multi_pod, tag=""):
+    mesh_tag = "2x16x16" if multi_pod else "16x16"
+    suffix = f"_{tag}" if tag else ""
+    return os.path.join(
+        OUT_DIR, f"{canonical(arch)}__{shape_name}__{mesh_tag}{suffix}.json")
+
+
+HBM_BUDGET = 15.2e9  # v5e 16 GB minus runtime reserve
+
+
+def run_one(arch, shape_name, multi_pod, force=False, microbatches=1, tag="",
+            overrides=None, auto_fit=True, fsdp=None, layout="tp"):
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = cell_path(arch, shape_name, multi_pod, tag)
+    if os.path.exists(path) and not force:
+        print(f"[skip] {path} exists")
+        return json.load(open(path))
+    reason = skip_reason(arch, shape_name)
+    if reason:
+        record = {"arch": canonical(arch), "shape": shape_name,
+                  "multi_pod": multi_pod, "status": "skipped", "reason": reason}
+    else:
+        print(f"[run ] {canonical(arch)} × {shape_name} × "
+              f"{'2x16x16' if multi_pod else '16x16'} ...", flush=True)
+        try:
+            attempts = []
+            mb = microbatches
+            record = None
+            while True:
+                try:
+                    record = lower_cell(arch, shape_name, multi_pod,
+                                        microbatches=mb, overrides=overrides,
+                                        fsdp=fsdp, layout=layout)
+                except Exception:
+                    try:  # XLA scan-unstack SPMD bug: retry with static slices
+                        record = lower_cell(arch, shape_name, multi_pod,
+                                            microbatches=mb, overrides=overrides,
+                                            unroll_micro=True, fsdp=fsdp,
+                                            layout=layout)
+                        record["unrolled_micro"] = True
+                    except Exception:
+                        if record is not None:  # keep the last good attempt
+                            record["retry_error"] = traceback.format_exc()[-800:]
+                            break
+                        raise
+                peak = record["memory"]["peak_estimate_bytes"]
+                attempts.append({"microbatches": mb, "peak_bytes": peak})
+                fits = peak <= HBM_BUDGET
+                # microbatch rows must still divide the data axis, or the
+                # per-micro batch replicates (redundant compute per shard)
+                dp = (32 if multi_pod else 16) * (16 if layout == "dp" else 1)
+                gb = SHAPES[shape_name].global_batch
+                can_split = (SHAPES[shape_name].kind == "train" and auto_fit
+                             and gb % (mb * 2) == 0
+                             and (gb // (mb * 2)) % dp == 0)
+                if fits or not can_split:
+                    break
+                mb *= 2
+                print(f"       peak {peak/2**30:.1f}GiB > budget; retry mb={mb}",
+                      flush=True)
+            record["fit_attempts"] = attempts
+            record["fits_hbm"] = attempts[-1]["peak_bytes"] <= HBM_BUDGET
+            print(f"       ok: compile={record['seconds_compile']}s "
+                  f"flops/dev={record['hlo']['flops']:.3e} "
+                  f"coll={record['hlo']['collective_total']:.3e}B "
+                  f"peak_mem={record['memory']['peak_estimate_bytes']/2**30:.2f}GiB",
+                  flush=True)
+        except Exception as e:  # noqa: BLE001 — record the failure, keep going
+            record = {"arch": canonical(arch), "shape": shape_name,
+                      "multi_pod": multi_pod, "status": "failed",
+                      "error": f"{type(e).__name__}: {e}",
+                      "trace": traceback.format_exc()[-2000:]}
+            print(f"       FAILED: {type(e).__name__}: {str(e)[:200]}", flush=True)
+    with open(path, "w") as f:
+        json.dump(record, f, indent=2)
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--layout", default="tp", choices=["tp", "dp", "tp_nosp", "hybrid"])
+    ap.add_argument("--no-auto-fit", action="store_true")
+    ap.add_argument("--fsdp", default="auto", choices=["auto", "on", "off"])
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = [False, True] if (args.all or args.both_meshes) else [args.multi_pod]
+    failures = 0
+    for arch in archs:
+        for shape_name in shapes:
+            for mp in meshes:
+                fsdp = {"auto": None, "on": True, "off": False}[args.fsdp]
+                rec = run_one(arch, shape_name, mp, force=args.force,
+                              microbatches=args.microbatches, tag=args.tag,
+                              fsdp=fsdp, layout=args.layout,
+                              auto_fit=not args.no_auto_fit)
+                failures += rec.get("status") == "failed"
+    print(f"done; {failures} failures")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,233 @@
+"""Static analyzer for compiled HLO text.
+
+``compiled.cost_analysis()`` counts a ``while`` body ONCE regardless of trip
+count, so any scan-over-layers model is undercounted by ~n_layers.  This
+module re-derives the true totals from ``compiled.as_text()``:
+
+  * splits the module into computations,
+  * finds every ``while``, recovers its trip count from the condition's
+    ``compare(iv, constant)``,
+  * counts dot/convolution FLOPs per computation from the inline operand
+    types (optimized HLO carries them),
+  * counts collective bytes (all-gather / all-reduce / reduce-scatter /
+    all-to-all / collective-permute) from result shapes,
+  * propagates both through the call graph (fusions, calls, while bodies ×
+    trip count, conditionals take the max branch).
+
+Numbers are PER DEVICE (SPMD-partitioned module), matching the roofline
+convention compute_term = flops_per_device / peak_per_chip.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY )?%?([\w\.\-]+)(?: \([^)]*\))? \([^)]*\) -> .* \{",)
+
+
+def _shape_elems(dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt in _DTYPE_BYTES:
+            total += _shape_elems(dims) * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CompStats:
+    flops: float = 0.0
+    coll_bytes: dict | None = None
+    calls: list | None = None  # list of (callee, multiplier)
+
+    def __post_init__(self):
+        if self.coll_bytes is None:
+            self.coll_bytes = {}
+        if self.calls is None:
+            self.calls = []
+
+
+def split_computations(text: str) -> dict[str, list[str]]:
+    """computation name -> list of body lines."""
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in text.splitlines():
+        stripped = line.strip()
+        m = re.match(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*(?:\([^{]*\))?\s*->\s*[^{]*\{", stripped)
+        if m and not stripped.startswith("ROOT"):
+            name = m.group(2)
+            if m.group(1):
+                name = "ENTRY"
+            cur = name
+            comps[cur] = []
+        elif stripped == "}":
+            cur = None
+        elif cur is not None:
+            comps[cur].append(stripped)
+    return comps
+
+
+_DOT_RE = re.compile(
+    r"=\s+(\w+)\[([\d,]*)\][^ ]*\s+dot\(([^)]*)\)"
+)
+_DEF_RE = re.compile(r"^(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\([^=]*?\)|\w+\[[\d,]*\])")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_CONV_RE = re.compile(r"=\s+(\w+)\[([\d,]*)\][^ ]*\s+convolution\(")
+_CALL_RE = re.compile(r"(?:calls|to_apply|body)=%?([\w\.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+_CONST_CMP_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _symbol_table(lines: list[str]) -> dict[str, str]:
+    """instruction name -> result type string (optimized HLO omits operand
+    types inline, so dot FLOPs need this lookup)."""
+    table = {}
+    for line in lines:
+        m = _DEF_RE.match(line)
+        if m:
+            table[m.group(1)] = m.group(2)
+    return table
+
+
+def _dot_flops(line: str, table: dict[str, str]) -> float:
+    m = _DOT_RE.search(line)
+    if not m:
+        return 0.0
+    out_elems = _shape_elems(m.group(2))
+    operands = [a.strip().lstrip("%") for a in m.group(3).split(",")]
+    cm = _CONTRACT_RE.search(line)
+    lhs_ty = table.get(operands[0], "") if operands else ""
+    lhs_shapes = _SHAPE_RE.findall(lhs_ty)
+    if cm is None or not lhs_shapes:
+        return 2.0 * out_elems  # degenerate fallback
+    lhs_dims = [int(d) for d in lhs_shapes[0][1].split(",") if d]
+    cdims = [int(d) for d in cm.group(1).split(",") if d]
+    csize = 1
+    for d in cdims:
+        if d < len(lhs_dims):
+            csize *= lhs_dims[d]
+    return 2.0 * out_elems * csize
+
+
+def _conv_flops(line: str, table: dict[str, str]) -> float:
+    m = _CONV_RE.search(line)
+    if not m:
+        return 0.0
+    out_elems = _shape_elems(m.group(2))
+    wm = re.search(r"window=\{size=([\dx]+)", line)
+    ksize = 1
+    if wm:
+        for d in wm.group(1).split("x"):
+            ksize *= int(d)
+    args = line.split("convolution(")[1].split(")")[0]
+    operands = [a.strip().lstrip("%") for a in args.split(",")]
+    feat = 1
+    if len(operands) > 1:
+        rhs_shapes = _SHAPE_RE.findall(table.get(operands[1], ""))
+        if rhs_shapes:
+            dims = [int(d) for d in rhs_shapes[0][1].split(",") if d]
+            if len(dims) >= 2:
+                feat = dims[-2]
+    return 2.0 * out_elems * ksize * feat
+
+
+def analyze(text: str, default_trip: int = 1) -> dict:
+    comps = split_computations(text)
+    stats: dict[str, CompStats] = {}
+    trip_counts: dict[str, int] = {}  # body computation -> trips
+
+    # Pass 1: per-computation local stats + call edges
+    for name, lines in comps.items():
+        st = CompStats()
+        table = _symbol_table(lines)
+        for line in lines:
+            if " dot(" in line:
+                st.flops += _dot_flops(line, table)
+            elif " convolution(" in line:
+                st.flops += _conv_flops(line, table)
+            coll = next((c for c in COLLECTIVES if f" {c}(" in line
+                         or f" {c}-start(" in line), None)
+            if coll:
+                ty = line.split("=", 1)[1].split(coll)[0] if "=" in line else line
+                st.coll_bytes[coll] = st.coll_bytes.get(coll, 0) + _type_bytes(ty)
+            if " while(" in line:
+                body = _CALL_RE.search(line)
+                cond = _COND_RE.search(line)
+                if body:
+                    trips = default_trip
+                    if cond and cond.group(1) in comps:
+                        consts = []
+                        for cl in comps[cond.group(1)]:
+                            if "compare(" in cl:
+                                consts += [int(c) for c in _CONST_CMP_RE.findall(cl)]
+                        # fallback: constants defined in the condition comp
+                        if not consts:
+                            for cl in comps[cond.group(1)]:
+                                consts += [int(c) for c in _CONST_CMP_RE.findall(cl)]
+                        if consts:
+                            trips = max(consts)
+                    st.calls.append((body.group(1), trips))
+                    trip_counts[body.group(1)] = trips
+            elif " fusion(" in line or " call(" in line or "custom-call" in line:
+                cm2 = _CALL_RE.search(line)
+                if cm2:
+                    st.calls.append((cm2.group(1), 1))
+            elif " conditional(" in line:
+                for branch in re.findall(r"%?([\w\.\-]+)", line):
+                    if branch in comps and branch != name:
+                        st.calls.append((branch, 1))
+            elif " map(" in line or " reduce(" in line or " scatter(" in line \
+                    or " sort(" in line or " select-and-scatter(" in line:
+                cm2 = _CALL_RE.search(line)
+                if cm2:
+                    st.calls.append((cm2.group(1), 1))
+        stats[name] = st
+
+    # Pass 2: recursive totals from ENTRY (memoized)
+    memo: dict[str, tuple[float, dict]] = {}
+
+    def total(name: str, seen=()) -> tuple[float, dict]:
+        if name in memo:
+            return memo[name]
+        if name not in stats or name in seen:
+            return 0.0, {}
+        st = stats[name]
+        fl = st.flops
+        cb = dict(st.coll_bytes)
+        for callee, mult in st.calls:
+            cfl, ccb = total(callee, seen + (name,))
+            fl += mult * cfl
+            for k, v in ccb.items():
+                cb[k] = cb.get(k, 0) + mult * v
+        memo[name] = (fl, cb)
+        return memo[name]
+
+    entry = "ENTRY" if "ENTRY" in stats else next(iter(stats), None)
+    flops, coll = total(entry) if entry else (0.0, {})
+    return {
+        "flops": flops,
+        "collective_bytes": coll,
+        "collective_total": float(sum(coll.values())),
+        "num_computations": len(comps),
+        "while_trip_counts": trip_counts,
+    }

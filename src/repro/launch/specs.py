@@ -1,0 +1,94 @@
+"""Input specs per (architecture × shape): ShapeDtypeStruct stand-ins for the
+dry-run (no allocation) and real random batches for smoke tests.
+
+Layouts (DESIGN.md §5):
+  decoder-only train : tokens (B,S) + labels (B,S)
+  vlm                : vis_embeds (B,S/4,fd) + tokens (B,3S/4) + pos3 (3,B,S)
+  audio (enc-dec)    : frames (B,S,fd) + tokens/labels (B,S/8)
+  decode             : tokens (B,1) + pos () against a (B, S)-sized cache
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import ArchConfig, ShapeSpec
+
+I32 = jnp.int32
+BF16 = jnp.bfloat16
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def vlm_split(s: int) -> tuple[int, int]:
+    s_vis = s // 4
+    return s_vis, s - s_vis
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> dict:
+    """ShapeDtypeStruct batch for ``jax.jit(...).lower(**specs)``."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind in ("train", "prefill"):
+        batch = {}
+        if cfg.family == "vlm":
+            s_vis, s_text = vlm_split(s)
+            batch["vis_embeds"] = _sds((b, s_vis, cfg.frontend_dim), BF16)
+            batch["tokens"] = _sds((b, s_text), I32)
+            batch["pos3"] = _sds((3, b, s), I32)
+            if shape.kind == "train":
+                batch["labels"] = _sds((b, s_text), I32)
+        elif cfg.enc_dec:
+            s_dec = max(1, s // 8)
+            batch["frames"] = _sds((b, s, cfg.frontend_dim), BF16)
+            if shape.kind == "train":
+                batch["tokens"] = _sds((b, s_dec), I32)
+                batch["labels"] = _sds((b, s_dec), I32)
+        else:
+            batch["tokens"] = _sds((b, s), I32)
+            if shape.kind == "train":
+                batch["labels"] = _sds((b, s), I32)
+        return batch
+    # decode: one new token against an s-long cache
+    batch = {"tokens": _sds((b, 1), I32), "pos": _sds((), I32)}
+    if cfg.family == "vlm":
+        batch["pos3"] = _sds((3, b, 1), I32)
+    return batch
+
+
+def batch_logical(cfg: ArchConfig, shape: ShapeSpec) -> dict:
+    """Logical-axis tree matching ``input_specs`` (for resolve_spec_tree)."""
+    from repro.distribution.partition import Axes
+
+    specs = input_specs(cfg, shape)
+    out = {}
+    for k, sds in specs.items():
+        if k == "pos":
+            out[k] = Axes()
+        elif k == "pos3":
+            out[k] = Axes(None, "dp", None)
+        elif sds.ndim == 3:  # vis_embeds / frames
+            out[k] = Axes("dp", None, None)
+        else:  # tokens / labels
+            out[k] = Axes(*(["dp"] + [None] * (sds.ndim - 1)))
+    return out
+
+
+def make_batch(cfg: ArchConfig, shape: ShapeSpec, seed: int = 0) -> dict:
+    """Concrete random batch matching ``input_specs`` (smoke tests, examples)."""
+    rng = np.random.default_rng(seed)
+    specs = input_specs(cfg, shape)
+    out = {}
+    for k, sds in specs.items():
+        if sds.dtype == I32:
+            hi = cfg.vocab if k in ("tokens", "labels") else max(shape.seq_len, 2)
+            arr = rng.integers(0, hi, size=sds.shape or ())
+            out[k] = jnp.asarray(arr, I32)
+        else:
+            out[k] = jnp.asarray(rng.normal(0, 1, sds.shape), BF16)
+    if "pos" in out:
+        out["pos"] = jnp.asarray(min(shape.seq_len - 1, 7), I32)
+    return out

@@ -1,0 +1,18 @@
+"""Model factory: ``build_model(cfg)`` dispatches on family."""
+
+from __future__ import annotations
+
+from repro.models.common import ArchConfig
+from repro.models.encdec import EncDecModel
+from repro.models.recurrent import XLSTMModel, ZambaModel
+from repro.models.transformer import TransformerLM
+
+
+def build_model(cfg: ArchConfig):
+    if cfg.enc_dec:
+        return EncDecModel(cfg)
+    if cfg.family == "ssm" and cfg.xlstm is not None:
+        return XLSTMModel(cfg)
+    if cfg.family == "hybrid":
+        return ZambaModel(cfg)
+    return TransformerLM(cfg)

@@ -1,0 +1,515 @@
+"""Layer blocks: GQA attention, dense MLP, MoE, Mamba2, mLSTM, sLSTM.
+
+Every block is a pair of pure functions ``<block>_init(key, cfg) -> params``
+and ``<block>_apply(params, x, ...) -> y`` (+ decode variants threading
+explicit state).  Params are dicts of arrays so stacks of layers vmap/scan
+cleanly.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (
+    ArchConfig,
+    attention,
+    dense_init,
+    gelu_mlp,
+    mrope,
+    rms_norm,
+    rope,
+    split_keys,
+    swiglu,
+)
+from repro.models.ssd import (
+    mlstm_chunked,
+    mlstm_decode_step,
+    ssd_chunked,
+    ssd_decode_step,
+)
+
+
+# --------------------------------------------------------------------- #
+# Attention
+# --------------------------------------------------------------------- #
+def attn_init(key, cfg: ArchConfig, bias: bool = False) -> dict:
+    d, h, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = split_keys(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, h * hd)),
+        "wk": dense_init(ks[1], (d, hkv * hd)),
+        "wv": dense_init(ks[2], (d, hkv * hd)),
+        "wo": dense_init(ks[3], (h * hd, d), scale=1.0 / math.sqrt(h * hd)),
+    }
+    if bias:
+        p["bq"] = jnp.zeros((h * hd,), jnp.bfloat16)
+        p["bk"] = jnp.zeros((hkv * hd,), jnp.bfloat16)
+        p["bv"] = jnp.zeros((hkv * hd,), jnp.bfloat16)
+        p["bo"] = jnp.zeros((d,), jnp.bfloat16)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), jnp.bfloat16)
+        p["k_norm"] = jnp.ones((hd,), jnp.bfloat16)
+    return p
+
+
+def _project_qkv(p, x, cfg: ArchConfig):
+    b, s, _ = x.shape
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = (x @ p["wq"] + p.get("bq", 0)).reshape(b, s, h, hd)
+    k = (x @ p["wk"] + p.get("bk", 0)).reshape(b, s, hkv, hd)
+    v = (x @ p["wv"] + p.get("bv", 0)).reshape(b, s, hkv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+def _apply_rope(q, k, cfg: ArchConfig, positions, pos3=None):
+    if cfg.mrope and pos3 is not None:
+        return mrope(q, pos3, cfg.rope_theta), mrope(k, pos3, cfg.rope_theta)
+    if positions is None:
+        return q, k
+    return rope(q, positions, cfg.rope_theta), rope(k, positions, cfg.rope_theta)
+
+
+def attn_apply(p, x, cfg: ArchConfig, *, positions=None, pos3=None, causal=True):
+    """Full-sequence attention (train / prefill).  Returns (y, (k, v))."""
+    q, k, v = _project_qkv(p, x, cfg)
+    q, k = _apply_rope(q, k, cfg, positions, pos3)
+    y = attention(
+        q, k, v, causal=causal, window=cfg.sliding_window,
+        impl=cfg.attn_impl, q_chunk=cfg.q_chunk, k_chunk=cfg.k_chunk,
+    )
+    b, s, _, _ = y.shape
+    out = y.reshape(b, s, cfg.n_heads * cfg.hd) @ p["wo"] + p.get("bo", 0)
+    return out, (k, v)
+
+
+def attn_decode(p, x, cfg: ArchConfig, cache, pos, *, pos3=None):
+    """One-token decode against a KV cache.
+
+    cache: dict(k=(B, S, Hkv, hd), v=...); ``pos`` is the write index —
+    scalar int32 (uniform decode wave; the dry-run's serve_step) OR an (B,)
+    vector (continuous batching: every slot at its own position).  Sliding
+    -window layers treat the cache as a ring buffer of size ``window``.
+    Returns (y (B,1,D), new_cache).
+    """
+    b = x.shape[0]
+    q, k, v = _project_qkv(p, x, cfg)  # s == 1
+    pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    q, k = _apply_rope(q, k, cfg, pos_b[:, None], pos3)
+    s_max = cache["k"].shape[1]
+    write = pos_b % s_max if cfg.sliding_window else pos_b
+    rows = jnp.arange(b)
+    ck = cache["k"].at[rows, write].set(k[:, 0].astype(cache["k"].dtype))
+    cv = cache["v"].at[rows, write].set(v[:, 0].astype(cache["v"].dtype))
+    # mask out slots beyond each row's position
+    kpos = jnp.arange(s_max)
+    if cfg.sliding_window:
+        valid = (kpos[None, :] <= write[:, None]) | (pos_b >= s_max)[:, None]
+    else:
+        valid = kpos[None, :] <= pos_b[:, None]
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    g = h // hkv
+    qg = q.reshape(b, hkv, g, hd)
+    scores = jnp.einsum("bhgd,bkhd->bhgk", qg, ck, preferred_element_type=jnp.float32)
+    scores *= 1.0 / math.sqrt(hd)
+    scores = jnp.where(valid[:, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    y = jnp.einsum("bhgk,bkhd->bhgd", probs.astype(cv.dtype), cv)
+    out = y.reshape(b, 1, h * hd) @ p["wo"] + p.get("bo", 0)
+    return out, {"k": ck, "v": cv}
+
+
+def cross_attn_apply(p, x, cfg: ArchConfig, memory_kv):
+    """Cross attention for enc-dec decode/train; memory_kv = (k, v) of the
+    encoder output, precomputed per layer."""
+    b, s, _ = x.shape
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = (x @ p["wq"] + p.get("bq", 0)).reshape(b, s, h, hd)
+    k, v = memory_kv
+    y = attention(q, k, v, causal=False, impl=cfg.attn_impl,
+                  q_chunk=cfg.q_chunk, k_chunk=cfg.k_chunk)
+    return y.reshape(b, s, h * hd) @ p["wo"] + p.get("bo", 0)
+
+
+def memory_kv_init(p, memory, cfg: ArchConfig):
+    """Project encoder output into (k, v) once per layer."""
+    b, s, _ = memory.shape
+    hkv, hd = cfg.n_kv_heads, cfg.hd
+    k = (memory @ p["wk"] + p.get("bk", 0)).reshape(b, s, hkv, hd)
+    v = (memory @ p["wv"] + p.get("bv", 0)).reshape(b, s, hkv, hd)
+    return k, v
+
+
+# --------------------------------------------------------------------- #
+# Dense MLP (SwiGLU / GELU)
+# --------------------------------------------------------------------- #
+def mlp_init(key, cfg: ArchConfig, gelu: bool = False) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = split_keys(key, 3)
+    if gelu:
+        return {
+            "w1": dense_init(ks[0], (d, f)),
+            "b1": jnp.zeros((f,), jnp.bfloat16),
+            "w2": dense_init(ks[1], (f, d)),
+            "b2": jnp.zeros((d,), jnp.bfloat16),
+        }
+    return {
+        "w1": dense_init(ks[0], (d, f)),
+        "w3": dense_init(ks[1], (d, f)),
+        "w2": dense_init(ks[2], (f, d)),
+    }
+
+
+def mlp_apply(p, x):
+    if "w3" in p:
+        return swiglu(x, p["w1"], p["w3"], p["w2"])
+    return gelu_mlp(x, p["w1"], p["b1"], p["w2"], p["b2"])
+
+
+# --------------------------------------------------------------------- #
+# Mixture of Experts (token-choice top-k, scatter dispatch)
+# --------------------------------------------------------------------- #
+def moe_init(key, cfg: ArchConfig) -> dict:
+    assert cfg.moe is not None
+    d, e, f = cfg.d_model, cfg.moe.num_experts, cfg.moe.d_expert
+    ks = split_keys(key, 4)
+    return {
+        "router": dense_init(ks[0], (d, e), dtype=jnp.float32),
+        "w1": dense_init(ks[1], (e, d, f)),
+        "w3": dense_init(ks[2], (e, d, f)),
+        "w2": dense_init(ks[3], (e, f, d)),
+    }
+
+
+def moe_apply(p, x, cfg: ArchConfig):
+    """Scatter-based dispatch with ROW-LOCAL capacity: each sequence (batch
+    row) dispatches its own tokens into per-expert buffers, so the position
+    cumsum never crosses the data-parallel shard boundary (a global-token
+    cumsum would serialize the mesh).  Capacity-dropped tokens fall through
+    via the residual.  Decode (S==1) regroups the batch into one row."""
+    assert cfg.moe is not None
+    b, s, d = x.shape
+    e, k = cfg.moe.num_experts, cfg.moe.top_k
+    if s == 1:  # decode: one group of B tokens (tiny cumsum)
+        y, aux = _moe_grouped(p, x.reshape(1, b, d), cfg)
+        return y.reshape(b, s, d), aux
+    return _moe_grouped(p, x, cfg)
+
+
+def _moe_grouped(p, x, cfg: ArchConfig):
+    g, t, d = x.shape  # groups × tokens-per-group × dim
+    e, k = cfg.moe.num_experts, cfg.moe.top_k
+    cap = min(t, max(4, int(cfg.moe.capacity_factor * t * k / e)))
+
+    logits = x.astype(jnp.float32) @ p["router"]  # (G, T, E)
+    gates = jax.nn.softmax(logits, axis=-1)
+    topw, topi = jax.lax.top_k(gates, k)  # (G, T, k)
+    topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
+
+    def dispatch_row(topi_r, topw_r):
+        """Index-only dispatch: scatter TOKEN IDS, never the 8×-expanded
+        hidden states (the data-scatter version kept a (T·k, D) buffer + its
+        gradient live — gigabytes per layer)."""
+        flat_e = topi_r.reshape(-1)  # (T*k,)
+        oh = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)
+        pos = jnp.cumsum(oh, axis=0) - oh
+        my_pos = jnp.sum(pos * oh, axis=-1)
+        keep = my_pos < cap
+        idx_e = jnp.where(keep, flat_e, 0)
+        idx_c = jnp.where(keep, my_pos, 0)
+        tok = jnp.where(keep, jnp.arange(t * k, dtype=jnp.int32) // k, -1)
+        buf_idx = jnp.full((e, cap), -1, jnp.int32)
+        buf_idx = buf_idx.at[idx_e, idx_c].max(tok)  # slots unique; -1 = empty
+        flat_w = (topw_r.reshape(-1) * keep).astype(jnp.float32)
+        return buf_idx, idx_e, idx_c, flat_w
+
+    buf_idx, idx_e, idx_c, flat_w = jax.vmap(dispatch_row)(topi, topw)
+
+    def gather_row(xr, buf_idx_r):
+        mask = (buf_idx_r >= 0)[..., None].astype(xr.dtype)
+        return xr[jnp.clip(buf_idx_r, 0)] * mask  # (E, C, D)
+
+    from repro.distribution.partition import shard
+
+    xe = shard(jax.vmap(gather_row)(x, buf_idx), "dp", "ep", None, None)
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, p["w1"])) * jnp.einsum(
+        "gecd,edf->gecf", xe, p["w3"]
+    )
+    ye = shard(jnp.einsum("gecf,efd->gecd", h, p["w2"]), "dp", "ep", None, None)
+
+    def combine_row(ye_r, idx_e_r, idx_c_r, flat_w_r):
+        # per-choice gathers: peak (T, D) instead of (T·k, D)
+        idx_e2 = idx_e_r.reshape(t, k)
+        idx_c2 = idx_c_r.reshape(t, k)
+        w2 = flat_w_r.reshape(t, k)
+        y = jnp.zeros((t, ye_r.shape[-1]), jnp.float32)
+        for j in range(k):
+            y += ye_r[idx_e2[:, j], idx_c2[:, j]].astype(jnp.float32) * w2[:, j:j + 1]
+        return y.astype(ye_r.dtype)
+
+    y = jax.vmap(combine_row)(ye, idx_e, idx_c, flat_w)
+    # auxiliary load-balance loss (Switch-style)
+    me = jnp.mean(gates, axis=(0, 1))
+    ce = jnp.mean(jax.nn.one_hot(topi[..., 0], e, dtype=jnp.float32), axis=(0, 1))
+    aux = e * jnp.sum(me * ce)
+    return y, aux
+
+
+# --------------------------------------------------------------------- #
+# Mamba2
+# --------------------------------------------------------------------- #
+def _mamba_dims(cfg: ArchConfig):
+    ssm = cfg.ssm
+    d_in = ssm.expand * cfg.d_model
+    n_heads = d_in // ssm.head_dim
+    return d_in, n_heads, ssm.d_state, ssm.head_dim, ssm.conv_width
+
+
+def mamba_init(key, cfg: ArchConfig) -> dict:
+    """Projections are separate leaves (z / x / BC / dt) so tensor-parallel
+    sharding rules apply per-leaf; the depthwise conv splits likewise."""
+    d = cfg.d_model
+    d_in, h, n, p_, cw = _mamba_dims(cfg)
+    ks = split_keys(key, 6)
+    return {
+        "wz": dense_init(ks[0], (d, d_in)),
+        "wx": dense_init(ks[1], (d, d_in)),
+        "wbc": dense_init(ks[2], (d, 2 * n)),
+        "wdt": dense_init(ks[3], (d, h)),
+        "conv_x": dense_init(ks[4], (cw, d_in), scale=1.0 / math.sqrt(cw)),
+        "conv_x_b": jnp.zeros((d_in,), jnp.bfloat16),
+        "conv_bc": dense_init(ks[5], (cw, 2 * n), scale=1.0 / math.sqrt(cw)),
+        "conv_bc_b": jnp.zeros((2 * n,), jnp.bfloat16),
+        "a_log": jnp.zeros((h,), jnp.float32),  # A = -exp(a_log) = -1
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm": jnp.ones((d_in,), jnp.bfloat16),
+        "out_proj": dense_init(jax.random.fold_in(ks[0], 7), (d_in, d)),
+    }
+
+
+def _causal_conv(x, w, b, hist=None):
+    """Depthwise causal conv; x (B,S,C), w (W,C); ``hist`` (B,W-1,C) carries
+    the previous tokens' tail across prefill/decode boundaries (zeros when
+    None).  Returns (y (B,S,C), new_tail (B,W-1,C))."""
+    wsz = w.shape[0]
+    s = x.shape[1]
+    if hist is None:
+        ext = jnp.pad(x, ((0, 0), (wsz - 1, 0), (0, 0)))
+    else:
+        ext = jnp.concatenate([hist.astype(x.dtype), x], axis=1)
+    out = sum(ext[:, i : i + s, :] * w[i][None, None, :] for i in range(wsz))
+    return out + b, ext[:, -(wsz - 1) :, :]
+
+
+def mamba_apply(p, u, cfg: ArchConfig, state=None):
+    """Full-sequence Mamba2; returns (y, (conv_tail_x, conv_tail_bc, ssm))."""
+    b, s, d = u.shape
+    d_in, h, n, p_, cw = _mamba_dims(cfg)
+    z = u @ p["wz"]
+    x_raw = u @ p["wx"]
+    bc_raw = u @ p["wbc"]
+    dt = u @ p["wdt"]
+    hx = None if state is None else state[0]
+    hbc = None if state is None else state[1]
+    x_c, tail_x = _causal_conv(x_raw, p["conv_x"], p["conv_x_b"], hist=hx)
+    bc_c, tail_bc = _causal_conv(bc_raw, p["conv_bc"], p["conv_bc_b"], hist=hbc)
+    x = jax.nn.silu(x_c)
+    bc = jax.nn.silu(bc_c)
+    bmat, cmat = bc[..., :n], bc[..., n:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    la = -jnp.exp(p["a_log"]) * dt  # (B,S,H) log decay
+    v = (x.reshape(b, s, h, p_).astype(jnp.float32) * dt[..., None]).astype(u.dtype)
+    s0 = None if state is None else state[2]
+    y, s_final = ssd_chunked(la, cmat, bmat, v, s0=s0, chunk=cfg.ssm.chunk)
+    y = y + p["d_skip"][None, None, :, None] * x.reshape(b, s, h, p_)
+    y = y.reshape(b, s, d_in)
+    y = rms_norm(y, p["norm"], cfg.norm_eps) * jax.nn.silu(z)
+    out = (y @ p["out_proj"]).astype(u.dtype)
+    return out, (tail_x.astype(jnp.bfloat16), tail_bc.astype(jnp.bfloat16), s_final)
+
+
+def mamba_decode(p, u, cfg: ArchConfig, state):
+    """Single-token decode; state = (tail_x, tail_bc, ssm (B,H,N,P))."""
+    b = u.shape[0]
+    d_in, h, n, p_, cw = _mamba_dims(cfg)
+    tail_x, tail_bc, ssm = state
+    z = u @ p["wz"]
+    x_raw = u @ p["wx"]
+    bc_raw = u @ p["wbc"]
+    dt = u @ p["wdt"]
+    win_x = jnp.concatenate([tail_x.astype(x_raw.dtype), x_raw], axis=1)  # (B,cw,C)
+    win_bc = jnp.concatenate([tail_bc.astype(bc_raw.dtype), bc_raw], axis=1)
+    x = jax.nn.silu(jnp.einsum("bwc,wc->bc", win_x, p["conv_x"]) + p["conv_x_b"])
+    bc = jax.nn.silu(jnp.einsum("bwc,wc->bc", win_bc, p["conv_bc"]) + p["conv_bc_b"])
+    bmat, cmat = bc[..., :n], bc[..., n:]
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    la = -jnp.exp(p["a_log"]) * dt
+    v = (x.reshape(b, h, p_).astype(jnp.float32) * dt[..., None]).astype(u.dtype)
+    y, ssm_new = ssd_decode_step(la, cmat, bmat, v, ssm)
+    y = y + p["d_skip"][None, :, None] * x.reshape(b, h, p_)
+    y = y.reshape(b, 1, d_in)
+    y = rms_norm(y, p["norm"], cfg.norm_eps) * jax.nn.silu(z)
+    out = (y @ p["out_proj"]).astype(u.dtype)
+    return out, (
+        win_x[:, 1:].astype(jnp.bfloat16),
+        win_bc[:, 1:].astype(jnp.bfloat16),
+        ssm_new,
+    )
+
+
+# --------------------------------------------------------------------- #
+# mLSTM (xLSTM)
+# --------------------------------------------------------------------- #
+def _mlstm_dims(cfg: ArchConfig):
+    d_in = int(cfg.d_model * cfg.xlstm.proj_factor)
+    h = cfg.n_heads
+    hd = d_in // h
+    return d_in, h, hd, cfg.xlstm.conv_width
+
+
+def mlstm_init(key, cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    d_in, h, hd, cw = _mlstm_dims(cfg)
+    ks = split_keys(key, 8)
+    return {
+        "wx_up": dense_init(ks[0], (d, d_in)),
+        "wz_up": dense_init(ks[7], (d, d_in)),
+        "conv_w": dense_init(ks[1], (cw, d_in), scale=1.0 / math.sqrt(cw)),
+        "conv_b": jnp.zeros((d_in,), jnp.bfloat16),
+        "wq": dense_init(ks[2], (d_in, d_in)),
+        "wk": dense_init(ks[3], (d_in, d_in)),
+        "wv": dense_init(ks[4], (d_in, d_in)),
+        "wif": dense_init(ks[5], (d_in, 2 * h), dtype=jnp.float32),
+        "b_if": jnp.concatenate(
+            [jnp.zeros((h,), jnp.float32), jnp.full((h,), 3.0, jnp.float32)]
+        ),
+        "norm": jnp.ones((d_in,), jnp.bfloat16),
+        "down_proj": dense_init(ks[6], (d_in, d)),
+    }
+
+
+def _mlstm_gates(p, xc, b, s, h):
+    gif = xc.astype(jnp.float32) @ p["wif"] + p["b_if"]
+    li = gif[..., :h]
+    lf = jax.nn.log_sigmoid(gif[..., h:])
+    return li.reshape(b, s, h), lf.reshape(b, s, h)
+
+
+def mlstm_apply(p, u, cfg: ArchConfig, state=None):
+    b, s, d = u.shape
+    d_in, h, hd, cw = _mlstm_dims(cfg)
+    x_in = u @ p["wx_up"]
+    z = u @ p["wz_up"]
+    conv_out, conv_tail = _causal_conv(
+        x_in, p["conv_w"], p["conv_b"], hist=None if state is None else state[0]
+    )
+    xc = jax.nn.silu(conv_out)
+    q = (xc @ p["wq"]).reshape(b, s, h, hd)
+    k = (xc @ p["wk"]).reshape(b, s, h, hd)
+    v = (x_in @ p["wv"]).reshape(b, s, h, hd)
+    li, lf = _mlstm_gates(p, xc, b, s, h)
+    mstate = state[1] if state is not None else None
+    y, mstate_new = mlstm_chunked(lf, li, q, k, v, state=mstate, chunk=cfg.xlstm.chunk)
+    y = y.reshape(b, s, d_in)
+    y = rms_norm(y, p["norm"], cfg.norm_eps) * jax.nn.silu(z)
+    out = (y @ p["down_proj"]).astype(u.dtype)
+    return out, (conv_tail.astype(jnp.bfloat16), mstate_new)
+
+
+def mlstm_decode(p, u, cfg: ArchConfig, state):
+    b = u.shape[0]
+    d_in, h, hd, cw = _mlstm_dims(cfg)
+    conv_tail, mstate = state
+    x_in = u @ p["wx_up"]
+    z = u @ p["wz_up"]
+    window = jnp.concatenate([conv_tail.astype(x_in.dtype), x_in], axis=1)  # (B,cw,C)
+    xc = jax.nn.silu(jnp.einsum("bwc,wc->bc", window, p["conv_w"]) + p["conv_b"])
+    q = (xc @ p["wq"]).reshape(b, h, hd)
+    k = (xc @ p["wk"]).reshape(b, h, hd)
+    v = (x_in[:, 0] @ p["wv"]).reshape(b, h, hd)
+    li, lf = _mlstm_gates(p, xc[:, None, :], b, 1, h)
+    y, mstate_new = mlstm_decode_step(lf[:, 0], li[:, 0], q, k, v, mstate)
+    y = y.reshape(b, 1, d_in)
+    y = rms_norm(y, p["norm"], cfg.norm_eps) * jax.nn.silu(z)
+    out = (y @ p["down_proj"]).astype(u.dtype)
+    return out, (window[:, 1:].astype(jnp.bfloat16), mstate_new)
+
+
+# --------------------------------------------------------------------- #
+# sLSTM (xLSTM) — inherently sequential scalar-memory LSTM
+# --------------------------------------------------------------------- #
+def slstm_init(key, cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    h = cfg.n_heads
+    hd = d // h
+    ks = split_keys(key, 3)
+    return {
+        "w_in": dense_init(ks[0], (d, 4 * d)),
+        "r": dense_init(ks[1], (h, hd, 4 * hd), scale=1.0 / math.sqrt(hd)),
+        "b": jnp.zeros((4 * d,), jnp.float32),
+        "norm": jnp.ones((d,), jnp.bfloat16),
+        "w_ff1": dense_init(ks[2], (d, int(d * 4 / 3))),
+        "w_ff2": dense_init(jax.random.fold_in(ks[2], 1), (int(d * 4 / 3), d)),
+    }
+
+
+def _slstm_cell(p, wx_t, state, h_, hd):
+    """wx_t: (B, 4D) pre-computed input projection at step t."""
+    hprev, c, n, m = state  # each (B, H, hd) except m (B, H)
+    rec = jnp.einsum("bhd,hdk->bhk", hprev.astype(jnp.float32), p["r"].astype(jnp.float32))
+    gates = wx_t.astype(jnp.float32).reshape(-1, h_, 4 * hd) + rec  # (B,H,4hd)
+    zi, ii, fi, oi = jnp.split(gates, 4, axis=-1)
+    # per-head scalar gates (mean over head dim keeps shapes (B,H,1))
+    it = ii.mean(-1)
+    ft = fi.mean(-1)
+    m_new = jnp.maximum(ft + m, it)
+    i_g = jnp.exp(it - m_new)[..., None]
+    f_g = jnp.exp(ft + m - m_new)[..., None]
+    c_new = f_g * c + i_g * jnp.tanh(zi)
+    n_new = f_g * n + i_g
+    h_new = jax.nn.sigmoid(oi) * c_new / jnp.maximum(n_new, 1e-6)
+    return (h_new, c_new, n_new, m_new)
+
+
+def slstm_apply(p, u, cfg: ArchConfig, state=None, time_chunk: int = 64):
+    b, s, d = u.shape
+    h_ = cfg.n_heads
+    hd = d // h_
+    wx = u @ p["w_in"] + p["b"].astype(u.dtype)  # (B,S,4D)
+    if state is None:
+        z = jnp.zeros((b, h_, hd), jnp.float32)
+        state = (z, z, z, jnp.full((b, h_), -1e30, jnp.float32))
+
+    def step(carry, wx_t):
+        new = _slstm_cell(p, wx_t, carry, h_, hd)
+        return new, new[0]
+
+    if s % time_chunk == 0 and s > time_chunk:
+        # remat per time-chunk: without this the scan saves 4 recurrent
+        # states per step for the backward pass (gigabytes at S=4096).
+        wxc = jnp.moveaxis(
+            wx.reshape(b, s // time_chunk, time_chunk, 4 * d), 1, 0)
+
+        @jax.checkpoint
+        def chunk_fn(carry, wx_blk):  # wx_blk: (B, C, 4D)
+            return jax.lax.scan(step, carry, jnp.moveaxis(wx_blk, 1, 0))
+
+        state, hs = jax.lax.scan(chunk_fn, state, wxc)  # hs (nc, C, B, H, hd)
+        hs = hs.reshape(s, b, h_, hd)
+    else:
+        state, hs = jax.lax.scan(step, state, jnp.moveaxis(wx, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).reshape(b, s, d).astype(u.dtype)
+    y = rms_norm(y, p["norm"], cfg.norm_eps)
+    y = (jax.nn.gelu(y @ p["w_ff1"]) @ p["w_ff2"]).astype(u.dtype)
+    return y, state
+
+
+def slstm_decode(p, u, cfg: ArchConfig, state):
+    y, new_state = slstm_apply(p, u, cfg, state=state)
+    return y, new_state

@@ -1,0 +1,394 @@
+"""Shared model components: configs, norms, rotary embeddings, MLPs,
+memory-efficient attention.
+
+Everything is functional: params are plain dict pytrees, layers are pure
+functions.  bf16 weights / bf16 activations with fp32 softmax, norms and
+accumulations.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+# --------------------------------------------------------------------- #
+# Configs
+# --------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class MoECfg:
+    num_experts: int
+    top_k: int
+    d_expert: int  # per-expert FFN hidden size
+    capacity_factor: float = 1.25
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMCfg:
+    d_state: int = 64
+    head_dim: int = 64
+    expand: int = 2
+    chunk: int = 256
+    conv_width: int = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class XLSTMCfg:
+    slstm_every: int = 8  # one sLSTM per this many layers (7:1 mLSTM ratio)
+    proj_factor: float = 2.0
+    conv_width: int = 4
+    chunk: int = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int | None = None  # defaults to d_model // n_heads
+    qk_norm: bool = False
+    sliding_window: int | None = None
+    rope_theta: float = 10_000.0
+    moe: MoECfg | None = None
+    ssm: SSMCfg | None = None
+    xlstm: XLSTMCfg | None = None
+    mrope: bool = False  # multimodal 3-axis rotary (qwen2-vl)
+    enc_dec: bool = False  # whisper-style encoder-decoder
+    n_enc_layers: int = 0
+    frontend: str | None = None  # "vision_stub" | "audio_stub"
+    frontend_dim: int = 1280  # stub patch/frame feature size
+    attn_every: int = 0  # hybrid: one shared attn block per N ssm layers
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    # --- performance knobs (hillclimbed; see EXPERIMENTS.md §Perf) ---
+    q_chunk: int = 1024
+    k_chunk: int = 2048
+    attn_impl: str = "auto"  # auto | dense | chunked
+    remat: str = "full"  # full | none
+    seq_shard_activations: bool = True
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    def num_params(self) -> int:
+        """Total parameter count N (for MODEL_FLOPS = 6·N·D accounting)."""
+        d, v = self.d_model, self.vocab
+        n = v * d  # embed
+        if not self.tie_embeddings:
+            n += d * v  # lm_head
+        per_layer = self._params_per_layer()
+        n += self.n_layers * per_layer["default"]
+        n += per_layer.get("extra", 0)
+        if self.enc_dec:
+            n += self.n_enc_layers * per_layer["encoder"]
+        if self.frontend:
+            n += self.frontend_dim * d  # stub projection
+        return n
+
+    def num_active_params(self) -> int:
+        """Active parameters per token (MoE: only top-k experts count)."""
+        if self.moe is None:
+            return self.num_params()
+        d, v = self.d_model, self.vocab
+        n = v * d + (0 if self.tie_embeddings else d * v)
+        attn = self._attn_params()
+        expert = 3 * d * self.moe.d_expert
+        router = d * self.moe.num_experts
+        n += self.n_layers * (attn + 2 * d + router + self.moe.top_k * expert)
+        return n
+
+    def _attn_params(self) -> int:
+        d, hd = self.d_model, self.hd
+        return d * self.n_heads * hd + 2 * d * self.n_kv_heads * hd + self.n_heads * hd * d
+
+    def _params_per_layer(self) -> dict[str, int]:
+        d = self.d_model
+        attn = self._attn_params()
+        if self.family == "moe":
+            assert self.moe is not None
+            ffn = self.moe.num_experts * 3 * d * self.moe.d_expert
+            ffn += d * self.moe.num_experts  # router
+            return {"default": attn + ffn + 2 * d}
+        if self.family == "ssm" and self.xlstm is not None:
+            # mLSTM block params (dominant): in/out proj + qkv + gates
+            di = int(d * self.xlstm.proj_factor)
+            m = 2 * d * di + 3 * di * di // 1 + 2 * di + di  # approx
+            return {"default": m + 2 * d}
+        if self.family == "hybrid" and self.ssm is not None:
+            di = self.ssm.expand * d
+            nh = di // self.ssm.head_dim
+            mamba = d * (2 * di + 2 * self.ssm.d_state + nh) + di * d + di
+            shared_attn = attn + 3 * d * self.d_ff + 2 * d
+            return {"default": mamba + 2 * d, "extra": shared_attn}
+        if self.enc_dec:
+            dec = attn * 2 + 2 * d * self.d_ff + 3 * d  # self+cross attn, GELU mlp
+            enc = attn + 2 * d * self.d_ff + 2 * d
+            return {"default": dec, "encoder": enc}
+        return {"default": attn + 3 * d * self.d_ff + 2 * d}
+
+
+# --------------------------------------------------------------------- #
+# Shape/batch spec per assigned input-shape set
+# --------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+
+# --------------------------------------------------------------------- #
+# Primitives
+# --------------------------------------------------------------------- #
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x, scale, bias, eps=1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding.  x: (..., S, H, Dh); positions: broadcastable (..., S)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = jnp.exp(-math.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1.astype(x.dtype), y2.astype(x.dtype)], axis=-1)
+
+
+def mrope(x: jax.Array, positions3: jax.Array, theta: float) -> jax.Array:
+    """Qwen2-VL M-RoPE: the head dim is split into 3 sections rotated by
+    temporal / height / width position ids.  positions3: (3, B, S)."""
+    dh = x.shape[-1]
+    sec = dh // 2 // 4  # section split 1:1:2 over (t,h,w) quarters of half-dim
+    splits = [sec, sec, dh // 2 - 2 * sec]
+    half = dh // 2
+    freqs = jnp.exp(-math.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half)
+    parts = []
+    lo = 0
+    for i, width in enumerate(splits):
+        pos = positions3[i]  # (B, S)
+        ang = pos[..., None].astype(jnp.float32) * freqs[lo : lo + width]
+        parts.append(ang)
+        lo += width
+    ang = jnp.concatenate(parts, axis=-1)  # (B, S, half)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1.astype(x.dtype), y2.astype(x.dtype)], axis=-1)
+
+
+def swiglu(x, w1, w3, w2):
+    """LLaMA-style gated MLP: (silu(x@w1) * (x@w3)) @ w2."""
+    h = jax.nn.silu(x @ w1) * (x @ w3)
+    return h @ w2
+
+
+def gelu_mlp(x, w1, b1, w2, b2):
+    return jax.nn.gelu(x @ w1 + b1) @ w2 + b2
+
+
+# --------------------------------------------------------------------- #
+# Memory-efficient attention (online softmax over KV chunks)
+# --------------------------------------------------------------------- #
+def _repeat_kv(k, v, g: int):
+    """Expand GQA kv heads to the full head count.  A single 64-wide head
+    axis shards cleanly under 16-way TP; the grouped (hkv, g) form makes the
+    SPMD partitioner replicate ('involuntary full rematerialization')."""
+    if g == 1:
+        return k, v
+    return jnp.repeat(k, g, axis=2), jnp.repeat(v, g, axis=2)
+
+
+def _attn_dense(q, k, v, *, causal: bool, window: int | None, q_offset: int = 0):
+    """Plain attention; q: (B,Sq,H,Dh), k/v: (B,Sk,Hkv,Dh).  Scores fp32."""
+    b, sq, h, dh = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    k, v = _repeat_kv(k, v, h // hkv)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k, preferred_element_type=jnp.float32)
+    scores *= 1.0 / math.sqrt(dh)
+    qpos = jnp.arange(sq) + q_offset
+    kpos = jnp.arange(sk)
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v)
+    return out.reshape(b, sq, h, dh)
+
+
+def _attn_chunked(q, k, v, *, causal: bool, window: int | None, q_chunk: int,
+                  k_chunk: int, q_offset: int = 0):
+    """FlashAttention-style two-level chunking in pure jnp: scan over KV
+    chunks with running (max, sum, acc); outer map over query chunks.  Never
+    materializes the (Sq, Sk) score matrix."""
+    b, sq, h, dh = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    qc = min(q_chunk, sq)
+    kc = min(k_chunk, sk)
+    n_q, n_k = sq // qc, sk // kc
+    assert sq % qc == 0 and sk % kc == 0, (sq, qc, sk, kc)
+    scale = 1.0 / math.sqrt(dh)
+    # repeat kv ONCE before chunking: inside the scan the unshardable
+    # hkv-head block would be re-gathered per (q-chunk × kv-chunk) step
+    # (measured 8e11 B on deepseek prefill); the 64-head copy shards on tp.
+    k, v = _repeat_kv(k, v, h // hkv)
+
+    kr = k.reshape(b, n_k, kc, h, dh)
+    vr = v.reshape(b, n_k, kc, h, dh)
+
+    def one_q_chunk(qi, q_blk):
+        # q_blk: (B, qc, H, Dh)
+        qpos = qi * qc + jnp.arange(qc) + q_offset
+
+        def kv_step(carry, inputs):
+            m, s, acc = carry
+            ki, k_blk, v_blk = inputs
+            kpos = ki * kc + jnp.arange(kc)
+            scores = jnp.einsum(
+                "bqhd,bkhd->bhqk", q_blk, k_blk,
+                preferred_element_type=jnp.float32,
+            ) * scale
+            mask = jnp.ones((qc, kc), bool)
+            if causal:
+                mask &= kpos[None, :] <= qpos[:, None]
+            if window is not None:
+                mask &= kpos[None, :] > qpos[:, None] - window
+            scores = jnp.where(mask[None, None], scores, -1e30)
+            m_new = jnp.maximum(m, scores.max(axis=-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(scores - m_new[..., None])
+            s_new = s * alpha + p.sum(axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p, v_blk.astype(jnp.float32)
+            )
+            return (m_new, s_new, acc_new), None
+
+        m0 = jnp.full((b, h, qc), -jnp.inf, jnp.float32)
+        s0 = jnp.zeros((b, h, qc), jnp.float32)
+        a0 = jnp.zeros((b, h, qc, dh), jnp.float32)
+        (m, s, acc), _ = jax.lax.scan(
+            kv_step,
+            (m0, s0, a0),
+            (jnp.arange(n_k), jnp.moveaxis(kr, 1, 0), jnp.moveaxis(vr, 1, 0)),
+        )
+        out = acc / jnp.maximum(s, 1e-30)[..., None]
+        return jnp.moveaxis(out, 1, 2).reshape(b, qc, h, dh).astype(q.dtype)
+
+    qs = jnp.moveaxis(q.reshape(b, n_q, qc, h, dh), 1, 0)
+    # flash-style backward: recompute scores/probs per chunk instead of
+    # saving the (qc, kc) fp32 probability tensors of every chunk pair
+    # (which would cost tens of GB per layer at 32k context).
+    if causal and window is None and q_offset == 0 and sq == sk and n_q > 1:
+        # causal skip: q chunk qi only attends to kv chunks covering
+        # positions ≤ (qi+1)·qc — statically unrolled per q chunk so the
+        # fully-masked upper-triangle chunk pairs are never computed
+        # (≈2× fewer attention FLOPs at long context).
+        outs = []
+        for qi in range(n_q):
+            n_k_i = min(n_k, -(-(qi + 1) * qc // kc))
+            fn = jax.checkpoint(
+                lambda q_blk, kr_i, vr_i, qi=qi: _flash_q_chunk(
+                    q_blk, kr_i, vr_i, qi, qc, kc, causal, window, q_offset,
+                    scale))
+            outs.append(fn(qs[qi], kr[:, :n_k_i], vr[:, :n_k_i]))
+        return jnp.stack(outs, 1).reshape(b, sq, h, dh)
+    chunk_fn = jax.checkpoint(lambda t: one_q_chunk(t[0], t[1]))
+    outs = jax.lax.map(chunk_fn, (jnp.arange(n_q), qs))
+    return jnp.moveaxis(outs, 0, 1).reshape(b, sq, h, dh)
+
+
+def _flash_q_chunk(q_blk, kr, vr, qi, qc, kc, causal, window, q_offset, scale):
+    """One q chunk against a truncated kv-chunk range (causal skip)."""
+    b, _, h, dh = q_blk.shape
+    n_k = kr.shape[1]
+    qpos = qi * qc + jnp.arange(qc) + q_offset
+
+    def kv_step(carry, inputs):
+        m, s, acc = carry
+        ki, k_blk, v_blk = inputs
+        kpos = ki * kc + jnp.arange(kc)
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q_blk, k_blk,
+                            preferred_element_type=jnp.float32) * scale
+        mask = jnp.ones((qc, kc), bool)
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if window is not None:
+            mask &= kpos[None, :] > qpos[:, None] - window
+        scores = jnp.where(mask[None, None], scores, -1e30)
+        m_new = jnp.maximum(m, scores.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(scores - m_new[..., None])
+        s_new = s * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p, v_blk.astype(jnp.float32))
+        return (m_new, s_new, acc_new), None
+
+    m0 = jnp.full((b, h, qc), -jnp.inf, jnp.float32)
+    s0 = jnp.zeros((b, h, qc), jnp.float32)
+    a0 = jnp.zeros((b, h, qc, dh), jnp.float32)
+    (m, s, acc), _ = jax.lax.scan(
+        kv_step, (m0, s0, a0),
+        (jnp.arange(n_k), jnp.moveaxis(kr, 1, 0), jnp.moveaxis(vr, 1, 0)))
+    out = acc / jnp.maximum(s, 1e-30)[..., None]
+    return jnp.moveaxis(out, 1, 2).astype(q_blk.dtype)
+
+
+def attention(q, k, v, *, causal=True, window=None, impl="auto", q_chunk=1024,
+              k_chunk=2048, q_offset=0):
+    """Dispatch between dense and chunked attention."""
+    sq, sk = q.shape[1], k.shape[1]
+    if impl == "auto":
+        impl = "chunked" if (sq > 2048 and sk > 2048) else "dense"
+    qc, kc = min(q_chunk, sq), min(k_chunk, sk)
+    if impl == "dense" or sq % qc != 0 or sk % kc != 0:
+        return _attn_dense(q, k, v, causal=causal, window=window, q_offset=q_offset)
+    return _attn_chunked(q, k, v, causal=causal, window=window, q_chunk=qc,
+                         k_chunk=kc, q_offset=q_offset)
+
+
+# --------------------------------------------------------------------- #
+# Initialization helpers
+# --------------------------------------------------------------------- #
+def dense_init(key, shape, dtype=jnp.bfloat16, scale=None):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    std = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def split_keys(key, n):
+    return list(jax.random.split(key, n))

@@ -1,0 +1,179 @@
+"""Whisper-style encoder-decoder backbone.
+
+The conv/audio frontend is a STUB per the assignment: ``input_specs`` feeds
+precomputed frame embeddings (B, S_frames, frontend_dim); we project to
+d_model.  Encoder = bidirectional attention; decoder = causal self-attention
++ cross-attention into the encoder memory.  Decoder length is seq_len // 8
+for training shapes (declared in DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distribution.partition import shard
+from repro.models import blocks
+from repro.models.common import ArchConfig, dense_init, rms_norm, split_keys
+from repro.models.transformer import _embed_init, _logits, _xent
+
+DEC_FRAC = 8  # decoder seq = encoder seq // DEC_FRAC for train/prefill shapes
+DEC_MAX = 1024  # decoder self-cache length during decode
+
+
+class EncDecModel:
+    def __init__(self, cfg: ArchConfig):
+        assert cfg.enc_dec and cfg.n_enc_layers > 0
+        self.cfg = cfg
+
+    # ----------------------------- init ------------------------------ #
+    def _enc_layer_init(self, key):
+        cfg = self.cfg
+        k1, k2 = jax.random.split(key)
+        return {
+            "ln1": jnp.ones((cfg.d_model,), jnp.bfloat16),
+            "ln2": jnp.ones((cfg.d_model,), jnp.bfloat16),
+            "attn": blocks.attn_init(k1, cfg, bias=True),
+            "mlp": blocks.mlp_init(k2, cfg, gelu=True),
+        }
+
+    def _dec_layer_init(self, key):
+        cfg = self.cfg
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {
+            "ln1": jnp.ones((cfg.d_model,), jnp.bfloat16),
+            "ln2": jnp.ones((cfg.d_model,), jnp.bfloat16),
+            "ln3": jnp.ones((cfg.d_model,), jnp.bfloat16),
+            "attn": blocks.attn_init(k1, cfg, bias=True),
+            "xattn": blocks.attn_init(k2, cfg, bias=True),
+            "mlp": blocks.mlp_init(k3, cfg, gelu=True),
+        }
+
+    def init(self, key):
+        cfg = self.cfg
+        k_emb, k_enc, k_dec = jax.random.split(key, 3)
+        enc = jax.vmap(self._enc_layer_init)(jax.random.split(k_enc, cfg.n_enc_layers))
+        dec = jax.vmap(self._dec_layer_init)(jax.random.split(k_dec, cfg.n_layers))
+        return {
+            **_embed_init(k_emb, cfg),
+            "enc_layers": enc,
+            "dec_layers": dec,
+            "enc_norm": jnp.ones((cfg.d_model,), jnp.bfloat16),
+        }
+
+    # ---------------------------- encoder ----------------------------- #
+    def encode(self, params, frames):
+        cfg = self.cfg
+        h = shard(frames @ params["frontend_proj"], "dp", "sp", None)
+
+        def layer_fn(carry, lp):
+            x = shard(carry, "dp", "sp", None)
+            a, _ = blocks.attn_apply(lp["attn"], rms_norm(x, lp["ln1"], cfg.norm_eps),
+                                     cfg, positions=None, causal=False)
+            x = x + shard(a, "dp", "sp", None)
+            m = blocks.mlp_apply(lp["mlp"], rms_norm(x, lp["ln2"], cfg.norm_eps))
+            return x + shard(m, "dp", "sp", None), None
+
+        fn = jax.checkpoint(layer_fn) if cfg.remat == "full" else layer_fn
+        h, _ = jax.lax.scan(fn, h, params["enc_layers"])
+        return rms_norm(h, params["enc_norm"], cfg.norm_eps)
+
+    # ---------------------------- decoder ----------------------------- #
+    def _decoder(self, params, tokens, memory, positions):
+        cfg = self.cfg
+        h = shard(params["embed"][tokens], "dp", None, None)
+
+        def layer_fn(carry, lp):
+            x = carry
+            a, _ = blocks.attn_apply(lp["attn"], rms_norm(x, lp["ln1"], cfg.norm_eps),
+                                     cfg, positions=positions, causal=True)
+            x = x + shard(a, "dp", None, None)
+            mem_kv = blocks.memory_kv_init(lp["xattn"], memory, cfg)
+            c = blocks.cross_attn_apply(lp["xattn"], rms_norm(x, lp["ln2"], cfg.norm_eps),
+                                        cfg, mem_kv)
+            x = x + shard(c, "dp", None, None)
+            m = blocks.mlp_apply(lp["mlp"], rms_norm(x, lp["ln3"], cfg.norm_eps))
+            return x + shard(m, "dp", None, None), None
+
+        fn = jax.checkpoint(layer_fn) if cfg.remat == "full" else layer_fn
+        h, _ = jax.lax.scan(fn, h, params["dec_layers"])
+        return h
+
+    def loss(self, params, batch):
+        cfg = self.cfg
+        memory = self.encode(params, batch["frames"])
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        h = self._decoder(params, tokens, memory, positions)
+        h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+        loss = _xent(_logits(params, h, cfg), batch["labels"], batch.get("loss_mask"))
+        return loss, {"xent": loss}
+
+    # ---------------------------- serving ----------------------------- #
+    def cache_shape(self, batch_size: int, s_max: int):
+        cfg = self.cfg
+        kv = lambda s: jax.ShapeDtypeStruct(
+            (cfg.n_layers, batch_size, s, cfg.n_kv_heads, cfg.hd), jnp.bfloat16)
+        return {
+            "self": {"k": kv(DEC_MAX), "v": kv(DEC_MAX)},
+            "cross": {"k": kv(s_max), "v": kv(s_max)},
+        }
+
+    def init_cache(self, batch_size: int, s_max: int):
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                            self.cache_shape(batch_size, s_max))
+
+    def cache_logical(self):
+        from repro.distribution.partition import Axes
+
+        kv = lambda: Axes(None, "dp", None, "tp", None)
+        return {
+            "self": {"k": kv(), "v": kv()},
+            "cross": {"k": kv(), "v": kv()},
+        }
+
+    def prefill(self, params, batch):
+        """Encode frames and project per-layer cross KV; empty self cache."""
+        cfg = self.cfg
+        memory = self.encode(params, batch["frames"])
+
+        def xkv(lp, _):
+            return None, blocks.memory_kv_init(lp["xattn"], memory, cfg)
+
+        _, (ks, vs) = jax.lax.scan(lambda c, lp: xkv(lp, c), None, params["dec_layers"])
+        b = memory.shape[0]
+        cache = {
+            "self": jax.tree.map(
+                lambda s: jnp.zeros(s.shape, s.dtype),
+                self.cache_shape(b, 1)["self"],
+            ),
+            "cross": {"k": ks.astype(jnp.bfloat16), "v": vs.astype(jnp.bfloat16)},
+        }
+        bos = jnp.zeros((b, 1), jnp.int32)
+        logits, cache = self.decode_step(
+            params, cache, {"tokens": bos, "pos": jnp.int32(0)})
+        return logits, cache
+
+    def decode_step(self, params, cache, batch):
+        cfg = self.cfg
+        pos = batch["pos"]
+        h = shard(params["embed"][batch["tokens"]], "dp", None, None)
+
+        def layer_fn(carry, scanned):
+            lp, self_kv, cross_kv = scanned
+            x = carry
+            a, self_new = blocks.attn_decode(
+                lp["attn"], rms_norm(x, lp["ln1"], cfg.norm_eps), cfg, self_kv, pos)
+            x = x + a
+            c = blocks.cross_attn_apply(
+                lp["xattn"], rms_norm(x, lp["ln2"], cfg.norm_eps), cfg,
+                (cross_kv["k"], cross_kv["v"]))
+            x = x + c
+            m = blocks.mlp_apply(lp["mlp"], rms_norm(x, lp["ln3"], cfg.norm_eps))
+            return x + m, self_new
+
+        h, self_new = jax.lax.scan(
+            layer_fn, h, (params["dec_layers"], cache["self"], cache["cross"]))
+        h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+        return _logits(params, h, cfg), {"self": self_new, "cross": cache["cross"]}

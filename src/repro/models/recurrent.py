@@ -1,0 +1,324 @@
+"""Recurrent-family models: xLSTM (mLSTM+sLSTM) and Zamba2 (Mamba2 hybrid).
+
+Both are built from *macro-blocks* so heterogeneous layer types still scan:
+  xLSTM : macro = (slstm_every-1) mLSTM layers + 1 sLSTM layer   (7:1 ratio)
+  Zamba2: macro = attn_every Mamba2 layers + 1 invocation of a single
+          SHARED attention+MLP block (Zamba2's parameter-sharing hallmark).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distribution.partition import shard
+from repro.models import blocks
+from repro.models.common import ArchConfig, rms_norm
+from repro.models.transformer import _embed_init, _logits, _xent
+
+
+# ===================================================================== #
+# xLSTM
+# ===================================================================== #
+class XLSTMModel:
+    def __init__(self, cfg: ArchConfig):
+        assert cfg.xlstm is not None
+        self.cfg = cfg
+        se = cfg.xlstm.slstm_every
+        self.n_macro = max(1, cfg.n_layers // se)
+        self.m_per_macro = se - 1
+
+    # ----------------------------- init ------------------------------ #
+    def init(self, key):
+        cfg = self.cfg
+        k_emb, k_m, k_s = jax.random.split(key, 3)
+
+        def macro_init(k):
+            km, ks = jax.random.split(k)
+            m_keys = jax.random.split(km, self.m_per_macro)
+            return {
+                "mlstm": jax.vmap(lambda kk: blocks.mlstm_init(kk, cfg))(m_keys),
+                "mlstm_ln": jnp.ones((self.m_per_macro, cfg.d_model), jnp.bfloat16),
+                "slstm": blocks.slstm_init(ks, cfg),
+                "slstm_ln": jnp.ones((cfg.d_model,), jnp.bfloat16),
+            }
+
+        macros = jax.vmap(macro_init)(jax.random.split(k_m, self.n_macro))
+        return {**_embed_init(k_emb, cfg), "macros": macros}
+
+    # ---------------------------- forward ----------------------------- #
+    def _run(self, p, h, states=None):
+        """states: None (fresh) or pytree of per-layer states."""
+        cfg = self.cfg
+
+        def macro_fn(carry, scanned):
+            x = carry
+            mp = scanned["params"]
+            mstates = scanned.get("states")
+
+            def mlstm_fn(cx, inner):
+                lp, ln, st = inner["p"], inner["ln"], inner.get("st")
+                y, st_new = blocks.mlstm_apply(lp, rms_norm(cx, ln, cfg.norm_eps),
+                                               cfg, state=st)
+                return cx + shard(y, "dp", None, None), st_new
+
+            inner_xs = {"p": mp["mlstm"], "ln": mp["mlstm_ln"]}
+            if mstates is not None:
+                inner_xs["st"] = mstates["mlstm"]
+            x, m_states = jax.lax.scan(mlstm_fn, x, inner_xs)
+            y, s_state = blocks.slstm_apply(
+                mp["slstm"], rms_norm(x, mp["slstm_ln"], cfg.norm_eps), cfg,
+                state=None if mstates is None else mstates["slstm"],
+            )
+            x = x + shard(y, "dp", None, None)
+            return x, {"mlstm": m_states, "slstm": s_state}
+
+        fn = jax.checkpoint(macro_fn) if cfg.remat == "full" else macro_fn
+        xs = {"params": p["macros"]}
+        if states is not None:
+            xs["states"] = states
+        h, new_states = jax.lax.scan(fn, h, xs)
+        return h, new_states
+
+    def loss(self, params, batch):
+        cfg = self.cfg
+        h = shard(params["embed"][batch["tokens"]], "dp", None, None)
+        h, _ = self._run(params, h)
+        h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+        loss = _xent(_logits(params, h, cfg), batch["labels"], batch.get("loss_mask"))
+        return loss, {"xent": loss}
+
+    # ---------------------------- serving ----------------------------- #
+    def cache_shape(self, batch_size: int, s_max: int):
+        cfg = self.cfg
+        d_in = int(cfg.d_model * cfg.xlstm.proj_factor)
+        h = cfg.n_heads
+        hd_i = d_in // h
+        hd = cfg.d_model // h
+        cw = cfg.xlstm.conv_width
+        nm, mm = self.n_macro, self.m_per_macro
+        f32 = jnp.float32
+        return {
+            "mlstm": (
+                jax.ShapeDtypeStruct((nm, mm, batch_size, cw - 1, d_in), jnp.bfloat16),
+                (
+                    jax.ShapeDtypeStruct((nm, mm, batch_size, h, hd_i, hd_i), f32),
+                    jax.ShapeDtypeStruct((nm, mm, batch_size, h, hd_i), f32),
+                    jax.ShapeDtypeStruct((nm, mm, batch_size, h), f32),
+                ),
+            ),
+            "slstm": tuple(
+                jax.ShapeDtypeStruct((nm, batch_size, h, hd), f32) for _ in range(3)
+            )
+            + (jax.ShapeDtypeStruct((nm, batch_size, h), f32),),
+        }
+
+    def init_cache(self, batch_size: int, s_max: int):
+        shapes = self.cache_shape(batch_size, s_max)
+        cache = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), shapes)
+        # stabilizers start at -inf
+        cache["mlstm"] = (
+            cache["mlstm"][0],
+            (cache["mlstm"][1][0], cache["mlstm"][1][1],
+             jnp.full_like(cache["mlstm"][1][2], -1e30)),
+        )
+        sl = cache["slstm"]
+        cache["slstm"] = (sl[0], sl[1], sl[2], jnp.full_like(sl[3], -1e30))
+        return cache
+
+    def cache_logical(self):
+        from repro.distribution.partition import Axes
+
+        return {
+            "mlstm": (
+                Axes(None, None, "dp", None, "tp"),  # conv tail
+                (
+                    Axes(None, None, "dp", "tp", None, None),  # S̃ (falls to hd)
+                    Axes(None, None, "dp", "tp", None),  # ñ
+                    Axes(None, None, "dp", "tp"),  # m
+                ),
+            ),
+            "slstm": (
+                Axes(None, "dp", "tp", None),
+                Axes(None, "dp", "tp", None),
+                Axes(None, "dp", "tp", None),
+                Axes(None, "dp", "tp"),
+            ),
+        }
+
+    def prefill(self, params, batch):
+        cfg = self.cfg
+        h = shard(params["embed"][batch["tokens"]], "dp", None, None)
+        states = self.init_cache(h.shape[0], 0)
+        h, new_states = self._run(params, h, states=states)
+        h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+        return _logits(params, h[:, -1:, :], cfg), new_states
+
+    def decode_step(self, params, cache, batch):
+        cfg = self.cfg
+        h = shard(params["embed"][batch["tokens"]], "dp", None, None)
+        h, new_states = self._run(params, h, states=cache)
+        h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+        return _logits(params, h, cfg), new_states
+
+
+# ===================================================================== #
+# Zamba2 hybrid
+# ===================================================================== #
+class ZambaModel:
+    def __init__(self, cfg: ArchConfig):
+        assert cfg.ssm is not None and cfg.attn_every > 0
+        self.cfg = cfg
+        self.m_per_macro = cfg.attn_every
+        self.n_macro = max(1, round(cfg.n_layers / (cfg.attn_every + 1)))
+
+    # ----------------------------- init ------------------------------ #
+    def init(self, key):
+        cfg = self.cfg
+        k_emb, k_m, k_sh = jax.random.split(key, 3)
+
+        def macro_init(k):
+            m_keys = jax.random.split(k, self.m_per_macro)
+            return {
+                "mamba": jax.vmap(lambda kk: blocks.mamba_init(kk, cfg))(m_keys),
+                "mamba_ln": jnp.ones((self.m_per_macro, cfg.d_model), jnp.bfloat16),
+            }
+
+        macros = jax.vmap(macro_init)(jax.random.split(k_m, self.n_macro))
+        k1, k2 = jax.random.split(k_sh)
+        shared = {
+            "ln1": jnp.ones((cfg.d_model,), jnp.bfloat16),
+            "ln2": jnp.ones((cfg.d_model,), jnp.bfloat16),
+            "attn": blocks.attn_init(k1, cfg),
+            "mlp": blocks.mlp_init(k2, cfg),
+        }
+        return {**_embed_init(k_emb, cfg), "macros": macros, "shared": shared}
+
+    # ---------------------------- forward ----------------------------- #
+    def _shared_block(self, sp, x, positions, kv_cache=None, pos=None):
+        cfg = self.cfg
+        if kv_cache is None:
+            a, kv = blocks.attn_apply(sp["attn"], rms_norm(x, sp["ln1"], cfg.norm_eps),
+                                      cfg, positions=positions)
+        else:
+            a, kv = blocks.attn_decode(sp["attn"], rms_norm(x, sp["ln1"], cfg.norm_eps),
+                                       cfg, kv_cache, pos)
+        x = x + shard(a, "dp", None, None)
+        m = blocks.mlp_apply(sp["mlp"], rms_norm(x, sp["ln2"], cfg.norm_eps))
+        return x + shard(m, "dp", None, None), kv
+
+    def _run(self, p, h, positions, states=None, decode_pos=None):
+        cfg = self.cfg
+        decode = decode_pos is not None
+
+        def macro_fn(carry, scanned):
+            x = carry
+            mp = scanned["params"]
+            mstates = scanned.get("states")
+
+            def mamba_fn(cx, inner):
+                lp, ln, st = inner["p"], inner["ln"], inner.get("st")
+                if decode:
+                    y, st_new = blocks.mamba_decode(
+                        lp, rms_norm(cx, ln, cfg.norm_eps), cfg, st)
+                else:
+                    y, st_new = blocks.mamba_apply(
+                        lp, rms_norm(cx, ln, cfg.norm_eps), cfg, state=st)
+                return cx + shard(y, "dp", None, None), st_new
+
+            inner_xs = {"p": mp["mamba"], "ln": mp["mamba_ln"]}
+            if mstates is not None:
+                inner_xs["st"] = mstates["mamba"]
+            x, m_states = jax.lax.scan(mamba_fn, x, inner_xs)
+            kv_in = None if mstates is None else mstates.get("attn_kv")
+            x, kv = self._shared_block(p["shared"], x, positions,
+                                       kv_cache=kv_in, pos=decode_pos)
+            out_states = {"mamba": m_states}
+            if decode or mstates is not None:
+                out_states["attn_kv"] = {
+                    "k": kv["k"] if isinstance(kv, dict) else kv[0].astype(jnp.bfloat16),
+                    "v": kv["v"] if isinstance(kv, dict) else kv[1].astype(jnp.bfloat16),
+                }
+            return x, out_states
+
+        fn = jax.checkpoint(macro_fn) if (cfg.remat == "full" and not decode) else macro_fn
+        xs = {"params": p["macros"]}
+        if states is not None:
+            xs["states"] = states
+        h, new_states = jax.lax.scan(fn, h, xs)
+        return h, new_states
+
+    def loss(self, params, batch):
+        cfg = self.cfg
+        h = shard(params["embed"][batch["tokens"]], "dp", None, None)
+        b, s, _ = h.shape
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        h, _ = self._run(params, h, positions)
+        h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+        loss = _xent(_logits(params, h, cfg), batch["labels"], batch.get("loss_mask"))
+        return loss, {"xent": loss}
+
+    # ---------------------------- serving ----------------------------- #
+    def cache_shape(self, batch_size: int, s_max: int):
+        cfg = self.cfg
+        ssm = cfg.ssm
+        d_in = ssm.expand * cfg.d_model
+        h = d_in // ssm.head_dim
+        nm, mm = self.n_macro, self.m_per_macro
+        cw = ssm.conv_width
+        f32 = jnp.float32
+        return {
+            "mamba": (
+                jax.ShapeDtypeStruct((nm, mm, batch_size, cw - 1, d_in), jnp.bfloat16),
+                jax.ShapeDtypeStruct((nm, mm, batch_size, cw - 1, 2 * ssm.d_state), jnp.bfloat16),
+                jax.ShapeDtypeStruct((nm, mm, batch_size, h, ssm.d_state, ssm.head_dim), f32),
+            ),
+            "attn_kv": {
+                "k": jax.ShapeDtypeStruct(
+                    (nm, batch_size, s_max, cfg.n_kv_heads, cfg.hd), jnp.bfloat16),
+                "v": jax.ShapeDtypeStruct(
+                    (nm, batch_size, s_max, cfg.n_kv_heads, cfg.hd), jnp.bfloat16),
+            },
+        }
+
+    def init_cache(self, batch_size: int, s_max: int):
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                            self.cache_shape(batch_size, s_max))
+
+    def cache_logical(self):
+        from repro.distribution.partition import Axes
+
+        return {
+            "mamba": (
+                Axes(None, None, "dp", None, "tp"),  # conv tail x
+                Axes(None, None, "dp", None, "tp"),  # conv tail bc
+                Axes(None, None, "dp", "tp", None, None),  # ssm state
+            ),
+            "attn_kv": {
+                "k": Axes(None, "dp", None, "tp", None),
+                "v": Axes(None, "dp", None, "tp", None),
+            },
+        }
+
+    def prefill(self, params, batch):
+        cfg = self.cfg
+        h = shard(params["embed"][batch["tokens"]], "dp", None, None)
+        b, s, _ = h.shape
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        states = self.init_cache(b, 0)
+        # drop the kv part for prefill run; collect kv from attn outputs
+        states_in = {"mamba": states["mamba"]}
+        h, new_states = self._run(params, h, positions, states=states_in)
+        h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+        return _logits(params, h[:, -1:, :], cfg), new_states
+
+    def decode_step(self, params, cache, batch):
+        cfg = self.cfg
+        h = shard(params["embed"][batch["tokens"]], "dp", None, None)
+        b = h.shape[0]
+        pos_b = jnp.broadcast_to(jnp.asarray(batch["pos"], jnp.int32), (b,))
+        positions = pos_b[:, None]
+        h, new_states = self._run(params, h, positions, states=cache,
+                                  decode_pos=batch["pos"])
+        h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+        return _logits(params, h, cfg), new_states

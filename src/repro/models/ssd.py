@@ -1,0 +1,211 @@
+"""Chunked state-space / linear-attention cores.
+
+Both Mamba2's SSD and xLSTM's mLSTM share a decayed outer-product recurrence
+
+    S_t = a_t · S_{t-1} + b_t · (k_t ⊗ v_t),     y_t = q_t · S_t
+
+whose chunked parallel form (intra-chunk masked matmul + inter-chunk state
+carry) is the TPU-native formulation: every op is an MXU matmul over (Q, Q)
+or (N, P) tiles, and states materialize only at chunk boundaries.
+
+``ssd_chunked``  — Mamba2 (decay a ∈ (0,1], no normalizer, no stabilizer).
+``mlstm_chunked`` — xLSTM mLSTM (exp input gates ⇒ log-space stabilizer m and
+                    normalizer n carried across chunks).
+Both return the final state so prefill can seed decode.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------- #
+# Mamba2 SSD
+# --------------------------------------------------------------------- #
+def ssd_chunked(
+    la: jax.Array,  # (B, S, H) log decay per token (<= 0)
+    q: jax.Array,  # (B, S, N)  C_t (shared across heads, G=1)
+    k: jax.Array,  # (B, S, N)  B_t
+    v: jax.Array,  # (B, S, H, P) dt-scaled inputs
+    s0: jax.Array | None = None,  # (B, H, N, P) initial state
+    chunk: int = 256,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (y (B,S,H,P), final_state (B,H,N,P))."""
+    b, s, h = la.shape
+    n = q.shape[-1]
+    p = v.shape[-1]
+    cq = min(chunk, s)
+    assert s % cq == 0, (s, cq)
+    nc = s // cq
+    if s0 is None:
+        s0 = jnp.zeros((b, h, n, p), jnp.float32)
+
+    la_c = jnp.moveaxis(la.reshape(b, nc, cq, h), 1, 0)
+    q_c = jnp.moveaxis(q.reshape(b, nc, cq, n), 1, 0)
+    k_c = jnp.moveaxis(k.reshape(b, nc, cq, n), 1, 0)
+    v_c = jnp.moveaxis(v.reshape(b, nc, cq, h, p), 1, 0)
+
+    idx = jnp.arange(cq)
+    tri = idx[:, None] >= idx[None, :]  # j >= s (inclusive of diagonal)
+
+    def step(state, blk):
+        la_b, q_b, k_b, v_b = blk  # (B,Q,H) (B,Q,N) (B,Q,N) (B,Q,H,P)
+        lcum = jnp.cumsum(la_b.astype(jnp.float32), axis=1)  # (B,Q,H) inclusive
+        # intra-chunk: w_{js} = exp(L_j - L_s) for s <= j  (decay from s to j)
+        diff = lcum[:, :, None, :] - lcum[:, None, :, :]  # (B,Q,Q,H) L_j - L_s
+        w = jnp.where(tri[None, :, :, None], jnp.exp(diff), 0.0)
+        qk = jnp.einsum("bjn,bsn->bjs", q_b.astype(jnp.float32), k_b.astype(jnp.float32))
+        scores = qk[:, :, :, None] * w  # (B,Q,Q,H)
+        y_intra = jnp.einsum("bjsh,bshp->bjhp", scores, v_b.astype(jnp.float32))
+        # inter-chunk: y_j += exp(L_j) q_j · S_prev
+        qdec = q_b.astype(jnp.float32)[:, :, None, :] * jnp.exp(lcum)[..., None]  # (B,Q,H,N)
+        y_inter = jnp.einsum("bjhn,bhnp->bjhp", qdec, state)
+        # state update: S = exp(L_Q) S_prev + Σ_s exp(L_Q - L_s) k_s v_s
+        ltot = lcum[:, -1, :]  # (B,H)
+        kdec = k_b.astype(jnp.float32)[:, :, None, :] * jnp.exp(
+            ltot[:, None, :] - lcum
+        )[..., None]  # (B,Q,H,N)
+        s_new = state * jnp.exp(ltot)[:, :, None, None] + jnp.einsum(
+            "bshn,bshp->bhnp", kdec, v_b.astype(jnp.float32)
+        )
+        return s_new, (y_intra + y_inter).astype(v.dtype)
+
+    # remat per chunk: without it the scan saves the (B,Q,Q,H) decay/score
+    # tensors of EVERY chunk for the backward pass (gigabytes per layer);
+    # with it only the (B,H,N,P) carry states persist.
+    s_final, y = jax.lax.scan(jax.checkpoint(step), s0, (la_c, q_c, k_c, v_c))
+    y = jnp.moveaxis(y, 0, 1).reshape(b, s, h, p)
+    return y, s_final
+
+
+def ssd_decode_step(
+    la: jax.Array,  # (B, H) log decay for this token
+    q: jax.Array,  # (B, N)
+    k: jax.Array,  # (B, N)
+    v: jax.Array,  # (B, H, P)
+    state: jax.Array,  # (B, H, N, P)
+) -> tuple[jax.Array, jax.Array]:
+    a = jnp.exp(la.astype(jnp.float32))[:, :, None, None]
+    new_state = a * state + jnp.einsum(
+        "bn,bhp->bhnp", k.astype(jnp.float32), v.astype(jnp.float32)
+    )
+    y = jnp.einsum("bn,bhnp->bhp", q.astype(jnp.float32), new_state)
+    return y.astype(v.dtype), new_state
+
+
+# --------------------------------------------------------------------- #
+# mLSTM (stabilized, chunked)
+# --------------------------------------------------------------------- #
+def mlstm_chunked(
+    lf: jax.Array,  # (B, S, H) log forget gate (log sigmoid or raw, <= 0 not req.)
+    li: jax.Array,  # (B, S, H) log input gate (unbounded — stabilized)
+    q: jax.Array,  # (B, S, H, N)
+    k: jax.Array,  # (B, S, H, N)
+    v: jax.Array,  # (B, S, H, P)
+    state: tuple[jax.Array, jax.Array, jax.Array] | None = None,
+    chunk: int = 256,
+) -> tuple[jax.Array, tuple[jax.Array, jax.Array, jax.Array]]:
+    """Stabilized chunked mLSTM.
+
+    Carried state is (S̃, ñ, m) with true S = S̃·eᵐ, n = ñ·eᵐ:
+      C_t = f_t C_{t-1} + i_t k_t v_tᵀ,  n_t = f_t n_{t-1} + i_t k_t,
+      y_t = (q_t ᵀ C_t) / max(|q_tᵀ n_t|, 1).
+    """
+    b, s, h = lf.shape
+    n = q.shape[-1]
+    p = v.shape[-1]
+    cq = min(chunk, s)
+    assert s % cq == 0
+    nc = s // cq
+    if state is None:
+        st = jnp.zeros((b, h, n, p), jnp.float32)
+        nt = jnp.zeros((b, h, n), jnp.float32)
+        mt = jnp.full((b, h), NEG_INF, jnp.float32)
+    else:
+        st, nt, mt = state
+
+    lf_c = jnp.moveaxis(lf.reshape(b, nc, cq, h), 1, 0)
+    li_c = jnp.moveaxis(li.reshape(b, nc, cq, h), 1, 0)
+    q_c = jnp.moveaxis(q.reshape(b, nc, cq, h, n), 1, 0)
+    k_c = jnp.moveaxis(k.reshape(b, nc, cq, h, n), 1, 0)
+    v_c = jnp.moveaxis(v.reshape(b, nc, cq, h, p), 1, 0)
+
+    idx = jnp.arange(cq)
+    tri = idx[:, None] >= idx[None, :]
+    scale = 1.0 / jnp.sqrt(jnp.float32(n))
+
+    def step(carry, blk):
+        st, nt, mt = carry  # (B,H,N,P), (B,H,N), (B,H)
+        lf_b, li_b, q_b, k_b, v_b = blk
+        lcum = jnp.cumsum(lf_b.astype(jnp.float32), axis=1)  # (B,Q,H)
+        # log weight of source s at target j: d_js = L_j - L_s + li_s   (s<=j)
+        # carry-in exponent at j: e_j = L_j + m_prev
+        c_src = li_b.astype(jnp.float32) - lcum  # (B,Q,H): li_s - L_s
+        run_max = jax.lax.cummax(c_src, axis=1)  # max_{s<=j} (li_s - L_s)
+        e_carry = mt[:, None, :]  # m_prev (B,1,H)
+        m_new = jnp.maximum(lcum + run_max, lcum + e_carry)  # (B,Q,H)
+        # intra weights: exp(L_j - L_s + li_s - m_j)
+        d = lcum[:, :, None, :] + c_src[:, None, :, :] - m_new[:, :, None, :]
+        w = jnp.where(tri[None, :, :, None], jnp.exp(d), 0.0)  # (B,Q,Q,H)
+        qs = q_b.astype(jnp.float32) * scale
+        qk = jnp.einsum("bjhn,bshn->bjsh", qs, k_b.astype(jnp.float32))
+        scores = qk * w  # (B,Q,Q,H)
+        y_num = jnp.einsum("bjsh,bshp->bjhp", scores, v_b.astype(jnp.float32))
+        den = jnp.sum(scores, axis=2)  # q_j · n_j, intra part  (B,Q,H)
+        # carry-in contribution, scaled by exp(L_j + m_prev - m_j)
+        cw = jnp.exp(lcum + e_carry - m_new)  # (B,Q,H)
+        y_num += jnp.einsum("bjhn,bhnp->bjhp", qs, st) * cw[..., None]
+        den += jnp.einsum("bjhn,bhn->bjh", qs, nt) * cw
+        denom = jnp.maximum(jnp.abs(den), jnp.exp(-m_new))
+        y = y_num / denom[..., None]
+        # ---- state update to end of chunk ----
+        ltot = lcum[:, -1, :]  # (B,H)
+        m_end = m_new[:, -1, :]
+        # source weight into end-state: exp(L_Q - L_s + li_s - m_end)
+        d_end = ltot[:, None, :] + c_src - m_end[:, None, :]
+        w_end = jnp.exp(d_end)  # (B,Q,H)
+        kv = jnp.einsum(
+            "bshn,bshp->bhnp", k_b.astype(jnp.float32) * w_end[..., None],
+            v_b.astype(jnp.float32),
+        )
+        ksum = jnp.einsum("bshn->bhn", k_b.astype(jnp.float32) * w_end[..., None])
+        carry_scale = jnp.exp(ltot + mt - m_end)[:, :, None]
+        st_new = st * carry_scale[..., None] + kv
+        nt_new = nt * carry_scale + ksum
+        return (st_new, nt_new, m_end), y.astype(v.dtype)
+
+    (st, nt, mt), y = jax.lax.scan(
+        jax.checkpoint(step), (st, nt, mt), (lf_c, li_c, q_c, k_c, v_c))
+    y = jnp.moveaxis(y, 0, 1).reshape(b, s, h, p)
+    return y, (st, nt, mt)
+
+
+def mlstm_decode_step(
+    lf: jax.Array,  # (B, H)
+    li: jax.Array,  # (B, H)
+    q: jax.Array,  # (B, H, N)
+    k: jax.Array,  # (B, H, N)
+    v: jax.Array,  # (B, H, P)
+    state: tuple[jax.Array, jax.Array, jax.Array],
+) -> tuple[jax.Array, tuple[jax.Array, jax.Array, jax.Array]]:
+    st, nt, mt = state
+    lf = lf.astype(jnp.float32)
+    li = li.astype(jnp.float32)
+    m_new = jnp.maximum(lf + mt, li)
+    f = jnp.exp(lf + mt - m_new)[:, :, None]
+    i = jnp.exp(li - m_new)[:, :, None]
+    k32 = k.astype(jnp.float32)
+    st_new = st * f[..., None] + i[..., None] * jnp.einsum(
+        "bhn,bhp->bhnp", k32, v.astype(jnp.float32)
+    )
+    nt_new = nt * f + i * k32
+    scale = 1.0 / jnp.sqrt(jnp.float32(q.shape[-1]))
+    qs = q.astype(jnp.float32) * scale
+    num = jnp.einsum("bhn,bhnp->bhp", qs, st_new)
+    den = jnp.maximum(
+        jnp.abs(jnp.einsum("bhn,bhn->bh", qs, nt_new)), jnp.exp(-m_new)
+    )
+    return (num / den[..., None]).astype(v.dtype), (st_new, nt_new, m_new)

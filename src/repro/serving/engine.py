@@ -1,0 +1,115 @@
+"""Batched serving engine: slot-based continuous batching over decode_step.
+
+A fixed pool of B slots; each slot holds one sequence's cache region.  New
+requests prefill into their slot, then the whole pool decodes one token per
+step — the standard TPU serving shape (decode_32k's ``serve_step`` is
+exactly one such pooled step).  The batch axis of every cache leaf is
+probed once at init by differencing ``cache_shape(b)`` vs
+``cache_shape(b+1)``, so the engine works unchanged for KV caches
+(transformers), recurrent states (xLSTM/Mamba2) and enc-dec caches.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray  # (S,) int32
+    max_new: int = 16
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, model, params, max_batch: int = 4, s_max: int = 256):
+        self.model = model
+        self.params = params
+        self.b = max_batch
+        self.s_max = s_max
+        self.cache = model.init_cache(max_batch, s_max)
+        sa = model.cache_shape(max_batch, s_max)
+        sb = model.cache_shape(max_batch + 1, s_max)
+        self.batch_axes = jax.tree.map(
+            lambda a, b_: next(i for i, (x, y) in enumerate(
+                zip(a.shape, b_.shape)) if x != y), sa, sb)
+        self.pos = np.zeros(max_batch, np.int64)
+        self.slots: list[Request | None] = [None] * max_batch
+        self._decode = jax.jit(model.decode_step)
+        self.steps = 0
+
+    # ------------------------------------------------------------------ #
+    def _free_slot(self) -> int | None:
+        for i, s in enumerate(self.slots):
+            if s is None:
+                return i
+        return None
+
+    def _commit_slot(self, new_cache, slot: int):
+        """Adopt only ``slot``'s rows from new_cache (other slots frozen)."""
+
+        def leaf(new, old, axis):
+            idx = [slice(None)] * new.ndim
+            idx[axis] = slice(slot, slot + 1)
+            return old.at[tuple(idx)].set(new[tuple(idx)])
+
+        self.cache = jax.tree.map(leaf, new_cache, self.cache, self.batch_axes)
+
+    def submit(self, req: Request) -> bool:
+        slot = self._free_slot()
+        if slot is None:
+            return False
+        self.pos[slot] = 0
+        self.slots[slot] = req
+        logits = None
+        for tok in req.prompt:  # slot-local prefill at the slot's own pos
+            pos_vec = self.pos.copy()
+            pos_vec[slot] = self.pos[slot]
+            batch = {
+                "tokens": jnp.full((self.b, 1), int(tok), jnp.int32),
+                "pos": jnp.asarray(pos_vec, jnp.int32),
+            }
+            logits, cache = self._decode(self.params, self.cache, batch)
+            self._commit_slot(cache, slot)
+            self.pos[slot] += 1
+        req.out.append(int(jnp.argmax(logits[slot, -1])))
+        return True
+
+    # ------------------------------------------------------------------ #
+    def step(self):
+        """One batched decode step for every active slot."""
+        if not any(s is not None for s in self.slots):
+            return
+        toks = np.zeros((self.b, 1), np.int32)
+        for i, req in enumerate(self.slots):
+            if req is not None and req.out:
+                toks[i, 0] = req.out[-1]
+        # per-slot positions: continuous batching, every slot at its own pos
+        batch = {"tokens": jnp.asarray(toks),
+                 "pos": jnp.asarray(self.pos, jnp.int32)}
+        logits, self.cache = self._decode(self.params, self.cache, batch)
+        self.steps += 1
+        nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            self.pos[i] += 1
+            req.out.append(int(nxt[i]))
+            if len(req.out) >= req.max_new:
+                req.done = True
+                self.slots[i] = None
+
+    def run(self, requests: list[Request], max_steps: int = 1_000):
+        pending = list(requests)
+        while (pending or any(s is not None for s in self.slots)) \
+                and self.steps < max_steps:
+            while pending and self._free_slot() is not None:
+                self.submit(pending.pop(0))
+            self.step()
+        return [r for r in requests if r.done]

@@ -1,0 +1,111 @@
+"""AdamW with fp32 master weights, global-norm clipping and cosine schedule.
+
+Functional (no optax): state = {master, m, v, step}; ``update`` returns the
+new state plus the working (bf16) params cast from the fp32 masters.  The
+spec tree for every state leaf mirrors the param spec tree, so checkpointing
+and the dry-run shard optimizer state identically to params.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+def schedule(cfg: OptConfig, step):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0, 1.0,
+    )
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos)
+
+
+def init_state(params) -> dict:
+    f32 = lambda t: jax.tree.map(lambda a: a.astype(jnp.float32), t)
+    zeros = lambda t: jax.tree.map(lambda a: jnp.zeros(a.shape, jnp.float32), t)
+    return {
+        "master": f32(params),
+        "m": zeros(params),
+        "v": zeros(params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def state_shapes(param_shapes) -> dict:
+    """ShapeDtypeStruct version of ``init_state`` (dry-run, no allocation)."""
+    f32 = lambda t: jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, jnp.float32), t)
+    return {
+        "master": f32(param_shapes),
+        "m": f32(param_shapes),
+        "v": f32(param_shapes),
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(jax.tree.map(
+        lambda g: jnp.sum(g.astype(jnp.float32) ** 2), tree))
+    return jnp.sqrt(jnp.sum(jnp.asarray(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), norm
+
+
+_NO_DECAY = ("norm", "ln", "bias", "b_if", "a_log", "dt_bias", "d_skip", "scale")
+
+
+def _decay_mask(path: str) -> bool:
+    return not any(t in path for t in _NO_DECAY)
+
+
+def update(opt_cfg: OptConfig, state: dict, grads, param_dtypes) -> tuple[Any, dict]:
+    """Returns (new working params, new state).  ``param_dtypes`` is a tree of
+    dtypes so the working copy matches the model's storage dtypes."""
+    step = state["step"] + 1
+    lr = schedule(opt_cfg, step)
+    g32, gnorm = clip_by_global_norm(grads, opt_cfg.clip_norm)
+    b1, b2 = opt_cfg.beta1, opt_cfg.beta2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def leaf(path, master, m, v, g):
+        m_new = b1 * m + (1 - b1) * g
+        v_new = b2 * v + (1 - b2) * g * g
+        upd = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + opt_cfg.eps)
+        pstr = "/".join(str(getattr(k, "key", k)) for k in path)
+        if _decay_mask(pstr):
+            upd = upd + opt_cfg.weight_decay * master
+        return master - lr * upd, m_new, v_new
+
+    flat = jax.tree_util.tree_map_with_path(
+        lambda p, ms, m, v, g: leaf(p, ms, m, v, g),
+        state["master"], state["m"], state["v"], g32,
+    )
+    master = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda t: isinstance(t, tuple))
+    m = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda t: isinstance(t, tuple))
+    v = jax.tree.map(lambda t: t[2], flat, is_leaf=lambda t: isinstance(t, tuple))
+    params = jax.tree.map(lambda ms, d: ms.astype(d), master, param_dtypes)
+    return params, {"master": master, "m": m, "v": v, "step": step}

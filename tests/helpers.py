@@ -1,0 +1,73 @@
+"""Shared test utilities: random graph builders and a union-find oracle."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.propagate import PropagationProblem
+from repro.graph.structures import coo_to_csr, csr_to_ell_fast
+
+
+def random_undirected_coo(rng, n: int, avg_deg: float):
+    """Random symmetric weighted graph as COO (both directions)."""
+    m = int(n * avg_deg / 2)
+    if m == 0 or n < 2:
+        z = np.zeros(0, np.int64)
+        return z, z, np.zeros(0, np.float32)
+    s = rng.integers(0, n, size=m)
+    d = rng.integers(0, n, size=m)
+    keep = s != d
+    s, d = s[keep], d[keep]
+    # dedupe on UNORDERED pairs so weights stay symmetric
+    lo, hi = np.minimum(s, d), np.maximum(s, d)
+    key = lo * np.int64(n) + hi
+    _, first = np.unique(key, return_index=True)
+    lo, hi = lo[first], hi[first]
+    w = rng.uniform(0.1, 1.0, size=len(lo)).astype(np.float32)
+    src = np.concatenate([lo, hi]).astype(np.int64)
+    dst = np.concatenate([hi, lo]).astype(np.int64)
+    wgt = np.concatenate([w, w])
+    return src, dst, wgt
+
+
+def union_find_components(n: int, src, dst) -> np.ndarray:
+    """Oracle CC labels: min vertex id per component."""
+    parent = list(range(n))
+
+    def find(x):
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = parent[x]
+        return x
+
+    for a, b in zip(src, dst):
+        ra, rb = find(int(a)), find(int(b))
+        if ra != rb:
+            parent[max(ra, rb)] = min(ra, rb)
+    return np.array([find(i) for i in range(n)])
+
+
+def random_problem(rng, n_unl: int, n_lab: int, avg_deg: float = 4.0):
+    """Random PropagationProblem with labeled supernode weights."""
+    import jax.numpy as jnp
+
+    src, dst, wgt = random_undirected_coo(rng, n_unl, avg_deg)
+    csr = coo_to_csr(n_unl, src, dst, wgt)
+    ell = csr_to_ell_fast(csr, max_degree=max(1, csr.num_edges and None or 1))
+    ell = csr_to_ell_fast(csr)
+    wl0 = (rng.uniform(0, 1, n_unl) * (rng.uniform(0, 1, n_unl) < 0.3)).astype(
+        np.float32
+    )
+    wl1 = (rng.uniform(0, 1, n_unl) * (rng.uniform(0, 1, n_unl) < 0.3)).astype(
+        np.float32
+    )
+    # ensure at least one anchor so the harmonic system is well-posed
+    wl0[0] = 1.0
+    wl1[n_unl - 1 if n_unl > 1 else 0] = 1.0
+    return PropagationProblem(
+        nbr=ell.nbr,
+        wgt=ell.wgt,
+        wl0=jnp.asarray(wl0),
+        wl1=jnp.asarray(wl1),
+        valid=jnp.ones(n_unl, bool),
+    )

@@ -1,0 +1,54 @@
+"""Shiloach–Vishkin connected components vs a union-find oracle."""
+
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core.components import compact_labels, connected_components, num_components
+from repro.graph.structures import coo_to_csr, csr_to_ell_fast
+
+from helpers import random_undirected_coo, union_find_components
+
+
+@given(st.integers(0, 10_000), st.integers(2, 60), st.floats(0.5, 6.0))
+def test_cc_matches_union_find(seed, n, avg_deg):
+    rng = np.random.default_rng(seed)
+    src, dst, wgt = random_undirected_coo(rng, n, avg_deg)
+    ell = csr_to_ell_fast(coo_to_csr(n, src, dst, wgt))
+    got = np.asarray(connected_components(ell.nbr).labels)
+    want = union_find_components(n, src, dst)
+    np.testing.assert_array_equal(got, want)
+
+
+@given(st.integers(0, 10_000), st.integers(2, 40))
+def test_cc_tau_threshold_drops_edges(seed, n):
+    """τ-sparsification: only edges with w > τ connect components."""
+    rng = np.random.default_rng(seed)
+    src, dst, wgt = random_undirected_coo(rng, n, 3.0)
+    ell = csr_to_ell_fast(coo_to_csr(n, src, dst, wgt))
+    tau = 0.55
+    got = np.asarray(connected_components(ell.nbr, ell.wgt, tau=tau).labels)
+    keep = wgt > tau
+    want = union_find_components(n, src[keep], dst[keep])
+    np.testing.assert_array_equal(got, want)
+
+
+def test_cc_two_cliques():
+    # 0-1-2 triangle and 3-4 edge, 5 isolated
+    src = np.array([0, 1, 1, 2, 0, 2, 3, 4], np.int64)
+    dst = np.array([1, 0, 2, 1, 2, 0, 4, 3], np.int64)
+    w = np.ones(8, np.float32)
+    ell = csr_to_ell_fast(coo_to_csr(6, src, dst, w))
+    res = connected_components(ell.nbr)
+    labels = np.asarray(res.labels)
+    np.testing.assert_array_equal(labels, [0, 0, 0, 3, 3, 5])
+    assert int(num_components(res.labels)) == 3
+    np.testing.assert_array_equal(np.asarray(compact_labels(res.labels)), [0, 0, 0, 1, 1, 2])
+
+
+def test_cc_empty_graph():
+    import jax.numpy as jnp
+
+    nbr = jnp.full((4, 2), -1, jnp.int32)
+    labels = np.asarray(connected_components(nbr).labels)
+    np.testing.assert_array_equal(labels, np.arange(4))

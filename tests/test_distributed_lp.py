@@ -1,0 +1,75 @@
+"""Distributed (shard_map) LP vs the single-device engine.
+
+Multi-device CPU requires XLA_FLAGS before jax initializes, so the real
+check runs in a subprocess with 8 virtual devices; the in-process test
+covers the 1-device degenerate mesh.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.distributed import distributed_propagate
+from repro.core.propagate import propagate
+
+from helpers import random_problem
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def test_distributed_matches_single_device_1dev():
+    rng = np.random.default_rng(0)
+    p = random_problem(rng, 96, 2)
+    f0 = jnp.full((96,), 0.5)
+    fr = jnp.ones(96, bool)
+    mesh = jax.make_mesh((1,), ("graph",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    res_d = distributed_propagate(p, f0, fr, mesh, delta=1e-5, max_iters=20_000)
+    res_s = propagate(p, f0, fr, delta=1e-5, max_iters=20_000)
+    assert int(res_d.iterations) == int(res_s.iterations)
+    np.testing.assert_allclose(np.asarray(res_d.f), np.asarray(res_s.f),
+                               rtol=1e-5, atol=1e-5)
+
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np, sys
+    sys.path.insert(0, {src!r})
+    sys.path.insert(0, {tests!r})
+    from repro.core.distributed import distributed_propagate
+    from repro.core.propagate import propagate
+    from helpers import random_problem
+
+    rng = np.random.default_rng(1)
+    p = random_problem(rng, 200, 2)   # not a multiple of 8 -> padding path
+    f0 = jnp.full((200,), 0.5)
+    fr = jnp.ones(200, bool)
+    mesh = jax.make_mesh((2, 4), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    res_d = distributed_propagate(p, f0, fr, mesh, delta=1e-5, max_iters=20000)
+    res_s = propagate(p, f0, fr, delta=1e-5, max_iters=20000)
+    assert int(res_d.iterations) == int(res_s.iterations), (
+        int(res_d.iterations), int(res_s.iterations))
+    np.testing.assert_allclose(np.asarray(res_d.f), np.asarray(res_s.f),
+                               rtol=1e-5, atol=1e-5)
+    assert bool(res_d.converged)
+    print("OK distributed==single", int(res_d.iterations))
+""")
+
+
+def test_distributed_matches_on_8_devices():
+    script = SCRIPT.format(src=os.path.abspath(SRC),
+                           tests=os.path.abspath(os.path.dirname(__file__)))
+    env = dict(os.environ)
+    env.pop("JAX_PLATFORMS", None)
+    env["JAX_PLATFORMS"] = "cpu"
+    out = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                         text=True, env=env, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "OK distributed==single" in out.stdout

@@ -1,0 +1,130 @@
+"""End-to-end DynLP behaviour: dynamic batches, deletions, harmonic fidelity."""
+
+import numpy as np
+import pytest
+
+from repro.core.dynlp import DynLP
+from repro.core.itlp import ITLP
+from repro.core.snapshot import build_problem
+from repro.core.stlp import STLP, harmonic_solve
+from repro.data.synth import StreamSpec, accuracy, gaussian_mixture_stream
+from repro.graph.dynamic import UNLABELED, BatchUpdate, DynamicGraph
+
+SPEC = StreamSpec(
+    total_vertices=1200, batch_size=400, seed=3, class_sep=6.0, noise=0.8
+)
+
+
+def _run_stream(engine_cls, spec=SPEC, **kw):
+    g = DynamicGraph(emb_dim=spec.emb_dim, k=5)
+    eng = engine_cls(g, **kw)
+    truth = {}
+    stats = []
+    for batch, cls in gaussian_mixture_stream(spec):
+        base = g.num_nodes
+        stats.append(eng.step(batch))
+        for i, c in enumerate(cls):
+            truth[base + i] = c
+    ids = np.flatnonzero(g.alive & (g.labels == UNLABELED))
+    pred = (g.f[ids] >= 0.5).astype(np.int8)
+    tr = np.array([truth[i] for i in ids])
+    return g, ids, pred, tr, stats
+
+
+def test_dynlp_tracks_harmonic_solution():
+    g, ids, pred, truth, stats = _run_stream(DynLP, delta=1e-4)
+    assert all(s.converged for s in stats)
+    snap = build_problem(g)
+    fh = np.asarray(harmonic_solve(snap.problem))[: len(snap.unl_ids)]
+    pred_h = (fh >= 0.5).astype(np.int8)
+    assert accuracy(pred, pred_h) > 0.98  # paper: ~99% vs harmonic optimum
+    assert np.abs(g.f[snap.unl_ids] - fh).mean() < 0.05
+
+
+def test_dynlp_fewer_iterations_than_itlp():
+    _, _, pred_d, truth, st_d = _run_stream(DynLP, delta=1e-4)
+    _, _, pred_i, _, st_i = _run_stream(ITLP, delta=1e-4)
+    # paper Fig. 7: DynLP needs fewer iterations in every experiment
+    assert sum(s.iterations for s in st_d) < sum(s.iterations for s in st_i)
+    assert accuracy(pred_d, truth) == pytest.approx(accuracy(pred_i, truth), abs=0.05)
+
+
+def test_deletions_remove_influence():
+    """Insert a hostile cluster, then delete it: labels must recover."""
+    rng = np.random.default_rng(0)
+    g = DynamicGraph(emb_dim=4, k=3)
+    dyn = DynLP(g, delta=1e-5)
+
+    # seed: two labeled anchors + a cloud near class 1
+    emb0 = np.array([[1, 0, 0, 0], [-1, 0, 0, 0]], np.float32)
+    cloud = rng.normal([1, 0, 0, 0], 0.1, (20, 4)).astype(np.float32)
+    dyn.step(
+        BatchUpdate(
+            ins_emb=np.concatenate([emb0, cloud]),
+            ins_labels=np.array([1, 0] + [UNLABELED] * 20, np.int8),
+            del_ids=np.zeros(0, np.int64),
+        )
+    )
+    ids = np.flatnonzero(g.alive & (g.labels == UNLABELED))
+    assert (g.f[ids] > 0.5).all()  # cloud labeled class 1
+
+    # hostile cluster near class 0 arrives, pulled toward the cloud ids
+    hostile = rng.normal([-1, 0, 0, 0], 0.1, (30, 4)).astype(np.float32)
+    dyn.step(
+        BatchUpdate(
+            ins_emb=hostile,
+            ins_labels=np.full(30, UNLABELED, np.int8),
+            del_ids=np.zeros(0, np.int64),
+        )
+    )
+    hostile_ids = np.arange(22, 52)
+    assert (g.f[hostile_ids] < 0.5).all()  # hostile cluster labeled class 0
+
+    # delete the hostile cluster: survivors keep/recover class-1 labels
+    dyn.step(
+        BatchUpdate(
+            ins_emb=np.zeros((0, 4), np.float32),
+            ins_labels=np.zeros(0, np.int8),
+            del_ids=hostile_ids,
+        )
+    )
+    ids = np.flatnonzero(g.alive & (g.labels == UNLABELED))
+    assert (g.f[ids] > 0.5).all()
+    assert not g.alive[hostile_ids].any()
+
+
+def test_stlp_matches_dynlp_small():
+    g1, ids, pred_d, truth, _ = _run_stream(
+        DynLP, StreamSpec(total_vertices=600, batch_size=300, seed=7,
+                          class_sep=6.0, noise=0.8), delta=1e-5
+    )
+    g2, _, pred_s, _, _ = _run_stream(
+        STLP, StreamSpec(total_vertices=600, batch_size=300, seed=7,
+                         class_sep=6.0, noise=0.8)
+    )
+    assert accuracy(pred_d, pred_s) > 0.98
+
+
+def test_stlp_memory_guard():
+    g = DynamicGraph(emb_dim=4, k=3)
+    eng = STLP(g, max_unlabeled=10)
+    emb = np.random.default_rng(0).normal(0, 1, (40, 4)).astype(np.float32)
+    labels = np.full(40, UNLABELED, np.int8)
+    labels[:2] = [0, 1]
+    with pytest.raises(MemoryError):
+        eng.step(BatchUpdate(ins_emb=emb, ins_labels=labels, del_ids=np.zeros(0, np.int64)))
+
+
+def test_stlp_gamma_accuracy_ordering():
+    """Smaller γ (more Neumann terms) must approximate the exact harmonic
+    solution at least as well as larger γ (paper Table 4 trend)."""
+    spec = StreamSpec(total_vertices=500, batch_size=500, seed=11,
+                      class_sep=5.0, noise=1.0)
+    errs = {}
+    for gamma in (None, 1.0, 10.0):
+        g, ids, pred, truth, _ = _run_stream(STLP, spec, gamma=gamma)
+        if gamma is None:
+            f_exact = g.f[ids].copy()
+        errs[gamma] = np.abs(g.f[ids] - f_exact).mean()
+    assert errs[1.0] <= errs[10.0] + 1e-6
+    assert errs[None] == 0.0

@@ -1,0 +1,122 @@
+"""Graph substrate: CSR/ELL conversions, kNN construction, dynamic updates."""
+
+import numpy as np
+from hypothesis import given, strategies as st
+
+from repro.graph.dynamic import UNLABELED, BatchUpdate, DynamicGraph
+from repro.graph.knn import build_knn_graph, knn_edges, symmetrize
+from repro.graph.structures import (
+    PAD,
+    coo_to_csr,
+    csr_to_ell,
+    csr_to_ell_fast,
+)
+
+from helpers import random_undirected_coo
+
+
+@given(st.integers(0, 10_000), st.integers(1, 50), st.floats(0.5, 8.0))
+def test_ell_fast_matches_reference(seed, n, avg_deg):
+    rng = np.random.default_rng(seed)
+    src, dst, wgt = random_undirected_coo(rng, n, avg_deg)
+    csr = coo_to_csr(n, src, dst, wgt)
+    a = csr_to_ell(csr)
+    b = csr_to_ell_fast(csr)
+    # same multiset of (nbr, wgt) per row
+    for u in range(n):
+        sa = sorted(zip(np.asarray(a.nbr)[u], np.asarray(a.wgt)[u]))
+        sb = sorted(zip(np.asarray(b.nbr)[u], np.asarray(b.wgt)[u]))
+        assert sa == sb
+
+
+@given(st.integers(0, 10_000), st.integers(2, 40))
+def test_csr_roundtrip_degrees(seed, n):
+    rng = np.random.default_rng(seed)
+    src, dst, wgt = random_undirected_coo(rng, n, 3.0)
+    csr = coo_to_csr(n, src, dst, wgt)
+    deg = np.bincount(src, minlength=n)
+    np.testing.assert_array_equal(np.diff(csr.rowptr), deg)
+    ell = csr_to_ell_fast(csr)
+    np.testing.assert_array_equal(np.asarray(ell.degrees()), deg)
+
+
+@given(st.integers(0, 10_000))
+def test_symmetrize_is_symmetric(seed):
+    rng = np.random.default_rng(seed)
+    n = 20
+    emb = rng.normal(0, 1, (n, 8)).astype(np.float32)
+    s, d, w = knn_edges(emb, k=3)
+    ss, dd, ww = symmetrize(n, s, d, w)
+    pairs = {(a, b): c for a, b, c in zip(ss, dd, ww)}
+    for (a, b), c in pairs.items():
+        assert (b, a) in pairs
+        assert pairs[(b, a)] == c
+
+
+def test_knn_graph_properties():
+    rng = np.random.default_rng(0)
+    emb = rng.normal(0, 1, (100, 8)).astype(np.float32)
+    csr = build_knn_graph(emb, k=5)
+    assert csr.num_nodes == 100
+    deg = np.diff(csr.rowptr)
+    assert deg.min() >= 5  # out-degree at least k after symmetrization
+    assert (csr.wgt >= 0).all() and (csr.wgt <= 1).all()  # cosine mapped to [0,1]
+    # no self loops
+    for u in range(100):
+        cols, _ = csr.neighbors(u)
+        assert u not in cols
+
+
+def test_dynamic_graph_insert_delete_invariants():
+    rng = np.random.default_rng(1)
+    g = DynamicGraph(emb_dim=8, k=3)
+    emb1 = rng.normal(0, 1, (50, 8)).astype(np.float32)
+    labels = np.full(50, UNLABELED, np.int8)
+    labels[:2] = [0, 1]
+    eff1 = g.apply_batch(BatchUpdate(ins_emb=emb1, ins_labels=labels,
+                                     del_ids=np.zeros(0, np.int64)))
+    assert g.num_alive == 50
+    assert len(eff1.new_ids) == 50
+    # edges are symmetric and alive
+    pairs = set(zip(g.src, g.dst))
+    assert all((b, a) in pairs for a, b in pairs)
+
+    emb2 = rng.normal(0, 1, (30, 8)).astype(np.float32)
+    eff2 = g.apply_batch(
+        BatchUpdate(ins_emb=emb2, ins_labels=np.full(30, UNLABELED, np.int8),
+                    del_ids=np.arange(10, 20)))
+    assert g.num_alive == 50 - 10 + 30
+    assert not g.alive[10:20].any()
+    # no edge touches a dead vertex
+    assert g.alive[g.src].all() and g.alive[g.dst].all()
+    # affected contains all new vertices
+    assert set(eff2.new_ids).issubset(set(eff2.affected))
+    # deleting a dead vertex again is a no-op
+    n_edges = g.num_edges
+    g.apply_batch(BatchUpdate(ins_emb=np.zeros((0, 8), np.float32),
+                              ins_labels=np.zeros(0, np.int8),
+                              del_ids=np.arange(10, 20)))
+    assert g.num_edges == n_edges
+
+
+def test_snapshot_excludes_labeled_and_dead():
+    from repro.core.snapshot import build_problem
+
+    rng = np.random.default_rng(2)
+    g = DynamicGraph(emb_dim=8, k=3)
+    labels = np.full(40, UNLABELED, np.int8)
+    labels[:4] = [0, 0, 1, 1]
+    g.apply_batch(BatchUpdate(
+        ins_emb=rng.normal(0, 1, (40, 8)).astype(np.float32),
+        ins_labels=labels, del_ids=np.zeros(0, np.int64)))
+    g.apply_batch(BatchUpdate(
+        ins_emb=np.zeros((0, 8), np.float32), ins_labels=np.zeros(0, np.int8),
+        del_ids=np.array([5, 6])))
+    snap = build_problem(g)
+    assert len(snap.unl_ids) == 40 - 4 - 2
+    nbr = np.asarray(snap.problem.nbr)
+    k = nbr[nbr != PAD]
+    assert (k < len(snap.unl_ids)).all()  # ELL refers only to unlabeled rows
+    # wl sums positive somewhere (labeled nodes do exist in the graph)
+    assert float(np.asarray(snap.problem.wl0).sum()) > 0
+    assert float(np.asarray(snap.problem.wl1).sum()) > 0

@@ -1,0 +1,83 @@
+"""Halo-exchange distributed LP vs full all-gather vs single device."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+TESTS = os.path.abspath(os.path.dirname(__file__))
+
+
+def test_halo_plan_invariants():
+    from repro.graph.partition import apply_plan, build_halo_plan, unapply_plan
+    from helpers import random_undirected_coo
+    from repro.graph.structures import coo_to_csr, csr_to_ell_fast
+
+    rng = np.random.default_rng(0)
+    n = 100
+    src, dst, wgt = random_undirected_coo(rng, n, 4.0)
+    ell = csr_to_ell_fast(coo_to_csr(n, src, dst, wgt))
+    nbr = np.asarray(ell.nbr)
+    plan = build_halo_plan(nbr, 4)
+    assert len(plan.perm) % 4 == 0
+    m = plan.rows_per_shard
+    # every cross-shard reference points into an export prefix
+    owner = np.arange(len(plan.perm)) // m
+    for u in range(len(plan.nbr)):
+        for v in plan.nbr[u]:
+            if v >= 0 and owner[v] != owner[u]:
+                assert v % m < plan.export_max, (u, v)
+    # roundtrip of a per-row array
+    arr = rng.normal(0, 1, n).astype(np.float32)
+    back = unapply_plan(plan, apply_plan(plan, arr), n)
+    np.testing.assert_array_equal(back, arr)
+
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np, sys
+    sys.path.insert(0, {src!r}); sys.path.insert(0, {tests!r})
+    from repro.core.distributed import distributed_propagate_halo
+    from repro.core.propagate import propagate, PropagationProblem
+    from repro.graph.partition import apply_plan, build_halo_plan, unapply_plan
+    from helpers import random_problem
+
+    rng = np.random.default_rng(5)
+    n = 160
+    p = random_problem(rng, n, 2)
+    plan = build_halo_plan(np.asarray(p.nbr), 8)
+    pp = PropagationProblem(
+        nbr=jnp.asarray(plan.nbr),
+        wgt=jnp.asarray(apply_plan(plan, np.asarray(p.wgt))),
+        wl0=jnp.asarray(apply_plan(plan, np.asarray(p.wl0))),
+        wl1=jnp.asarray(apply_plan(plan, np.asarray(p.wl1))),
+        valid=jnp.asarray(apply_plan(plan, np.asarray(p.valid))),
+    )
+    n_pad = len(plan.perm)
+    f0 = jnp.full((n_pad,), 0.5)
+    fr = jnp.asarray(apply_plan(plan, np.ones(n, bool)))
+    mesh = jax.make_mesh((2, 4), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    res_h = distributed_propagate_halo(pp, f0, fr, mesh,
+                                       export_max=plan.export_max, delta=1e-5)
+    res_s = propagate(p, jnp.full((n,), 0.5), jnp.ones(n, bool), delta=1e-5)
+    f_back = unapply_plan(plan, np.asarray(res_h.f), n)
+    assert int(res_h.iterations) == int(res_s.iterations), (
+        int(res_h.iterations), int(res_s.iterations))
+    np.testing.assert_allclose(f_back, np.asarray(res_s.f), atol=1e-5)
+    print("OK halo", int(res_h.iterations), "exports", plan.export_max,
+          "of", plan.rows_per_shard)
+""")
+
+
+def test_halo_matches_single_device_8dev():
+    env = dict(os.environ, JAX_PLATFORMS="cpu")
+    out = subprocess.run(
+        [sys.executable, "-c", SCRIPT.format(src=SRC, tests=TESTS)],
+        capture_output=True, text=True, env=env, timeout=900)
+    assert out.returncode == 0, out.stderr[-2500:]
+    assert "OK halo" in out.stdout

@@ -1,0 +1,125 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.propagate import propagate
+from repro.kernels import ref
+from repro.kernels.bsr_spmv import bsr_spmv, dense_to_bsr
+from repro.kernels.cc_hook import cc_hook_step, connected_components_pallas
+from repro.kernels.ell_propagate import ell_propagate_step
+from repro.kernels.ops import propagate_pallas
+
+from helpers import random_problem, random_undirected_coo, union_find_components
+from repro.graph.structures import coo_to_csr, csr_to_ell_fast
+
+
+def _random_ell_inputs(rng, n, k):
+    nbr = rng.integers(-1, n, size=(n, k)).astype(np.int32)
+    wgt = (rng.uniform(0.1, 1.0, (n, k)) * (nbr >= 0)).astype(np.float32)
+    wl0 = (rng.uniform(0, 1, n) * (rng.random(n) < 0.3)).astype(np.float32)
+    wl1 = (rng.uniform(0, 1, n) * (rng.random(n) < 0.3)).astype(np.float32)
+    frontier = rng.random(n) < 0.6
+    f = rng.uniform(0, 1, n).astype(np.float32)
+    return nbr, wgt, wl0, wl1, frontier, f
+
+
+@pytest.mark.parametrize("n,k,block_rows", [
+    (64, 4, 16), (128, 8, 32), (256, 3, 256), (512, 16, 128), (96, 1, 32),
+])
+def test_ell_propagate_matches_ref(n, k, block_rows):
+    rng = np.random.default_rng(n * k)
+    nbr, wgt, wl0, wl1, frontier, f = _random_ell_inputs(rng, n, k)
+    got_f, got_ch = ell_propagate_step(
+        jnp.asarray(nbr), jnp.asarray(wgt), jnp.asarray(wl0), jnp.asarray(wl1),
+        jnp.asarray(frontier), jnp.asarray(f), delta=1e-3,
+        block_rows=block_rows)
+    want_f, want_ch = ref.ell_propagate_ref(
+        jnp.asarray(nbr), jnp.asarray(wgt), jnp.asarray(wl0), jnp.asarray(wl1),
+        jnp.asarray(frontier), jnp.asarray(f), delta=1e-3)
+    np.testing.assert_allclose(np.asarray(got_f), np.asarray(want_f),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(got_ch), np.asarray(want_ch))
+
+
+@given(st.integers(0, 1_000))
+@settings(max_examples=10, deadline=None)
+def test_ell_propagate_property(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(16, 200))
+    n = (n + 15) // 16 * 16
+    k = int(rng.integers(1, 9))
+    nbr, wgt, wl0, wl1, frontier, f = _random_ell_inputs(rng, n, k)
+    got_f, _ = ell_propagate_step(
+        jnp.asarray(nbr), jnp.asarray(wgt), jnp.asarray(wl0), jnp.asarray(wl1),
+        jnp.asarray(frontier), jnp.asarray(f), block_rows=16)
+    want_f, _ = ref.ell_propagate_ref(
+        jnp.asarray(nbr), jnp.asarray(wgt), jnp.asarray(wl0), jnp.asarray(wl1),
+        jnp.asarray(frontier), jnp.asarray(f))
+    np.testing.assert_allclose(np.asarray(got_f), np.asarray(want_f),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_propagate_pallas_matches_core_engine():
+    """The kernel-driven loop and the jnp engine must reach the same
+    harmonic fixpoint with the same iteration count."""
+    rng = np.random.default_rng(7)
+    p = random_problem(rng, 100, 2)
+    f0 = jnp.full((100,), 0.5)
+    frontier = jnp.ones(100, bool)
+    res_core = propagate(p, f0, frontier, delta=1e-5, max_iters=20_000)
+    res_pal = propagate_pallas(p, f0, frontier, delta=1e-5, max_iters=20_000,
+                               block_rows=32)
+    assert int(res_core.iterations) == int(res_pal.iterations)
+    np.testing.assert_allclose(np.asarray(res_pal.f), np.asarray(res_core.f),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("n,k", [(64, 3), (256, 5), (128, 1)])
+def test_cc_hook_matches_ref(n, k):
+    rng = np.random.default_rng(n + k)
+    src, dst, wgt = random_undirected_coo(rng, n, float(k))
+    ell = csr_to_ell_fast(coo_to_csr(n, src, dst, wgt))
+    nbr = jnp.asarray(np.asarray(ell.nbr))
+    par = jnp.asarray(rng.permutation(n).astype(np.int32))
+    got = cc_hook_step(nbr, par, block_rows=min(64, n))
+    want = ref.cc_hook_ref(nbr, par)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_cc_pallas_full_loop_matches_union_find():
+    rng = np.random.default_rng(3)
+    n = 256
+    src, dst, wgt = random_undirected_coo(rng, n, 2.0)
+    ell = csr_to_ell_fast(coo_to_csr(n, src, dst, wgt))
+    par, iters = connected_components_pallas(ell.nbr, block_rows=64)
+    want = union_find_components(n, src, dst)
+    np.testing.assert_array_equal(np.asarray(par), want)
+    assert int(iters) < 50
+
+
+@pytest.mark.parametrize("n,bs,density,dtype", [
+    (64, 8, 0.3, jnp.float32), (128, 16, 0.1, jnp.float32),
+    (64, 8, 0.5, jnp.bfloat16), (256, 32, 0.05, jnp.float32),
+])
+def test_bsr_spmv_matches_dense(n, bs, density, dtype):
+    rng = np.random.default_rng(int(n * bs * density))
+    mask = rng.random((n // bs, n // bs)) < density
+    a = rng.normal(0, 1, (n, n)).astype(np.float32)
+    a *= np.kron(mask, np.ones((bs, bs)))
+    x = rng.normal(0, 1, (n,)).astype(np.float32)
+    blocks, cols = dense_to_bsr(jnp.asarray(a, dtype), bs)
+    got = bsr_spmv(blocks, cols, jnp.asarray(x, dtype))
+    want = ref.bsr_spmv_ref(blocks, cols, jnp.asarray(x, dtype))
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=tol, atol=tol)
+    # and against the dense matmul ground truth
+    np.testing.assert_allclose(
+        np.asarray(got),
+        a.astype(np.float32) @ x if dtype == jnp.float32
+        else (a.astype(np.float32) @ x),
+        rtol=tol * 10, atol=tol * 10)

@@ -1,0 +1,97 @@
+"""Partitioning rules: param specs, ZeRO extension, divisibility fallbacks."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.distribution import partition
+
+
+@pytest.fixture(autouse=True)
+def rules():
+    partition.set_axis_rules({"dp": ("data",), "tp": "model",
+                              "sp": "model", "ep": "model"})
+    partition.set_mesh_sizes({"data": 4, "model": 4})
+    yield
+    partition.set_axis_rules(None)
+    partition.set_mesh_sizes(None)
+
+
+class FakeMesh:
+    axis_names = ("data", "model")
+
+    class devices:
+        shape = (4, 4)
+
+
+def _sds(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def test_param_rules():
+    tree = {
+        "embed": _sds(128, 64),
+        "lm_head": _sds(64, 128),
+        "layers": {
+            "attn": {"wq": _sds(8, 64, 64), "wo": _sds(8, 64, 64)},
+            "mlp": {"w1": _sds(8, 64, 256), "w2": _sds(8, 256, 64)},
+            "moe": {"w1": _sds(8, 16, 64, 32), "router": _sds(8, 64, 16)},
+            "ln1": _sds(8, 64),
+        },
+    }
+    specs = partition.param_specs(tree, FakeMesh)
+    assert specs["embed"] == P(None, "model")
+    assert specs["lm_head"] == P(None, "model")
+    assert specs["layers"]["attn"]["wq"] == P(None, None, "model")
+    assert specs["layers"]["attn"]["wo"] == P(None, "model", None)
+    assert specs["layers"]["mlp"]["w2"] == P(None, "model", None)
+    assert specs["layers"]["moe"]["w1"] == P(None, "model", None, None)
+    assert specs["layers"]["moe"]["router"] == P(None, None, None)
+    assert specs["layers"]["ln1"] == P(None, None)
+
+
+def test_param_rules_drop_nondivisible():
+    tree = {"attn": {"wq": _sds(4, 64, 30)}}  # 30 % 4 != 0
+    specs = partition.param_specs(tree, FakeMesh)
+    assert specs["attn"]["wq"] == P(None, None, None)
+
+
+def test_zero_specs_extend_and_idempotent():
+    tree = {"mlp": {"w1": _sds(8, 64, 256)}, "ln": _sds(7,)}
+    pspecs = partition.param_specs(tree, FakeMesh)
+    z1 = partition.zero_specs(pspecs, tree, FakeMesh)
+    assert z1["mlp"]["w1"] in (P("data", None, "model"),
+                               P(("data",), None, "model"))
+    assert z1["ln"] == P(None)  # 7 not divisible: stays replicated
+    z2 = partition.zero_specs(z1, tree, FakeMesh)
+    assert z2 == z1  # idempotent (the FSDP double-application bug)
+
+
+def test_resolve_spec_shift_right():
+    # kv-heads (2) below tp degree (4) -> tp shifts to head_dim (8)
+    spec = partition.resolve_spec((6, 8, 100, 2, 8),
+                                  (None, "dp", None, "tp", None), FakeMesh)
+    assert spec in (P(None, "data", None, None, "model"),
+                    P(None, ("data",), None, None, "model"))
+    # nothing divisible -> dropped
+    spec = partition.resolve_spec((5, 3), ("dp", "tp"), FakeMesh)
+    assert spec == P(None, None)
+
+
+def test_shard_divisibility_aware():
+    mesh = jax.make_mesh((1,), ("model",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    partition.set_axis_rules({"tp": "model", "dp": None})
+    partition.set_mesh_sizes({"model": 1})
+    x = jnp.zeros((4, 6))
+    with mesh:
+        y = jax.jit(lambda a: partition.shard(a, "dp", "tp"))(x)
+    assert y.shape == x.shape
+
+
+def test_no_rules_noop():
+    partition.set_axis_rules(None)
+    x = jnp.ones((3, 3))
+    assert partition.shard(x, "dp", "tp") is x

@@ -1,0 +1,121 @@
+"""Propagation engine invariants (the paper's §5 theory, as tests)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, strategies as st
+
+from repro.core.propagate import (
+    PropagationProblem,
+    harmonic_residual,
+    lp_update,
+    propagate,
+    propagate_full,
+)
+from repro.core.stlp import harmonic_solve
+from repro.graph.structures import PAD
+
+from helpers import random_problem
+
+
+@given(st.integers(0, 10_000), st.integers(2, 50))
+def test_update_equals_weighted_average(seed, n):
+    """§5 equivalence: T(F)_u = Σ α_uv F_v regardless of the current F_u."""
+    rng = np.random.default_rng(seed)
+    p = random_problem(rng, n, 2)
+    f = jnp.asarray(rng.uniform(0, 1, n).astype(np.float32))
+    got = np.asarray(lp_update(p, f))
+
+    nbr, wgt = np.asarray(p.nbr), np.asarray(p.wgt)
+    wl0, wl1 = np.asarray(p.wl0), np.asarray(p.wl1)
+    fn = np.asarray(f)
+    for u in range(n):
+        mask = nbr[u] != PAD
+        wall = wgt[u][mask].sum() + wl0[u] + wl1[u]
+        if wall <= 0:
+            assert got[u] == fn[u]
+            continue
+        # weighted average: labeled class-0 contributes 0, class-1 contributes 1
+        avg = (wgt[u][mask] * fn[nbr[u][mask]]).sum() + wl0[u] * 0.0 + wl1[u] * 1.0
+        np.testing.assert_allclose(got[u], avg / wall, rtol=1e-5, atol=1e-6)
+
+
+@given(st.integers(0, 10_000), st.integers(2, 40))
+def test_maximum_principle(seed, n):
+    """Harmonic updates keep labels inside [0, 1] (convexity of averaging)."""
+    rng = np.random.default_rng(seed)
+    p = random_problem(rng, n, 2)
+    f = jnp.asarray(rng.uniform(0, 1, n).astype(np.float32))
+    for _ in range(3):
+        f = lp_update(p, f)
+        assert np.all(np.asarray(f) >= -1e-6)
+        assert np.all(np.asarray(f) <= 1 + 1e-6)
+
+
+@given(st.integers(0, 10_000), st.integers(3, 30))
+def test_converges_to_harmonic_solution(seed, n):
+    """Corollary 1: iteration reaches the closed-form −L_UU⁻¹ L_UL F_L."""
+    rng = np.random.default_rng(seed)
+    p = random_problem(rng, n, 2)
+    res = propagate_full(p, jnp.full((n,), 0.5), delta=1e-7, max_iters=50_000)
+    f_exact = np.asarray(harmonic_solve(p))
+    np.testing.assert_allclose(np.asarray(res.f), f_exact, atol=5e-4)
+    assert float(harmonic_residual(p, res.f)) < 1e-5
+
+
+@given(st.integers(0, 10_000), st.integers(3, 30))
+def test_frontier_matches_full_propagation(seed, n):
+    """Frontier-restricted DynLP step reaches the same fixpoint as dense ITLP
+    when seeded with a full frontier."""
+    rng = np.random.default_rng(seed)
+    p = random_problem(rng, n, 2)
+    f0 = jnp.full((n,), 0.5)
+    res_full = propagate_full(p, f0, delta=1e-6, max_iters=50_000)
+    res_front = propagate(p, f0, jnp.ones(n, bool), delta=1e-6, max_iters=50_000)
+    np.testing.assert_allclose(
+        np.asarray(res_front.f), np.asarray(res_full.f), atol=1e-4
+    )
+
+
+def test_frontier_localized_change_stays_local():
+    """A chain a-b-c-d-e with a change at one end: with a large δ the frontier
+    never reaches the far end, and far labels are untouched (the paper's
+    'influence decays with propagation' premise)."""
+    n = 6
+    nbr = np.full((n, 2), PAD, np.int32)
+    wgt = np.zeros((n, 2), np.float32)
+    for i in range(n - 1):
+        nbr[i, 1] = i + 1
+        nbr[i + 1, 0] = i
+        wgt[i, 1] = wgt[i + 1, 0] = 1.0
+    wl0 = np.zeros(n, np.float32)
+    wl1 = np.zeros(n, np.float32)
+    wl0[0] = 10.0  # strong class-0 anchor at the head
+    p = PropagationProblem(
+        nbr=jnp.asarray(nbr), wgt=jnp.asarray(wgt),
+        wl0=jnp.asarray(wl0), wl1=jnp.asarray(wl1),
+        valid=jnp.ones(n, bool),
+    )
+    f0 = jnp.full((n,), 0.9)
+    frontier = jnp.zeros(n, bool).at[0].set(True)
+    res = propagate(p, f0, frontier, delta=0.2, max_iters=100)
+    f = np.asarray(res.f)
+    assert f[0] < 0.2  # head pulled hard toward 0
+    assert f[-1] == 0.9  # tail untouched: frontier died before reaching it
+    assert bool(res.converged)
+
+
+def test_padding_rows_inert():
+    rng = np.random.default_rng(0)
+    p = random_problem(rng, 8, 2)
+    padded = PropagationProblem(
+        nbr=jnp.concatenate([p.nbr, jnp.full((4, p.nbr.shape[1]), PAD, jnp.int32)]),
+        wgt=jnp.concatenate([p.wgt, jnp.zeros((4, p.wgt.shape[1]))]),
+        wl0=jnp.concatenate([p.wl0, jnp.zeros(4)]),
+        wl1=jnp.concatenate([p.wl1, jnp.zeros(4)]),
+        valid=jnp.concatenate([p.valid, jnp.zeros(4, bool)]),
+    )
+    f0 = jnp.full((12,), 0.5)
+    res = propagate(padded, f0, jnp.ones(12, bool), delta=1e-6, max_iters=50_000)
+    ref = propagate(p, f0[:8], jnp.ones(8, bool), delta=1e-6, max_iters=50_000)
+    np.testing.assert_allclose(np.asarray(res.f[:8]), np.asarray(ref.f), atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(res.f[8:]), 0.5)

@@ -1,0 +1,110 @@
+"""SSD / mLSTM chunked cores vs sequential references (property-swept)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.ssd import (
+    mlstm_chunked,
+    mlstm_decode_step,
+    ssd_chunked,
+    ssd_decode_step,
+)
+
+
+def _ssd_seq_ref(la, q, k, v):
+    b, s, h = la.shape
+    n, p = q.shape[-1], v.shape[-1]
+    st_ = np.zeros((b, h, n, p), np.float64)
+    ys = []
+    for t in range(s):
+        a = np.exp(la[:, t].astype(np.float64))
+        st_ = st_ * a[:, :, None, None] + np.einsum("bn,bhp->bhnp",
+                                                    k[:, t], v[:, t])
+        ys.append(np.einsum("bn,bhnp->bhp", q[:, t], st_))
+    return np.stack(ys, 1), st_
+
+
+@given(st.integers(0, 10_000), st.sampled_from([2, 4, 8, 16]))
+@settings(max_examples=12, deadline=None)
+def test_ssd_chunked_matches_sequential(seed, chunk):
+    rng = np.random.default_rng(seed)
+    b, s, h, n, p = 2, 16, 2, 4, 4
+    la = -np.abs(rng.normal(0.3, 0.3, (b, s, h))).astype(np.float32)
+    q = rng.normal(0, 1, (b, s, n)).astype(np.float32)
+    k = rng.normal(0, 1, (b, s, n)).astype(np.float32)
+    v = rng.normal(0, 1, (b, s, h, p)).astype(np.float32)
+    y, s_fin = ssd_chunked(jnp.asarray(la), jnp.asarray(q), jnp.asarray(k),
+                           jnp.asarray(v), chunk=chunk)
+    y_ref, s_ref = _ssd_seq_ref(la, q, k, v)
+    np.testing.assert_allclose(np.asarray(y), y_ref, rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(np.asarray(s_fin), s_ref, rtol=3e-4, atol=3e-4)
+
+
+def test_ssd_state_carry_across_calls():
+    """Two chunked calls with carried state == one long call."""
+    rng = np.random.default_rng(1)
+    b, s, h, n, p = 1, 32, 2, 4, 4
+    la = -np.abs(rng.normal(0.2, 0.2, (b, s, h))).astype(np.float32)
+    q = rng.normal(0, 1, (b, s, n)).astype(np.float32)
+    k = rng.normal(0, 1, (b, s, n)).astype(np.float32)
+    v = rng.normal(0, 1, (b, s, h, p)).astype(np.float32)
+    y_full, s_full = ssd_chunked(jnp.asarray(la), jnp.asarray(q),
+                                 jnp.asarray(k), jnp.asarray(v), chunk=8)
+    half = s // 2
+    y1, s1 = ssd_chunked(jnp.asarray(la[:, :half]), jnp.asarray(q[:, :half]),
+                         jnp.asarray(k[:, :half]), jnp.asarray(v[:, :half]),
+                         chunk=8)
+    y2, s2 = ssd_chunked(jnp.asarray(la[:, half:]), jnp.asarray(q[:, half:]),
+                         jnp.asarray(k[:, half:]), jnp.asarray(v[:, half:]),
+                         s0=s1, chunk=8)
+    np.testing.assert_allclose(np.concatenate([y1, y2], 1),
+                               np.asarray(y_full), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(s_full),
+                               rtol=1e-4, atol=1e-4)
+
+
+@given(st.integers(0, 10_000), st.sampled_from([4, 8, 16]))
+@settings(max_examples=10, deadline=None)
+def test_mlstm_chunked_matches_decode_chain(seed, chunk):
+    """Chunked parallel form == step-by-step stabilized recurrence."""
+    rng = np.random.default_rng(seed)
+    b, s, h, n, p = 2, 16, 2, 4, 4
+    lf = np.log(1 / (1 + np.exp(-rng.normal(2, 1, (b, s, h))))).astype(np.float32)
+    li = rng.normal(-0.5, 1.0, (b, s, h)).astype(np.float32)
+    q = rng.normal(0, 1, (b, s, h, n)).astype(np.float32)
+    k = rng.normal(0, 1, (b, s, h, n)).astype(np.float32)
+    v = rng.normal(0, 1, (b, s, h, p)).astype(np.float32)
+    y_chunk, _ = mlstm_chunked(jnp.asarray(lf), jnp.asarray(li),
+                               jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                               chunk=chunk)
+    state = (jnp.zeros((b, h, n, p)), jnp.zeros((b, h, n)),
+             jnp.full((b, h), -1e30))
+    ys = []
+    for t in range(s):
+        y_t, state = mlstm_decode_step(
+            jnp.asarray(lf[:, t]), jnp.asarray(li[:, t]), jnp.asarray(q[:, t]),
+            jnp.asarray(k[:, t]), jnp.asarray(v[:, t]), state)
+        ys.append(np.asarray(y_t))
+    np.testing.assert_allclose(np.asarray(y_chunk), np.stack(ys, 1),
+                               rtol=3e-3, atol=3e-3)
+
+
+def test_ssd_decode_matches_chunked_tail():
+    rng = np.random.default_rng(3)
+    b, h, n, p = 2, 2, 4, 4
+    la = -np.abs(rng.normal(0.3, 0.2, (b, 1, h))).astype(np.float32)
+    q = rng.normal(0, 1, (b, 1, n)).astype(np.float32)
+    k = rng.normal(0, 1, (b, 1, n)).astype(np.float32)
+    v = rng.normal(0, 1, (b, 1, h, p)).astype(np.float32)
+    s0 = rng.normal(0, 1, (b, h, n, p)).astype(np.float32)
+    y_c, s_c = ssd_chunked(jnp.asarray(la), jnp.asarray(q), jnp.asarray(k),
+                           jnp.asarray(v), s0=jnp.asarray(s0), chunk=1)
+    y_d, s_d = ssd_decode_step(jnp.asarray(la[:, 0]), jnp.asarray(q[:, 0]),
+                               jnp.asarray(k[:, 0]), jnp.asarray(v[:, 0]),
+                               jnp.asarray(s0))
+    np.testing.assert_allclose(np.asarray(y_c[:, 0]), np.asarray(y_d),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(s_c), np.asarray(s_d),
+                               rtol=1e-5, atol=1e-5)
