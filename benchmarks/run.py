@@ -10,6 +10,7 @@ claim metric), after each benchmark's own detail lines.
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import time
 import traceback
@@ -19,6 +20,7 @@ from benchmarks import (
     fig6_delta,
     fig7_itlp,
     fig8_stlp,
+    stream_throughput,
     table3_exec,
     table4_batch,
 )
@@ -30,6 +32,8 @@ BENCHES = {
     "fig8": (fig8_stlp.main, "DynLP vs STLP + O(U^2) memory wall"),
     "table3": (table3_exec.main, "execution time across datasets"),
     "table4": (table4_batch.main, "method matrix at batch sizes"),
+    "stream": (stream_throughput.main,
+               "compile-once engine >=3x naive rebuild per batch"),
 }
 
 
@@ -37,7 +41,22 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--backend", default=None,
+                    choices=("ref", "ell_pallas", "bsr"),
+                    help="kernels.ops backend override; Pallas backends fall "
+                         "back to interpret=True kernels when no TPU is "
+                         "attached instead of crashing")
     args = ap.parse_args()
+
+    if args.backend:
+        # Propagate to every DynLP/StreamEngine built downstream; ops
+        # resolves interpret=None to True off-TPU, so asking for a Pallas
+        # backend on a TPU-less host degrades to the interpreter.
+        os.environ["REPRO_BACKEND"] = args.backend
+        from repro.kernels import ops
+        if args.backend != "ref" and not ops.on_tpu():
+            print(f"# no TPU attached: backend={args.backend} runs with "
+                  "interpret=True kernels", flush=True)
 
     failures = 0
     summary = []

@@ -1,0 +1,3 @@
+"""DynLP reproduction: parallel dynamic batch update for label propagation."""
+
+__version__ = "0.1.0"

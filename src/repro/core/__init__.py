@@ -11,5 +11,14 @@ from repro.core.propagate import (
     propagate,
     propagate_full,
 )
-from repro.core.snapshot import Snapshot, build_problem
+from repro.core.snapshot import (
+    HostSnapshot,
+    Snapshot,
+    bucket,
+    bucket_k,
+    build_host_problem,
+    build_problem,
+    ladder_size,
+)
 from repro.core.stlp import STLP, STLPStats, harmonic_solve
+from repro.core.stream import StreamEngine, StreamStats

@@ -26,6 +26,28 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+if hasattr(jax, "shard_map"):  # jax ≥ 0.6
+    _shard_map = jax.shard_map
+else:  # jax ≤ 0.4.x ships it under experimental
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+# The static replication checker has no rule for ``while`` on older jax
+# (and the check is advisory anyway) — disable it under whichever name
+# this version spells it.
+import inspect as _inspect
+
+_smap_params = _inspect.signature(_shard_map).parameters
+_CHECK_KW = (
+    {"check_rep": False} if "check_rep" in _smap_params
+    else {"check_vma": False} if "check_vma" in _smap_params
+    else {}
+)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs):
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **_CHECK_KW)
+
 from repro.core.propagate import PropagateResult, PropagationProblem
 from repro.graph.structures import PAD
 
@@ -61,7 +83,7 @@ def make_propagate_fn(mesh, delta: float = 1e-4, max_iters: int = 100_000):
     row2 = P(axes, None)
 
     @functools.partial(
-        jax.shard_map,
+        shard_map,
         mesh=mesh,
         in_specs=(row2, row2, row, row, row, row, row),
         out_specs=(row, P(), P(), P()),
@@ -145,7 +167,7 @@ def make_propagate_halo_fn(mesh, rows_per_shard: int, export_max: int,
     row2 = P(axes, None)
 
     @functools.partial(
-        jax.shard_map,
+        shard_map,
         mesh=mesh,
         in_specs=(row2, row2, row, row, row, row, row),
         out_specs=(row, P(), P(), P()),

@@ -21,10 +21,33 @@ import numpy as np
 
 from repro.core.components import compact_labels, connected_components
 from repro.core.init_labels import supernode_init
-from repro.core.propagate import propagate
-from repro.core.snapshot import Snapshot, build_problem
+from repro.core.snapshot import Snapshot, bucket_k, build_problem
 from repro.graph.dynamic import UNLABELED, BatchUpdate, DynamicGraph
 from repro.graph.structures import coo_to_csr, csr_to_ell_fast
+from repro.kernels.ops import run_propagation
+
+
+def gprime_components(effect, m: int) -> jnp.ndarray:
+    """Connected components of G' (new-vertex τ-subgraph), local ids.
+
+    Shared by ``DynLP`` and ``core.stream.StreamEngine`` (Alg. 2 Step 1).
+    """
+    if len(effect.gprime_src) == 0:
+        return jnp.arange(m, dtype=jnp.int32)
+    s = np.concatenate([effect.gprime_src, effect.gprime_dst])
+    d = np.concatenate([effect.gprime_dst, effect.gprime_src])
+    w = np.concatenate([effect.gprime_wgt, effect.gprime_wgt])
+    csr = coo_to_csr(m, s, d, w)
+    ell = csr_to_ell_fast(csr)
+    k = ell.nbr.shape[1]
+    kb = bucket_k(k)  # bucket K so the CC jit caches across Δ_t
+    if kb != k:
+        nbr = np.full((m, kb), -1, np.int32)
+        wgt = np.zeros((m, kb), np.float32)
+        nbr[:, :k] = np.asarray(ell.nbr)
+        wgt[:, :k] = np.asarray(ell.wgt)
+        return connected_components(jnp.asarray(nbr), jnp.asarray(wgt), tau=0.0).labels
+    return connected_components(ell.nbr, ell.wgt, tau=0.0).labels
 
 
 @dataclasses.dataclass
@@ -48,12 +71,20 @@ class DynLP:
         tau: float | None = None,
         max_iters: int = 200_000,
         max_degree: int | None = None,
+        backend: str | None = None,
+        auto_bucket: bool = True,
     ):
         self.graph = graph
         self.delta = delta
         self.tau = tau
         self.max_iters = max_iters
         self.max_degree = max_degree
+        # backend: kernels.ops dispatch ("auto"/None, "ref", "ell_pallas",
+        # "bsr").  auto_bucket=False rebuilds at the exact (U, K) every
+        # batch — the paper's "redundant recomputation" baseline that
+        # benchmarks/stream_throughput.py measures the engine against.
+        self.backend = backend
+        self.auto_bucket = auto_bucket
         self.last_snapshot: Snapshot | None = None
 
     # ------------------------------------------------------------------ #
@@ -67,10 +98,11 @@ class DynLP:
         n_components = 0
 
         # ---- Step 2: supernode label initialization for new vertices ----
-        snap = build_problem(g, max_degree=self.max_degree, auto_bucket=True)
+        snap = build_problem(g, max_degree=self.max_degree,
+                             auto_bucket=self.auto_bucket)
         new_unl = effect.new_ids[g.labels[effect.new_ids] == UNLABELED]
         if m and len(new_unl):
-            comp_local = self._components_of_gprime(effect, m)
+            comp_local = gprime_components(effect, m)
             # component id per *unlabeled* new vertex (local new-batch index)
             local_idx = new_unl - effect.new_ids[0]
             comp = compact_labels(jnp.asarray(comp_local))[local_idx]
@@ -89,9 +121,9 @@ class DynLP:
         frontier = np.zeros(u_pad, bool)
         aff_rows = snap.remap[effect.affected]
         frontier[aff_rows[aff_rows >= 0]] = True
-        res = propagate(
+        res = run_propagation(
             snap.problem, jnp.asarray(f0), jnp.asarray(frontier),
-            delta=self.delta, max_iters=self.max_iters,
+            delta=self.delta, max_iters=self.max_iters, backend=self.backend,
         )
         g.f[snap.unl_ids] = np.asarray(res.f)[:u]
         self.last_snapshot = snap
@@ -104,26 +136,6 @@ class DynLP:
             wall_ms=(time.perf_counter() - t0) * 1e3,
             max_residual=float(res.max_residual),
         )
-
-    # ------------------------------------------------------------------ #
-    def _components_of_gprime(self, effect, m: int) -> jnp.ndarray:
-        """Connected components of G' (new-vertex τ-subgraph), local ids."""
-        if len(effect.gprime_src) == 0:
-            return jnp.arange(m, dtype=jnp.int32)
-        s = np.concatenate([effect.gprime_src, effect.gprime_dst])
-        d = np.concatenate([effect.gprime_dst, effect.gprime_src])
-        w = np.concatenate([effect.gprime_wgt, effect.gprime_wgt])
-        csr = coo_to_csr(m, s, d, w)
-        ell = csr_to_ell_fast(csr)
-        k = ell.nbr.shape[1]
-        kb = max(8, -8 * (-k // 8))  # bucket K so the CC jit caches across Δ_t
-        if kb != k:
-            nbr = np.full((m, kb), -1, np.int32)
-            wgt = np.zeros((m, kb), np.float32)
-            nbr[:, :k] = np.asarray(ell.nbr)
-            wgt[:, :k] = np.asarray(ell.wgt)
-            return connected_components(jnp.asarray(nbr), jnp.asarray(wgt), tau=0.0).labels
-        return connected_components(ell.nbr, ell.wgt, tau=0.0).labels
 
     # ------------------------------------------------------------------ #
     def predictions(self, cutoff: float = 0.5) -> tuple[np.ndarray, np.ndarray]:

@@ -3,6 +3,14 @@
 Labeled classes are folded into the per-node supernode weights wl0/wl1; the
 ELL tensor holds only unlabeled↔unlabeled edges (paper §4 "three kinds of
 vertices that can impact the label").
+
+Shape discipline: an evolving graph would trigger one XLA recompile per
+Δ_t if snapshots were built at their natural ``(U, K)``.  Both axes are
+therefore padded up a *geometric bucket ladder* (``bucket`` for rows,
+``bucket_k`` for the neighbor axis), so an entire stream touches only
+O(log U · log K) distinct shapes — the compile-once contract that
+``core.stream.StreamEngine`` and the dispatch layer in ``kernels.ops``
+build on (docs/streaming.md).
 """
 
 from __future__ import annotations
@@ -11,8 +19,6 @@ import dataclasses
 
 import jax.numpy as jnp
 import numpy as np
-
-from repro.graph.structures import ELLGraph
 
 from repro.core.propagate import PropagationProblem
 from repro.graph.dynamic import UNLABELED, DynamicGraph
@@ -26,6 +32,28 @@ class Snapshot:
     remap: np.ndarray  # (num_nodes,) global -> compact (or -1)
 
 
+@dataclasses.dataclass
+class HostSnapshot:
+    """Numpy twin of ``Snapshot`` — not yet shipped to the device.
+
+    ``core.stream.StreamEngine`` stages these into persistent donated
+    device buffers itself; ``build_problem`` converts eagerly for the
+    one-shot callers.
+    """
+
+    nbr: np.ndarray  # (U_pad, K_pad) int32
+    wgt: np.ndarray  # (U_pad, K_pad) float32
+    wl0: np.ndarray  # (U_pad,) float32
+    wl1: np.ndarray  # (U_pad,) float32
+    valid: np.ndarray  # (U_pad,) bool
+    unl_ids: np.ndarray  # (U,) global ids
+    remap: np.ndarray  # (num_nodes,) global -> compact (or -1)
+
+    @property
+    def bucket_key(self) -> tuple[int, int]:
+        return self.nbr.shape
+
+
 def bucket(n: int, ratio: float = 1.3, floor: int = 256) -> int:
     """Round ``n`` up to a geometric bucket so jit caches hit across batches
     (the evolving graph would otherwise trigger one recompile per Δ_t)."""
@@ -35,12 +63,44 @@ def bucket(n: int, ratio: float = 1.3, floor: int = 256) -> int:
     return b
 
 
-def build_problem(
+def bucket_k(k: int, floor: int = 8) -> int:
+    """Two-regime ladder for the neighbor axis: multiples of 8 up to 64
+    (tight padding where real kNN degrees live — matching the pre-stream
+    ``DynLP`` rounding so per-sweep gather work does not regress), then
+    doubling so hub-degree creep can't produce an unbounded shape count."""
+    b = floor
+    while b < k:
+        b = b + 8 if b < 64 else b * 2
+    return b
+
+
+def ladder_size(max_u: int, max_k: int, ratio: float = 1.3,
+                floor: int = 256, k_floor: int = 8) -> int:
+    """Number of distinct (U_bucket, K_bucket) shapes any stream whose
+    snapshots stay within (max_u, max_k) can produce — the compile-count
+    bound asserted by tests/test_stream.py.  Derived from ``bucket`` /
+    ``bucket_k`` themselves so the bound can't drift from the ladders."""
+    n_u = 1
+    b = floor
+    while b < max_u:
+        b = bucket(b + 1, ratio=ratio, floor=floor)
+        n_u += 1
+    n_k = 1
+    b = k_floor
+    while b < max_k:
+        b = bucket_k(b + 1, floor=k_floor)
+        n_k += 1
+    return n_u * n_k
+
+
+def build_host_problem(
     g: DynamicGraph,
     max_degree: int | None = None,
     pad_to: int | None = None,
+    k_pad: int | None = None,
     auto_bucket: bool = False,
-) -> Snapshot:
+) -> HostSnapshot:
+    """Host-side (numpy) snapshot build; see module docstring for padding."""
     alive_unl = g.alive & (g.labels == UNLABELED)
     unl_ids = np.flatnonzero(alive_unl)
     u = len(unl_ids)
@@ -58,17 +118,18 @@ def build_problem(
     uu = s_unl & d_unl
     csr = coo_to_csr(u, remap[src[uu]], remap[dst[uu]], wgt[uu])
     ell = csr_to_ell_fast(csr, max_degree=max_degree)
+    nbr, w = np.asarray(ell.nbr), np.asarray(ell.wgt)
+    k = nbr.shape[1]
     if auto_bucket:
-        pad_to = bucket(u)
-        k = ell.nbr.shape[1]
-        kb = max(8, -8 * (-k // 8))  # K rounded up to a multiple of 8
-        if kb != k:
-            pad_n = jnp.full((ell.nbr.shape[0], kb - k), -1, jnp.int32)
-            pad_w = jnp.zeros((ell.nbr.shape[0], kb - k), jnp.float32)
-            ell = ELLGraph(
-                nbr=jnp.concatenate([ell.nbr, pad_n], axis=1),
-                wgt=jnp.concatenate([ell.wgt, pad_w], axis=1),
-            )
+        pad_to = bucket(u) if pad_to is None else pad_to
+        k_pad = bucket_k(k) if k_pad is None else k_pad
+    if k_pad is not None and k < k_pad:
+        nbr = np.concatenate(
+            [nbr, np.full((nbr.shape[0], k_pad - k), -1, np.int32)], axis=1
+        )
+        w = np.concatenate(
+            [w, np.zeros((w.shape[0], k_pad - k), np.float32)], axis=1
+        )
 
     # unlabeled -> labeled edges fold into wl0 / wl1
     wl0 = np.zeros(u, np.float32)
@@ -79,21 +140,35 @@ def build_problem(
     np.add.at(wl0, rows[lab == 0], wgt[ul][lab == 0])
     np.add.at(wl1, rows[lab == 1], wgt[ul][lab == 1])
 
-    nbr, w = np.asarray(ell.nbr), np.asarray(ell.wgt)
     valid = np.ones(u, bool)
     if pad_to is not None and u < pad_to:  # shard padding rows
-        k = nbr.shape[1]
-        nbr = np.concatenate([nbr, np.full((pad_to - u, k), -1, np.int32)])
-        w = np.concatenate([w, np.zeros((pad_to - u, k), np.float32)])
+        kk = nbr.shape[1]
+        nbr = np.concatenate([nbr, np.full((pad_to - u, kk), -1, np.int32)])
+        w = np.concatenate([w, np.zeros((pad_to - u, kk), np.float32)])
         wl0 = np.concatenate([wl0, np.zeros(pad_to - u, np.float32)])
         wl1 = np.concatenate([wl1, np.zeros(pad_to - u, np.float32)])
         valid = np.concatenate([valid, np.zeros(pad_to - u, bool)])
 
-    problem = PropagationProblem(
-        nbr=jnp.asarray(nbr),
-        wgt=jnp.asarray(w),
-        wl0=jnp.asarray(wl0),
-        wl1=jnp.asarray(wl1),
-        valid=jnp.asarray(valid),
+    return HostSnapshot(
+        nbr=nbr, wgt=w, wl0=wl0, wl1=wl1, valid=valid,
+        unl_ids=unl_ids, remap=remap,
     )
-    return Snapshot(problem=problem, unl_ids=unl_ids, remap=remap)
+
+
+def build_problem(
+    g: DynamicGraph,
+    max_degree: int | None = None,
+    pad_to: int | None = None,
+    auto_bucket: bool = False,
+) -> Snapshot:
+    host = build_host_problem(
+        g, max_degree=max_degree, pad_to=pad_to, auto_bucket=auto_bucket
+    )
+    problem = PropagationProblem(
+        nbr=jnp.asarray(host.nbr),
+        wgt=jnp.asarray(host.wgt),
+        wl0=jnp.asarray(host.wl0),
+        wl1=jnp.asarray(host.wl1),
+        valid=jnp.asarray(host.valid),
+    )
+    return Snapshot(problem=problem, unl_ids=host.unl_ids, remap=host.remap)

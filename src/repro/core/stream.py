@@ -1,0 +1,233 @@
+"""Compile-once streaming engine for dynamic batch updates (tentpole).
+
+``DynLP.step`` rebuilds and re-stages the device ``PropagationProblem``
+from scratch every Δ_t — at its exact (U, K) when ``auto_bucket=False``
+(a recompile on nearly every batch, the recomputation tax the paper
+eliminates), and even bucketed it allocates fresh device buffers per
+batch and serializes host work against the solve.  ``StreamEngine`` is
+the amortized version:
+
+  * **Bucket ladder** — every snapshot is padded up the geometric
+    ``(U_bucket, K_bucket)`` ladder (``snapshot.bucket`` ×
+    ``snapshot.bucket_k``), so an unbounded stream compiles the
+    propagation entry point a bounded number of times
+    (``snapshot.ladder_size``).
+  * **Persistent donated buffers** — per bucket the engine keeps two
+    generations of device buffers for ``(nbr, wgt, wl0, wl1, valid)``
+    plus the ``f``/``frontier`` vectors.  Batch t+1's snapshot is
+    committed into the generation *not* referenced by the in-flight
+    batch t solve, with the stale generation donated so XLA recycles
+    the allocation instead of growing the arena every Δ_t.
+  * **Staged transfers** — ``submit``/``drain`` split the step: ``submit``
+    applies Δ_t on the host, stages its topology to the device, and
+    launches the solve; it only *then* blocks on the previous batch.
+    Host graph update + H2D of batch t+1 overlap device propagation of
+    batch t (JAX dispatch is async on every backend).
+
+``step`` (submit + drain) keeps the exact ``DynLP.step`` semantics and
+numerics — streamed labels are allclose to fresh per-batch DynLP results
+(tests/test_stream.py); the solve itself routes through
+``kernels.ops.run_propagation`` so ref / ell_pallas / bsr backends are
+interchangeable.  See docs/streaming.md.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.components import compact_labels
+from repro.core.dynlp import gprime_components
+from repro.core.init_labels import supernode_init
+from repro.core.propagate import PropagationProblem
+from repro.core.snapshot import HostSnapshot, build_host_problem
+from repro.graph.dynamic import UNLABELED, BatchUpdate, DynamicGraph
+from repro.kernels import ops
+
+
+@dataclasses.dataclass
+class StreamStats:
+    iterations: int
+    converged: bool
+    num_components: int
+    frontier_size: int
+    num_unlabeled: int
+    wall_ms: float
+    max_residual: float
+    bucket: tuple[int, int]  # (U_bucket, K_bucket) device shape this Δ_t
+    recompiled: bool  # True iff this Δ_t triggered any XLA compile
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _adopt(old: PropagationProblem, new: PropagationProblem) -> PropagationProblem:
+    """Copy ``new`` into ``old``'s (donated) device storage."""
+    return new
+
+
+@dataclasses.dataclass
+class _Pending:
+    res: object  # PropagateResult (device, possibly still in flight)
+    unl_ids: np.ndarray
+    t0: float
+    num_components: int
+    frontier_size: int
+    bucket: tuple[int, int]
+    recompiled: bool
+
+
+class StreamEngine:
+    """Stateful compile-once streaming DynLP over a ``DynamicGraph``."""
+
+    def __init__(
+        self,
+        graph: DynamicGraph,
+        delta: float = 1e-4,
+        tau: float | None = None,
+        max_iters: int = 200_000,
+        max_degree: int | None = None,
+        backend: str | None = None,
+        block_rows: int = 512,
+        interpret: bool | None = None,
+    ):
+        self.graph = graph
+        self.delta = delta
+        self.tau = tau
+        self.max_iters = max_iters
+        self.max_degree = max_degree
+        self.backend = backend
+        self.block_rows = block_rows
+        self.interpret = interpret
+        # bucket_key -> two generations of device problem buffers; the
+        # generation toggles per commit so the in-flight solve never shares
+        # storage with the snapshot being staged.
+        self._buffers: dict[tuple[int, int], list[PropagationProblem | None]] = {}
+        self._gen: dict[tuple[int, int], int] = {}
+        self._pending: _Pending | None = None
+        self.bucket_keys: set[tuple[int, int]] = set()
+        self.recompile_count = 0  # batches that triggered any XLA compile
+        self.batches = 0
+
+    # ------------------------------------------------------------------ #
+    def _commit(self, host: HostSnapshot) -> PropagationProblem:
+        """Stage a host snapshot into the persistent device buffers."""
+        key = host.bucket_key
+        new = PropagationProblem(
+            nbr=jnp.asarray(host.nbr),
+            wgt=jnp.asarray(host.wgt),
+            wl0=jnp.asarray(host.wl0),
+            wl1=jnp.asarray(host.wl1),
+            valid=jnp.asarray(host.valid),
+        )
+        slots = self._buffers.setdefault(key, [None, None])
+        gen = self._gen.get(key, 1) ^ 1
+        self._gen[key] = gen
+        if slots[gen] is not None and ops.on_tpu():
+            # ``slots[gen]`` last served batch t-2, whose solve has been
+            # drained — safe to donate its storage to this snapshot so the
+            # device arena stays flat across the stream.  Donation is a
+            # no-op on CPU, where the extra copy would be pure overhead,
+            # so there we simply swap the slot and drop the old arrays.
+            new = _adopt(slots[gen], new)
+        slots[gen] = new
+        self.bucket_keys.add(key)
+        return new
+
+    # ------------------------------------------------------------------ #
+    def submit(self, batch: BatchUpdate) -> StreamStats | None:
+        """Apply Δ_t, stage it, launch its solve; returns the now-complete
+        stats of the PREVIOUS batch (None on the first call)."""
+        t0 = time.perf_counter()
+        g = self.graph
+
+        # ---- Step 1: change adjustment & sparsification (host) ----
+        effect = g.apply_batch(batch, tau=self.tau)
+        m = len(effect.new_ids)
+
+        # ---- stage batch-t topology while batch t-1 still propagates ----
+        host = build_host_problem(g, max_degree=self.max_degree,
+                                  auto_bucket=True)
+        problem = self._commit(host)
+        u = len(host.unl_ids)
+        u_pad = len(host.valid)
+        frontier = np.zeros(u_pad, bool)
+        aff_rows = host.remap[effect.affected]
+        frontier[aff_rows[aff_rows >= 0]] = True
+        frontier_dev = jnp.asarray(frontier)
+
+        # ---- Step 2: supernode label initialization (host wl0/wl1) ----
+        n_components = 0
+        new_unl = effect.new_ids[g.labels[effect.new_ids] == UNLABELED]
+        if m and len(new_unl):
+            comp_local = gprime_components(effect, m)
+            local_idx = new_unl - effect.new_ids[0]
+            comp = compact_labels(jnp.asarray(comp_local))[local_idx]
+            n_components = int(jnp.max(comp) + 1) if len(local_idx) else 0
+            rows = host.remap[new_unl]
+            f_init = supernode_init(
+                comp, jnp.asarray(host.wl0[rows]), jnp.asarray(host.wl1[rows]),
+                num_segments=max(m, 1))
+            g.f[new_unl] = np.asarray(f_init)
+
+        # ---- drain batch t-1 (first moment its result is truly needed:
+        # f0 below reads the propagated labels) ----
+        prev = self.drain()
+
+        # ---- Step 3: launch this batch's solve (async) ----
+        f0 = np.full(u_pad, 0.5, np.float32)
+        f0[:u] = g.f[host.unl_ids]
+        before = ops.compile_cache_size()
+        res = ops.run_propagation(
+            problem, jnp.asarray(f0), frontier_dev,
+            delta=self.delta, max_iters=self.max_iters,
+            backend=self.backend, block_rows=self.block_rows,
+            interpret=self.interpret, donate=True,
+        )
+        recompiled = ops.compile_cache_size() > before
+        self.recompile_count += recompiled
+        self.batches += 1
+        self._pending = _Pending(
+            res=res, unl_ids=host.unl_ids, t0=t0,
+            num_components=n_components, frontier_size=int(frontier.sum()),
+            bucket=host.bucket_key, recompiled=recompiled,
+        )
+        return prev
+
+    # ------------------------------------------------------------------ #
+    def drain(self) -> StreamStats | None:
+        """Block on the in-flight solve and fold its labels back into the
+        host graph; returns its stats (None if nothing is pending)."""
+        p, self._pending = self._pending, None
+        if p is None:
+            return None
+        f = np.asarray(p.res.f)  # synchronizes
+        self.graph.f[p.unl_ids] = f[: len(p.unl_ids)]
+        return StreamStats(
+            iterations=int(p.res.iterations),
+            converged=bool(p.res.converged),
+            num_components=p.num_components,
+            frontier_size=p.frontier_size,
+            num_unlabeled=len(p.unl_ids),
+            wall_ms=(time.perf_counter() - p.t0) * 1e3,
+            max_residual=float(p.res.max_residual),
+            bucket=p.bucket,
+            recompiled=p.recompiled,
+        )
+
+    # ------------------------------------------------------------------ #
+    def step(self, batch: BatchUpdate) -> StreamStats:
+        """Synchronous Δ_t update — ``DynLP.step`` semantics, amortized
+        compile.  Use ``submit``/``drain`` directly to pipeline batches."""
+        self.submit(batch)
+        return self.drain()
+
+    # ------------------------------------------------------------------ #
+    def predictions(self, cutoff: float = 0.5) -> tuple[np.ndarray, np.ndarray]:
+        """(global ids, binary predictions) for alive unlabeled vertices."""
+        g = self.graph
+        ids = np.flatnonzero(g.alive & (g.labels == UNLABELED))
+        return ids, (g.f[ids] >= cutoff).astype(np.int8)

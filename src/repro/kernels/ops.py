@@ -1,26 +1,95 @@
-"""Jit'd public wrappers for the Pallas kernels.
+"""Kernel dispatch layer — one entry point for every propagation backend.
 
-``interpret`` defaults to True off-TPU (this container validates kernel
-bodies on CPU); on a real TPU backend pass ``interpret=False`` to compile
-through Mosaic.  ``propagate_pallas`` is a drop-in replacement for
-``core.propagate.propagate`` built on the fused kernel.
+``run_propagation(problem, f0, frontier0, ...)`` routes a DynLP Step-3
+solve to one of three interchangeable implementations:
+
+  * ``"ref"``        — the XLA reference engine (``core.propagate``), the
+                       right answer on CPU and the allclose oracle
+                       everywhere else.
+  * ``"ell_pallas"`` — the fused ELL Pallas kernel loop
+                       (``propagate_pallas``): VPU path on TPU, interpret
+                       mode off-TPU.
+  * ``"bsr"``        — block-sparse MXU path: the neighbor aggregation runs
+                       as ``bsr_spmv`` over a component-reordered
+                       block-dense matrix.  Opt-in (never chosen by
+                       ``"auto"``) because densification is O(U²) on the
+                       host.
+
+``backend="auto"`` picks by hardware + problem shape: ``ell_pallas`` on
+TPU (``ref`` for tiny problems where kernel-launch overhead dominates),
+``ref`` otherwise; the ``REPRO_BACKEND`` environment variable replaces
+the *auto* default for fleet-wide flips without code changes (an
+explicitly passed backend still wins).  ``interpret`` defaults to True
+off-TPU, so Pallas backends *degrade to the interpreter instead of
+crashing* in TPU-less environments (CI, laptops).
+
+``donate=True`` routes through jit wrappers that donate the ``f0`` /
+``frontier0`` buffers — the streaming engine feeds freshly staged device
+arrays every Δ_t and lets XLA recycle them in place rather than allocate
+per batch.  ``compile_cache_size()`` exposes the summed jit-cache entry
+count of every propagation entry point: the streaming tests assert it
+stays ≤ the shape-bucket ladder size (compile-once contract).
 """
 
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core.propagate import PropagateResult, PropagationProblem
+from repro.core.propagate import PropagateResult, PropagationProblem, propagate
 from repro.kernels.bsr_spmv import bsr_spmv, dense_to_bsr  # noqa: F401
 from repro.kernels.cc_hook import cc_hook_step, connected_components_pallas  # noqa: F401
 from repro.kernels.ell_propagate import ell_propagate_step
 
+BACKENDS = ("ref", "ell_pallas", "bsr")
+
+# BSR densifies (U, U) on the host — refuse silly sizes.
+_BSR_MAX_ROWS = 8192
+
 
 def on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+# Below this row count the fused kernel's launch overhead beats the work
+# saved; auto selection keeps such problems on the XLA reference path.
+# Must exceed the 256-row bucket floor (core.snapshot.bucket): the count
+# seen here is the padded one, so a smaller threshold would never fire.
+_PALLAS_MIN_ROWS = 512
+
+
+def select_backend(backend: str | None = None,
+                   problem: PropagationProblem | None = None) -> str:
+    """Resolve ``backend`` (None/"auto" → hardware + shape, env override).
+
+    Selection rules: an explicit backend wins; the ``REPRO_BACKEND`` env
+    var replaces the "auto" default; auto gives TPU the fused ELL kernel
+    (unless ``problem`` is too small to amortize a kernel launch) and
+    everything else the XLA reference.  ``bsr`` pays an O(U²) host
+    densification, so it is only honored for problems within the BSR row
+    cap: explicitly passing ``backend="bsr"`` with a bigger problem
+    raises, while the fleet-wide env hint falls back to ``ref``.
+    """
+    from_env = False
+    if backend in (None, "auto"):
+        env = os.environ.get("REPRO_BACKEND", "auto")
+        from_env = env != "auto"
+        backend = env
+    if backend == "auto":
+        backend = "ell_pallas" if on_tpu() else "ref"
+        if (backend == "ell_pallas" and problem is not None
+                and problem.num_unlabeled < _PALLAS_MIN_ROWS):
+            backend = "ref"
+    if (from_env and backend == "bsr" and problem is not None
+            and problem.num_unlabeled > _BSR_MAX_ROWS):
+        backend = "ref"
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; want one of {BACKENDS}")
+    return backend
 
 
 def _pad_rows(problem: PropagationProblem, block_rows: int):
@@ -81,3 +150,164 @@ def propagate_pallas(
     return PropagateResult(
         f=f[:n_orig], iterations=iters, converged=~frontier.any(),
         max_residual=resid)
+
+
+# --------------------------------------------------------------------- #
+# BSR / MXU path
+# --------------------------------------------------------------------- #
+@functools.partial(jax.jit, static_argnames=("max_iters", "interpret"))
+def _bsr_loop(blocks, block_cols, nbr, wl1, wall, valid, f0, frontier0,
+              delta, max_iters, interpret):
+    mask = nbr >= 0
+    idx = jnp.where(mask, nbr, 0)
+    delta = jnp.asarray(delta, jnp.float32)
+
+    def cond(state):
+        _, frontier, it, _ = state
+        return jnp.logical_and(frontier.any(), it < max_iters)
+
+    def body(state):
+        f, frontier, it, _ = state
+        # F'_u = (Σ_v w(u,v)·F_v + wl1_u) / Wall_u — §5's weighted average,
+        # with the neighbor sum as a block-sparse matvec on the MXU.
+        y = bsr_spmv(blocks, block_cols, f, interpret=interpret)[: f.shape[0]]
+        f_all = jnp.where(wall > 0, (y + wl1) / jnp.maximum(wall, 1e-30), f)
+        f_new = jnp.where(frontier & valid, f_all, f)
+        resid = jnp.abs(f_new - f)
+        changed = (resid > delta) & valid
+        nbr_changed = jnp.any(changed[idx] & mask, axis=1)
+        new_frontier = (changed | nbr_changed) & valid
+        return f_new, new_frontier, it + 1, jnp.max(resid, initial=0.0)
+
+    f, frontier, iters, resid = jax.lax.while_loop(
+        cond, body, (f0, frontier0 & valid, jnp.int32(0), jnp.float32(0)))
+    return PropagateResult(
+        f=f, iterations=iters, converged=~frontier.any(), max_residual=resid)
+
+
+def propagate_bsr(
+    problem: PropagationProblem,
+    f0: jax.Array,
+    frontier0: jax.Array,
+    delta: float = 1e-4,
+    max_iters: int = 100_000,
+    block_size: int = 8,
+    interpret: bool | None = None,
+) -> PropagateResult:
+    """Frontier propagation with the aggregation as a BSR SpMV (MXU path).
+
+    Builds the row-padded BSR form of the unlabeled↔unlabeled weight matrix
+    on the host (O(U²) densification — callers reorder by connected
+    component first so the tiles are dense).  Only sensible when chosen
+    explicitly; see ``select_backend``.
+    """
+    if interpret is None:
+        interpret = not on_tpu()
+    n = problem.num_unlabeled
+    if n > _BSR_MAX_ROWS:
+        raise ValueError(
+            f"bsr backend densifies (U, U): U={n} > {_BSR_MAX_ROWS}; "
+            "use backend='ref' or 'ell_pallas'")
+    pad = (-n) % block_size
+    nbr = np.asarray(problem.nbr)
+    wgt = np.asarray(problem.wgt)
+    m = n + pad
+    dense = np.zeros((m, m), np.float32)
+    rows = np.repeat(np.arange(n), nbr.shape[1])
+    cols = nbr.reshape(-1)
+    keep = cols >= 0
+    dense[rows[keep], cols[keep]] = wgt.reshape(-1)[keep]
+    blocks, block_cols = dense_to_bsr(jnp.asarray(dense), block_size)
+
+    zpad = lambda x, v=0: jnp.pad(x, (0, pad), constant_values=v)
+    wall = problem.wall()  # wl0 only enters through the wall normalizer
+    res = _bsr_loop(
+        blocks, block_cols,
+        jnp.pad(problem.nbr, ((0, pad), (0, 0)), constant_values=-1),
+        zpad(problem.wl1), zpad(wall),
+        zpad(problem.valid, False),
+        zpad(f0.astype(jnp.float32)), zpad(frontier0, False),
+        delta, max_iters=max_iters, interpret=interpret)
+    return PropagateResult(
+        f=res.f[:n], iterations=res.iterations, converged=res.converged,
+        max_residual=res.max_residual)
+
+
+# --------------------------------------------------------------------- #
+# Donating wrappers (streaming path): the f0 buffer is consumed and its
+# storage recycled by XLA across Δ_t.  (frontier0 stays undonated: its
+# bool[U] shape has no matching output to alias.)
+# --------------------------------------------------------------------- #
+@functools.partial(jax.jit, static_argnames=("max_iters",),
+                   donate_argnums=(1,))
+def _ref_donating(problem, f0, frontier0, delta, max_iters):
+    return propagate(problem, f0, frontier0, delta=delta, max_iters=max_iters)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("max_iters", "block_rows", "interpret"),
+                   donate_argnums=(1,))
+def _pallas_donating(problem, f0, frontier0, delta, max_iters, block_rows,
+                     interpret):
+    return propagate_pallas(problem, f0, frontier0, delta=delta,
+                            max_iters=max_iters, block_rows=block_rows,
+                            interpret=interpret)
+
+
+def run_propagation(
+    problem: PropagationProblem,
+    f0: jax.Array,
+    frontier0: jax.Array,
+    *,
+    delta: float | jax.Array = 1e-4,
+    max_iters: int = 100_000,
+    backend: str | None = None,
+    block_rows: int = 512,
+    interpret: bool | None = None,
+    donate: bool = False,
+) -> PropagateResult:
+    """Single propagation entry point — see module docstring for routing."""
+    backend = select_backend(backend, problem)
+    if backend == "ref":
+        if donate:
+            return _ref_donating(problem, f0, frontier0, delta, max_iters)
+        return propagate(problem, f0, frontier0, delta=delta,
+                         max_iters=max_iters)
+    if backend == "ell_pallas":
+        if interpret is None:
+            interpret = not on_tpu()
+        block_rows = min(block_rows, problem.num_unlabeled)
+        if donate:
+            return _pallas_donating(problem, f0, frontier0, delta, max_iters,
+                                    block_rows, interpret)
+        return propagate_pallas(problem, f0, frontier0, delta=delta,
+                                max_iters=max_iters, block_rows=block_rows,
+                                interpret=interpret)
+    return propagate_bsr(problem, f0, frontier0, delta=delta,
+                         max_iters=max_iters, interpret=interpret)
+
+
+_CACHED_ENTRY_POINTS = (
+    lambda: propagate,
+    lambda: propagate_pallas,
+    lambda: _ref_donating,
+    lambda: _pallas_donating,
+    lambda: _bsr_loop,
+)
+
+
+def compile_cache_size() -> int:
+    """Total jit-cache entries across every propagation entry point.
+
+    Each entry is one (shapes, statics) specialization, i.e. one compile.
+    Sampled before/after a stream, the delta is the stream's recompile
+    count — the number the bucket ladder is designed to bound.
+    """
+    total = 0
+    for get in _CACHED_ENTRY_POINTS:
+        fn = get()
+        try:
+            total += fn._cache_size()
+        except AttributeError:  # pragma: no cover — future jax rename
+            pass
+    return total

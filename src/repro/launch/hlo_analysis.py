@@ -114,10 +114,14 @@ def _dot_flops(line: str, table: dict[str, str]) -> float:
     if not m:
         return 0.0
     out_elems = _shape_elems(m.group(2))
-    operands = [a.strip().lstrip("%") for a in m.group(3).split(",")]
     cm = _CONTRACT_RE.search(line)
-    lhs_ty = table.get(operands[0], "") if operands else ""
-    lhs_shapes = _SHAPE_RE.findall(lhs_ty)
+    # Some HLO printers carry operand types inline (``dot(f32[32,64]{1,0}
+    # %lhs, ...)``); others print bare names that need the symbol table.
+    lhs_shapes = _SHAPE_RE.findall(m.group(3))[:1]
+    if not lhs_shapes:
+        operands = [a.strip().lstrip("%") for a in m.group(3).split(",")]
+        lhs_ty = table.get(operands[0], "") if operands else ""
+        lhs_shapes = _SHAPE_RE.findall(lhs_ty)
     if cm is None or not lhs_shapes:
         return 2.0 * out_elems  # degenerate fallback
     lhs_dims = [int(d) for d in lhs_shapes[0][1].split(",") if d]

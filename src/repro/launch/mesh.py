@@ -16,12 +16,21 @@ HBM_BW = 819e9  # bytes/s per chip
 ICI_BW = 50e9  # bytes/s per link
 
 
+def make_mesh(shape, axes):
+    """Version-tolerant ``jax.make_mesh``: newer jax wants explicit
+    ``axis_types`` (``AxisType.Auto``) to opt out of sharding-in-types;
+    older jax (≤0.4.x) has neither the kwarg nor the enum."""
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+        )
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return make_mesh(shape, axes)
 
 
 def axis_rules(multi_pod: bool = False, layout: str = "tp") -> dict:

@@ -16,6 +16,7 @@ import numpy as np
 
 from repro.core.distributed import distributed_propagate
 from repro.core.propagate import propagate
+from repro.launch.mesh import make_mesh
 
 from helpers import random_problem
 
@@ -27,8 +28,7 @@ def test_distributed_matches_single_device_1dev():
     p = random_problem(rng, 96, 2)
     f0 = jnp.full((96,), 0.5)
     fr = jnp.ones(96, bool)
-    mesh = jax.make_mesh((1,), ("graph",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("graph",))
     res_d = distributed_propagate(p, f0, fr, mesh, delta=1e-5, max_iters=20_000)
     res_s = propagate(p, f0, fr, delta=1e-5, max_iters=20_000)
     assert int(res_d.iterations) == int(res_s.iterations)
@@ -44,14 +44,14 @@ SCRIPT = textwrap.dedent("""
     sys.path.insert(0, {tests!r})
     from repro.core.distributed import distributed_propagate
     from repro.core.propagate import propagate
+    from repro.launch.mesh import make_mesh
     from helpers import random_problem
 
     rng = np.random.default_rng(1)
     p = random_problem(rng, 200, 2)   # not a multiple of 8 -> padding path
     f0 = jnp.full((200,), 0.5)
     fr = jnp.ones(200, bool)
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((2, 4), ("data", "model"))
     res_d = distributed_propagate(p, f0, fr, mesh, delta=1e-5, max_iters=20000)
     res_s = propagate(p, f0, fr, delta=1e-5, max_iters=20000)
     assert int(res_d.iterations) == int(res_s.iterations), (

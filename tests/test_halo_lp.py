@@ -44,6 +44,7 @@ SCRIPT = textwrap.dedent("""
     from repro.core.distributed import distributed_propagate_halo
     from repro.core.propagate import propagate, PropagationProblem
     from repro.graph.partition import apply_plan, build_halo_plan, unapply_plan
+    from repro.launch.mesh import make_mesh
     from helpers import random_problem
 
     rng = np.random.default_rng(5)
@@ -60,8 +61,7 @@ SCRIPT = textwrap.dedent("""
     n_pad = len(plan.perm)
     f0 = jnp.full((n_pad,), 0.5)
     fr = jnp.asarray(apply_plan(plan, np.ones(n, bool)))
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((2, 4), ("data", "model"))
     res_h = distributed_propagate_halo(pp, f0, fr, mesh,
                                        export_max=plan.export_max, delta=1e-5)
     res_s = propagate(p, jnp.full((n,), 0.5), jnp.ones(n, bool), delta=1e-5)

@@ -45,6 +45,7 @@ def test_ell_propagate_matches_ref(n, k, block_rows):
     np.testing.assert_array_equal(np.asarray(got_ch), np.asarray(want_ch))
 
 
+@pytest.mark.slow
 @given(st.integers(0, 1_000))
 @settings(max_examples=10, deadline=None)
 def test_ell_propagate_property(seed):

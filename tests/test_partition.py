@@ -7,6 +7,7 @@ import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.distribution import partition
+from repro.launch.mesh import make_mesh
 
 
 @pytest.fixture(autouse=True)
@@ -81,8 +82,7 @@ def test_resolve_spec_shift_right():
 
 
 def test_shard_divisibility_aware():
-    mesh = jax.make_mesh((1,), ("model",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("model",))
     partition.set_axis_rules({"tp": "model", "dp": None})
     partition.set_mesh_sizes({"model": 1})
     x = jnp.zeros((4, 6))

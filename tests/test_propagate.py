@@ -2,6 +2,7 @@
 
 import jax.numpy as jnp
 import numpy as np
+import pytest
 from hypothesis import given, strategies as st
 
 from repro.core.propagate import (
@@ -17,6 +18,7 @@ from repro.graph.structures import PAD
 from helpers import random_problem
 
 
+@pytest.mark.slow
 @given(st.integers(0, 10_000), st.integers(2, 50))
 def test_update_equals_weighted_average(seed, n):
     """§5 equivalence: T(F)_u = Σ α_uv F_v regardless of the current F_u."""
@@ -39,6 +41,7 @@ def test_update_equals_weighted_average(seed, n):
         np.testing.assert_allclose(got[u], avg / wall, rtol=1e-5, atol=1e-6)
 
 
+@pytest.mark.slow
 @given(st.integers(0, 10_000), st.integers(2, 40))
 def test_maximum_principle(seed, n):
     """Harmonic updates keep labels inside [0, 1] (convexity of averaging)."""
@@ -51,6 +54,7 @@ def test_maximum_principle(seed, n):
         assert np.all(np.asarray(f) <= 1 + 1e-6)
 
 
+@pytest.mark.slow
 @given(st.integers(0, 10_000), st.integers(3, 30))
 def test_converges_to_harmonic_solution(seed, n):
     """Corollary 1: iteration reaches the closed-form −L_UU⁻¹ L_UL F_L."""
@@ -62,6 +66,7 @@ def test_converges_to_harmonic_solution(seed, n):
     assert float(harmonic_residual(p, res.f)) < 1e-5
 
 
+@pytest.mark.slow
 @given(st.integers(0, 10_000), st.integers(3, 30))
 def test_frontier_matches_full_propagation(seed, n):
     """Frontier-restricted DynLP step reaches the same fixpoint as dense ITLP

@@ -8,6 +8,7 @@ import numpy as np
 import pytest
 
 from repro.checkpoint import manager as ckpt
+from repro.launch.mesh import make_mesh
 from repro.training import optim
 from repro.training.resilience import (
     StragglerMonitor,
@@ -120,8 +121,7 @@ def test_elastic_restore_across_meshes(tmp_path):
     """Save once, restore under a different sharding (elastic resume)."""
     t = {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8)}
     ckpt.save(str(tmp_path), 1, t)
-    mesh = jax.make_mesh((1,), ("x",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("x",))
     sh = {"w": jax.sharding.NamedSharding(
         mesh, jax.sharding.PartitionSpec("x", None))}
     got = ckpt.restore(str(tmp_path), 1, t, shardings=sh)

@@ -26,6 +26,7 @@ def _ssd_seq_ref(la, q, k, v):
     return np.stack(ys, 1), st_
 
 
+@pytest.mark.slow
 @given(st.integers(0, 10_000), st.sampled_from([2, 4, 8, 16]))
 @settings(max_examples=12, deadline=None)
 def test_ssd_chunked_matches_sequential(seed, chunk):
@@ -65,6 +66,7 @@ def test_ssd_state_carry_across_calls():
                                rtol=1e-4, atol=1e-4)
 
 
+@pytest.mark.slow
 @given(st.integers(0, 10_000), st.sampled_from([4, 8, 16]))
 @settings(max_examples=10, deadline=None)
 def test_mlstm_chunked_matches_decode_chain(seed, chunk):

@@ -1,0 +1,169 @@
+"""Compile-once streaming engine: recompile bound, DynLP parity, churn."""
+
+import numpy as np
+import pytest
+
+from repro.core.dynlp import DynLP
+from repro.core.snapshot import bucket, bucket_k, ladder_size
+from repro.core.stream import StreamEngine
+from repro.data.synth import StreamSpec, gaussian_mixture_stream
+from repro.graph.dynamic import UNLABELED, BatchUpdate, DynamicGraph
+
+SPEC_30 = StreamSpec(total_vertices=1800, batch_size=60, seed=5,
+                     class_sep=6.0, noise=0.9)
+
+
+def test_bucket_ladders_are_bounded():
+    assert bucket(1) == 256 and bucket(256) == 256 and bucket(257) > 256
+    # K: multiples of 8 in the dense regime, doubling past 64
+    assert bucket_k(1) == 8 and bucket_k(8) == 8 and bucket_k(9) == 16
+    assert bucket_k(33) == 40 and bucket_k(64) == 64
+    assert bucket_k(65) == 128 and bucket_k(200) == 256
+    # ladder stays small and independent of the batch count
+    assert ladder_size(2000, 64) <= 80
+    assert ladder_size(100_000, 512) <= 26 * 11
+
+
+def test_stream_recompile_count_bounded():
+    """(a) 30-batch stream: compiles ≤ bucket-ladder size, not ~30."""
+    g = DynamicGraph(emb_dim=SPEC_30.emb_dim, k=5)
+    eng = StreamEngine(g, delta=1e-4)
+    for batch, _ in gaussian_mixture_stream(SPEC_30):
+        eng.step(batch)
+    max_k = max(k for _, k in eng.bucket_keys)
+    assert eng.batches == 30
+    bound = ladder_size(SPEC_30.total_vertices + 256, max_k)
+    assert eng.recompile_count <= bound
+    # tighter: one compile burst per distinct shape actually seen
+    assert eng.recompile_count <= len(eng.bucket_keys)
+    # and the ladder itself stayed sublinear in the batch count
+    assert len(eng.bucket_keys) <= eng.batches // 2
+
+
+def test_stream_matches_fresh_dynlp_per_batch():
+    """(b) streamed labels ≡ fresh per-batch DynLP.step results."""
+    spec = StreamSpec(total_vertices=900, batch_size=90, seed=7,
+                      class_sep=6.0, noise=0.9)
+    g_s = DynamicGraph(emb_dim=spec.emb_dim, k=5)
+    g_d = DynamicGraph(emb_dim=spec.emb_dim, k=5)
+    eng = StreamEngine(g_s, delta=1e-4)
+    dyn = DynLP(g_d, delta=1e-4)
+    for i, (batch, _) in enumerate(gaussian_mixture_stream(spec)):
+        s_s = eng.step(batch)
+        s_d = dyn.step(batch)
+        assert s_s.iterations == s_d.iterations, f"batch {i}"
+        assert s_s.num_unlabeled == s_d.num_unlabeled
+        np.testing.assert_allclose(g_s.f, g_d.f, atol=1e-5,
+                                   err_msg=f"batch {i}")
+    assert s_s.converged
+
+
+def test_stream_pipelined_submit_drain_matches_step():
+    """submit/drain (overlapped staging) reaches the same labels as step."""
+    spec = StreamSpec(total_vertices=600, batch_size=60, seed=3,
+                      class_sep=6.0, noise=0.9)
+    g1 = DynamicGraph(emb_dim=spec.emb_dim, k=5)
+    g2 = DynamicGraph(emb_dim=spec.emb_dim, k=5)
+    piped = StreamEngine(g1, delta=1e-4)
+    sync = StreamEngine(g2, delta=1e-4)
+    stats = []
+    for batch, _ in gaussian_mixture_stream(spec):
+        prev = piped.submit(batch)  # drains t-1 internally
+        if prev is not None:
+            stats.append(prev)
+        sync.step(batch)
+    last = piped.drain()
+    assert last is not None
+    stats.append(last)
+    assert len(stats) == piped.batches
+    assert all(s.converged for s in stats)
+    np.testing.assert_allclose(g1.f, g2.f, atol=1e-6)
+
+
+def test_stream_deletes_and_inserts_roundtrip():
+    """(c) deletions + inserts in the SAME Δ_t round-trip through the
+    donated buffers: a hostile cluster is swapped for friendly vertices in
+    one batch and the labels recover."""
+    rng = np.random.default_rng(0)
+    g = DynamicGraph(emb_dim=4, k=3)
+    eng = StreamEngine(g, delta=1e-5)
+
+    anchors = np.array([[1, 0, 0, 0], [-1, 0, 0, 0]], np.float32)
+    cloud = rng.normal([1, 0, 0, 0], 0.1, (30, 4)).astype(np.float32)
+    eng.step(BatchUpdate(
+        ins_emb=np.concatenate([anchors, cloud]),
+        ins_labels=np.array([1, 0] + [UNLABELED] * 30, np.int8),
+        del_ids=np.zeros(0, np.int64)))
+    ids = np.flatnonzero(g.alive & (g.labels == UNLABELED))
+    assert (g.f[ids] > 0.5).all()
+
+    hostile = rng.normal([-0.6, 0, 0, 0], 0.1, (40, 4)).astype(np.float32)
+    eng.step(BatchUpdate(ins_emb=hostile,
+                         ins_labels=np.full(40, UNLABELED, np.int8),
+                         del_ids=np.zeros(0, np.int64)))
+    hostile_ids = np.arange(32, 72)
+    assert g.f[hostile_ids].mean() < 0.5
+
+    # one Δ_t: delete the hostile cluster AND insert a friendly one
+    friendly = rng.normal([0.9, 0, 0, 0], 0.1, (10, 4)).astype(np.float32)
+    st = eng.step(BatchUpdate(ins_emb=friendly,
+                              ins_labels=np.full(10, UNLABELED, np.int8),
+                              del_ids=hostile_ids))
+    assert st.converged
+    assert not g.alive[hostile_ids].any()
+    ids = np.flatnonzero(g.alive & (g.labels == UNLABELED))
+    assert (g.f[ids] > 0.5).all()
+
+    # same Δ_t sequence through fresh per-batch DynLP agrees
+    g2 = DynamicGraph(emb_dim=4, k=3)
+    dyn = DynLP(g2, delta=1e-5)
+    rng2 = np.random.default_rng(0)
+    anchors2 = np.array([[1, 0, 0, 0], [-1, 0, 0, 0]], np.float32)
+    cloud2 = rng2.normal([1, 0, 0, 0], 0.1, (30, 4)).astype(np.float32)
+    dyn.step(BatchUpdate(
+        ins_emb=np.concatenate([anchors2, cloud2]),
+        ins_labels=np.array([1, 0] + [UNLABELED] * 30, np.int8),
+        del_ids=np.zeros(0, np.int64)))
+    hostile2 = rng2.normal([-0.6, 0, 0, 0], 0.1, (40, 4)).astype(np.float32)
+    dyn.step(BatchUpdate(ins_emb=hostile2,
+                         ins_labels=np.full(40, UNLABELED, np.int8),
+                         del_ids=np.zeros(0, np.int64)))
+    friendly2 = rng2.normal([0.9, 0, 0, 0], 0.1, (10, 4)).astype(np.float32)
+    dyn.step(BatchUpdate(ins_emb=friendly2,
+                         ins_labels=np.full(10, UNLABELED, np.int8),
+                         del_ids=hostile_ids))
+    np.testing.assert_allclose(g.f, g2.f, atol=1e-6)
+
+
+def test_stream_deletion_only_batch():
+    """A Δ_t with zero insertions reuses buffers and still propagates."""
+    spec = StreamSpec(total_vertices=300, batch_size=300, seed=9,
+                      class_sep=6.0, noise=0.9)
+    g = DynamicGraph(emb_dim=spec.emb_dim, k=5)
+    eng = StreamEngine(g, delta=1e-4)
+    for batch, _ in gaussian_mixture_stream(spec):
+        eng.step(batch)
+    victims = np.flatnonzero(g.alive)[:50].astype(np.int64)
+    st = eng.step(BatchUpdate(
+        ins_emb=np.zeros((0, spec.emb_dim), np.float32),
+        ins_labels=np.zeros(0, np.int8), del_ids=victims))
+    assert st.converged
+    assert not g.alive[victims].any()
+
+
+@pytest.mark.parametrize("backend", ["ref", "ell_pallas", "bsr"])
+def test_stream_backend_dispatch(backend):
+    """The engine reaches the same labels through every backend."""
+    spec = StreamSpec(total_vertices=200, batch_size=100, seed=4,
+                      class_sep=6.0, noise=0.9)
+    fs = {}
+    for b in ("ref", backend):
+        g = DynamicGraph(emb_dim=spec.emb_dim, k=5)
+        eng = StreamEngine(g, delta=1e-4, backend=b, block_rows=64)
+        for batch, _ in gaussian_mixture_stream(spec):
+            eng.step(batch)
+        fs[b] = g.f.copy()
+    # bsr sums edges in block order, so residuals near the δ threshold can
+    # differ by O(δ); the other backends are bit-compatible with ref
+    atol = 2e-3 if backend == "bsr" else 1e-5
+    np.testing.assert_allclose(fs[backend], fs["ref"], atol=atol)
