@@ -15,18 +15,37 @@ two insert/delete mixes) through
                             honest as a third arm so the headline is not
                             only measured against the worst case.
 
+When more than one device is visible a fourth arm runs: ``StreamEngine``
+with a flat mesh over every local device (the ``core.distributed``
+all-gather transport) — sharded vs single-device per-batch wall ms on the
+same stream.  Set ``REPRO_FORCE_HOST_DEVICES=8`` to force an 8-virtual-
+device CPU mesh (must be decided before jax initializes, hence the env
+hook below); the CI benchmark-smoke job does exactly this.
+
 Per config it records recompile counts, per-batch wall ms, and batches/sec
 into ``BENCH_stream.json`` (repo root / cwd).  Acceptance target: median
 per-batch speedup ≥ 3x vs the naive rebuild on CPU with streamed
-recompiles ≤ the bucket-ladder size.
+recompiles ≤ the bucket-ladder size (``--check`` turns the bound into a
+hard assert; ``--tiny`` shrinks the streams for CI smoke runs).
 """
 
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import statistics
 import time
+
+# Must run before jax initializes: virtual CPU devices for the sharded arm.
+_force = os.environ.get("REPRO_FORCE_HOST_DEVICES")
+if _force:
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={_force}"
+    ).strip()
+
+import jax
 
 from repro.core.dynlp import DynLP
 from repro.core.snapshot import ladder_size
@@ -34,6 +53,7 @@ from repro.core.stream import StreamEngine
 from repro.data.synth import StreamSpec, gaussian_mixture_stream
 from repro.graph.dynamic import DynamicGraph
 from repro.kernels import ops
+from repro.launch.mesh import make_stream_mesh
 
 OUT = "BENCH_stream.json"
 
@@ -54,9 +74,9 @@ CONFIGS = {
 }
 
 
-def _run_streamed(spec: StreamSpec) -> dict:
+def _run_streamed(spec: StreamSpec, mesh=None) -> dict:
     g = DynamicGraph(emb_dim=spec.emb_dim, k=5)
-    eng = StreamEngine(g, delta=DELTA)
+    eng = StreamEngine(g, delta=DELTA, mesh=mesh)
     stats = []
     marks = [time.perf_counter()]
     for batch, _ in gaussian_mixture_stream(spec):
@@ -73,7 +93,7 @@ def _run_streamed(spec: StreamSpec) -> dict:
     final_drain = per_batch_ms.pop()  # fold the final drain into batch N
     per_batch_ms[-1] += final_drain
     max_k = max(k for _, k in eng.bucket_keys)
-    return {
+    out = {
         "per_batch_ms": [round(ms, 3) for ms in per_batch_ms],
         "median_ms": statistics.median(per_batch_ms),
         "total_s": sum(per_batch_ms) / 1e3,
@@ -84,6 +104,10 @@ def _run_streamed(spec: StreamSpec) -> dict:
         "ladder_bound": ladder_size(spec.total_vertices + 256, max_k),
         "iterations": sum(s.iterations for s in stats),
     }
+    if mesh is not None:
+        out["mesh_devices"] = int(mesh.devices.size)
+        out["plan_builds"] = eng.plan_builds
+    return out
 
 
 def _run_dynlp(spec: StreamSpec, auto_bucket: bool) -> dict:
@@ -107,11 +131,20 @@ def _run_dynlp(spec: StreamSpec, auto_bucket: bool) -> dict:
     }
 
 
-def main(full: bool = False, out: str = OUT) -> dict:
-    results = {"backend_auto_resolves_to": ops.select_backend("auto")}
+def main(full: bool = False, out: str = OUT, tiny: bool = False,
+         check: bool = False) -> dict:
+    n_dev = len(jax.devices())
+    mesh = make_stream_mesh() if n_dev > 1 else None
+    results = {
+        "backend_auto_resolves_to": ops.select_backend("auto"),
+        "devices": n_dev,
+        "sharded_arm": mesh is not None,
+    }
     for name, kw in CONFIGS.items():
         if full:
             kw = dict(kw, total_vertices=kw["total_vertices"] * 2)
+        if tiny:  # CI smoke: a few rungs, seconds not minutes
+            kw = dict(kw, total_vertices=600, batch_size=60)
         spec = StreamSpec(**kw)
         naive = _run_dynlp(spec, auto_bucket=False)
         bucketed = _run_dynlp(spec, auto_bucket=True)
@@ -135,6 +168,26 @@ def main(full: bool = False, out: str = OUT) -> dict:
               f"median speedup {speedup:.1f}x vs naive, "
               f"{speedup_b:.1f}x vs bucketed DynLP "
               f"({bucketed['recompiles']} recompiles)")
+        arms = {"stream": streamed}
+        if mesh is not None:
+            sharded = _run_streamed(spec, mesh=mesh)
+            results[name]["stream_sharded"] = sharded
+            results[name]["sharded_vs_single_device_median_ms"] = [
+                round(sharded["median_ms"], 3), round(streamed["median_ms"], 3)]
+            arms["stream_sharded"] = sharded
+            print(f"{name}: sharded({sharded['mesh_devices']} dev) "
+                  f"{sharded['median_ms']:.1f} ms/batch vs single-device "
+                  f"{streamed['median_ms']:.1f} ms/batch | "
+                  f"{sharded['plan_builds']} plans for "
+                  f"{len(sharded['bucket_keys'])} rungs, "
+                  f"{sharded['recompiles']} recompiles")
+        if check:  # the compile-once contract, as a hard gate
+            for arm, r in arms.items():
+                assert r["recompiles"] <= r["ladder_bound"], (
+                    name, arm, r["recompiles"], r["ladder_bound"])
+            if mesh is not None:
+                assert sharded["plan_builds"] <= len(sharded["bucket_keys"]), (
+                    name, sharded["plan_builds"], sharded["bucket_keys"])
     with open(out, "w") as fh:
         json.dump(results, fh, indent=2)
     print(f"wrote {os.path.abspath(out)}")
@@ -142,4 +195,14 @@ def main(full: bool = False, out: str = OUT) -> dict:
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--full", action="store_true",
+                    help="2x vertices per config")
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: 600-vertex streams")
+    ap.add_argument("--check", action="store_true",
+                    help="assert recompiles <= bucket-ladder bound "
+                         "(and plan reuse on the sharded arm)")
+    ap.add_argument("--out", default=OUT, help="output JSON path")
+    args = ap.parse_args()
+    main(full=args.full, out=args.out, tiny=args.tiny, check=args.check)

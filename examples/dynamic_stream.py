@@ -9,9 +9,10 @@
 2. Streams 30 batches through ``submit``/``drain`` (host staging of batch
    t+1 overlaps device propagation of batch t) and prints the recompile
    count vs. the batch count — the bucket ladder keeps it logarithmic.
-3. Runs the SAME propagation vertex-partitioned over a multi-device mesh
-   (shard_map) in a subprocess with 8 virtual CPU devices and checks it
-   reproduces the single-device labels bit-for-bit in iteration count.
+3. Runs the SAME stream mesh-sharded (``StreamEngine(mesh=...)``: every
+   bucket's rows vertex-partitioned via shard_map) in a subprocess with
+   8 virtual CPU devices and checks the labels are bit-identical to the
+   single-device engine, with partition plans reused per ladder rung.
 """
 
 import os
@@ -84,36 +85,34 @@ def streaming_demo():
 DIST = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    import jax, jax.numpy as jnp, numpy as np, sys
+    import numpy as np, sys
     sys.path.insert(0, {src!r})
-    from repro.core.distributed import distributed_propagate
-    from repro.launch.mesh import make_mesh
-    from repro.core.propagate import propagate, PropagationProblem
-    from repro.core.snapshot import build_problem
+    from repro.core.stream import StreamEngine
     from repro.data.synth import StreamSpec, gaussian_mixture_stream
     from repro.graph.dynamic import DynamicGraph
+    from repro.launch.mesh import make_stream_mesh
 
-    spec = StreamSpec(total_vertices=2000, batch_size=2000, seed=3,
-                      class_sep=6.0, noise=0.9)
-    g = DynamicGraph(emb_dim=spec.emb_dim, k=5)
+    spec = StreamSpec(total_vertices=1200, batch_size=60, seed=3,
+                      class_sep=6.0, noise=0.9, frac_deleted=0.15,
+                      frac_unlabeled=0.84)
+    mesh = make_stream_mesh()  # flat mesh over the 8 virtual devices
+    g_m = DynamicGraph(emb_dim=spec.emb_dim, k=5)
+    g_s = DynamicGraph(emb_dim=spec.emb_dim, k=5)
+    eng_m = StreamEngine(g_m, delta=1e-4, mesh=mesh)
+    eng_s = StreamEngine(g_s, delta=1e-4)
     for batch, _ in gaussian_mixture_stream(spec):
-        g.apply_batch(batch)
-    snap = build_problem(g)
-    u = snap.problem.num_unlabeled
-    f0 = jnp.full((u,), 0.5); fr = jnp.ones(u, bool)
-    mesh = make_mesh((2, 4), ("data", "model"))
-    res_d = distributed_propagate(snap.problem, f0, fr, mesh, delta=1e-4)
-    res_s = propagate(snap.problem, f0, fr, delta=1e-4)
-    assert int(res_d.iterations) == int(res_s.iterations)
-    np.testing.assert_allclose(np.asarray(res_d.f), np.asarray(res_s.f),
-                               atol=1e-5)
-    print(f"   8-device shard_map LP: {{int(res_d.iterations)}} iterations, "
-          f"matches single-device bitwise-structurally")
+        eng_m.step(batch)
+        eng_s.step(batch)
+    assert np.array_equal(g_m.f, g_s.f)
+    print(f"   {{mesh.devices.size}}-device sharded stream: "
+          f"{{eng_m.batches}} batches, labels bit-identical to "
+          f"single-device, {{eng_m.plan_builds}} partition plans for "
+          f"{{len(eng_m.bucket_keys)}} ladder rungs")
 """)
 
 
 def distributed_demo():
-    print("distributed LP over a 2x4 virtual mesh (subprocess):")
+    print("mesh-sharded StreamEngine over 8 virtual devices (subprocess):")
     src = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
     env = dict(os.environ, JAX_PLATFORMS="cpu")
     out = subprocess.run([sys.executable, "-c", DIST.format(src=src)],

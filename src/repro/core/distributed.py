@@ -15,10 +15,30 @@ partitionings).
 
 The body reuses the exact update semantics of ``core.propagate`` (same
 fixpoint, same iteration count), so single-device tests transfer.
+
+Two transports exist:
+
+  * all-gather (``make_sharded_propagate_fn`` / ``distributed_propagate``)
+    — shape-only partitioning (contiguous row blocks), usable for
+    streaming because the plan depends on the bucket shape, not the
+    topology.  The per-shard *update* body is pluggable: ``backend="ref"``
+    inlines the XLA Jacobi update, ``backend="ell_pallas"`` calls the
+    fused ELL Pallas kernel over the shard's row block with the gathered
+    global F.
+  * halo-exchange (``make_propagate_halo_fn``) — ships only export
+    prefixes, but the export layout is topology-dependent
+    (``graph.partition.build_halo_plan``), so it stays a one-shot API;
+    an evolving stream would have to re-plan every Δ_t.
+
+``StreamShardPlan`` packages the all-gather transport for
+``core.stream.StreamEngine``: one plan per bucket-ladder rung (shape),
+reused across every batch that lands in that rung, holding the row
+shardings for staging and the jitted (optionally f0-donating) runner.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import NamedTuple
 
@@ -50,6 +70,9 @@ def shard_map(f, *, mesh, in_specs, out_specs):
 
 from repro.core.propagate import PropagateResult, PropagationProblem
 from repro.graph.structures import PAD
+from repro.kernels.ell_propagate import ell_propagate_step
+
+STREAM_BACKENDS = ("ref", "ell_pallas")
 
 
 class ShardedProblem(NamedTuple):
@@ -74,13 +97,39 @@ def pad_problem(problem: PropagationProblem, n_devices: int) -> ShardedProblem:
     return ShardedProblem(padded, n)
 
 
-def make_propagate_fn(mesh, delta: float = 1e-4, max_iters: int = 100_000):
+def make_sharded_propagate_fn(
+    mesh,
+    *,
+    backend: str = "ref",
+    delta: float = 1e-4,
+    max_iters: int = 100_000,
+    block_rows: int = 512,
+    interpret: bool | None = None,
+    donate: bool = False,
+):
     """Build the jitted all-gather propagation step (lowerable with
-    ShapeDtypeStructs for the LP roofline dry-run)."""
+    ShapeDtypeStructs for the LP roofline dry-run).
+
+    The per-shard update body is the selected single-device backend:
+    ``"ref"`` inlines the exact ``core.propagate`` Jacobi arithmetic (same
+    per-row reduction order, so sharded labels are bit-identical to the
+    single-device engine); ``"ell_pallas"`` runs the fused ELL kernel over
+    the shard's row block against the all-gathered global F
+    (``row_offset`` keys the kernel's F reads to this shard's rows).
+
+    ``donate=True`` donates the f0 argument *per shard* — each device
+    recycles its own label-block allocation across Δ_t (no-op on CPU).
+    """
+    if backend not in STREAM_BACKENDS:
+        raise ValueError(
+            f"sharded backend {backend!r} not supported; want one of "
+            f"{STREAM_BACKENDS} (bsr densifies O(U²) on the host)")
     axes = mesh.axis_names
     delta_ = jnp.float32(delta)
     row = P(axes)  # rows sharded over ALL mesh axes (flattened view)
     row2 = P(axes, None)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
 
     @functools.partial(
         shard_map,
@@ -91,13 +140,31 @@ def make_propagate_fn(mesh, delta: float = 1e-4, max_iters: int = 100_000):
     def run(nbr, wgt, wl0, wl1, valid, f_loc, fr_loc):
         mask = nbr != PAD
         idx = jnp.where(mask, nbr, 0)
+        m = f_loc.shape[0]
 
         def gather_full(x_loc):
             return jax.lax.all_gather(x_loc, axes, tiled=True)
 
-        def body(state):
-            f_l, fr_l, it, _ = state
-            f_full = gather_full(f_l)  # (N,) — the collective
+        if backend == "ell_pallas":
+            # Pad the shard's row block to a multiple of the kernel tile
+            # (the sharded twin of ops._pad_rows).  Pad rows never enter
+            # the frontier, so their outputs are discarded by the slice.
+            r = min(block_rows, m)
+            m_pad = -r * (-m // r)
+            rpad = ((0, m_pad - m), (0, 0))
+            nbr_k = jnp.pad(nbr, rpad, constant_values=PAD)
+            wgt_k = jnp.pad(wgt, rpad)
+            wl0_k = jnp.pad(wl0, (0, m_pad - m))
+            wl1_k = jnp.pad(wl1, (0, m_pad - m))
+
+        def update(f_l, fr_l, f_full):
+            if backend == "ell_pallas":
+                row0 = jax.lax.axis_index(axes) * m
+                f_new, changed = ell_propagate_step(
+                    nbr_k, wgt_k, wl0_k, wl1_k,
+                    jnp.pad(fr_l, (0, m_pad - m)), f_full, delta=delta,
+                    block_rows=r, interpret=interpret, row_offset=row0)
+                return f_new[:m], changed[:m] & valid
             f_u = f_l
             f_v = f_full[idx]
             nbr_term = jnp.sum(wgt * jnp.where(mask, f_v - f_u[:, None], 0.0),
@@ -106,12 +173,18 @@ def make_propagate_fn(mesh, delta: float = 1e-4, max_iters: int = 100_000):
             d_f = (0.0 - f_u) * wl0 + (1.0 - f_u) * wl1 + nbr_term
             f_new = f_u + jnp.where(wall > 0, d_f / jnp.maximum(wall, 1e-30), 0)
             f_new = jnp.where(fr_l, f_new, f_u)
-            resid_l = jnp.abs(f_new - f_u)
-            changed_l = (resid_l > delta_) & valid
+            changed = (jnp.abs(f_new - f_u) > delta_) & valid
+            return f_new, changed
+
+        def body(state):
+            f_l, fr_l, it, _ = state
+            f_full = gather_full(f_l)  # (N,) — the collective
+            f_new, changed_l = update(f_l, fr_l, f_full)
             changed_full = gather_full(changed_l)
             nbr_changed = jnp.any(changed_full[idx] & mask, axis=1)
             fr_new = (changed_l | nbr_changed) & valid
-            resid = jax.lax.pmax(jnp.max(resid_l, initial=0.0), axes)
+            resid = jax.lax.pmax(
+                jnp.max(jnp.abs(f_new - f_l), initial=0.0), axes)
             return f_new, fr_new, it + 1, resid
 
         def cond(state):
@@ -124,7 +197,13 @@ def make_propagate_fn(mesh, delta: float = 1e-4, max_iters: int = 100_000):
         done = jax.lax.pmax(fr_l.any().astype(jnp.int32), axes) == 0
         return f_l, iters, done, resid
 
-    return jax.jit(run)
+    return jax.jit(run, donate_argnums=(5,) if donate else ())
+
+
+def make_propagate_fn(mesh, delta: float = 1e-4, max_iters: int = 100_000):
+    """All-gather ``ref`` transport with the historical one-shot signature."""
+    return make_sharded_propagate_fn(mesh, backend="ref", delta=delta,
+                                     max_iters=max_iters)
 
 
 def distributed_propagate(
@@ -148,6 +227,133 @@ def distributed_propagate(
     return PropagateResult(
         f=f[: sp.n_orig], iterations=iters, converged=converged,
         max_residual=resid)
+
+
+# --------------------------------------------------------------------- #
+# Streaming partition plans (core.stream.StreamEngine mesh mode)
+# --------------------------------------------------------------------- #
+# One jitted runner per (mesh, backend, hyperparams) — rungs of the same
+# stream share it (each rung is one more shape specialization in its jit
+# cache, which is exactly what ``sharded_cache_size`` counts).  Both
+# caches are process-lifetime, like the module-level jits in kernels.ops.
+_FN_CACHE: dict = {}
+_PLAN_CACHE: dict = {}
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamShardPlan:
+    """Shape-keyed partition plan: one per bucket-ladder rung.
+
+    Holds everything a stream needs to run batches of one bucket shape on
+    a mesh — the row shardings used to stage host snapshots/vectors and
+    the jitted all-gather runner.  Plans are topology-independent
+    (contiguous row blocks), so a single plan serves every batch whose
+    padded snapshot lands in its rung; only a ladder regrow builds a new
+    one (``StreamEngine.plan_builds`` ≤ rungs touched, asserted in
+    tests/test_stream_sharded.py).
+    """
+
+    mesh: jax.sharding.Mesh
+    bucket_key: tuple[int, int]
+    backend: str
+    delta: float
+    max_iters: int
+    block_rows: int
+    interpret: bool | None
+    row_sharding: jax.sharding.NamedSharding
+    row2_sharding: jax.sharding.NamedSharding
+    run: object  # jitted shard_map propagation fn
+
+    @property
+    def n_devices(self) -> int:
+        return self.mesh.devices.size
+
+    def put_row(self, x) -> jax.Array:
+        """Stage a per-row host vector with this plan's row sharding."""
+        return jax.device_put(x, self.row_sharding)
+
+    def put_row2(self, x) -> jax.Array:
+        """Stage a (rows, K) host array row-sharded, K replicated."""
+        return jax.device_put(x, self.row2_sharding)
+
+    def put_problem(self, nbr, wgt, wl0, wl1, valid) -> PropagationProblem:
+        return PropagationProblem(
+            nbr=self.put_row2(nbr), wgt=self.put_row2(wgt),
+            wl0=self.put_row(wl0), wl1=self.put_row(wl1),
+            valid=self.put_row(valid))
+
+    def __call__(self, problem: PropagationProblem, f0: jax.Array,
+                 frontier0: jax.Array) -> PropagateResult:
+        if tuple(problem.nbr.shape) != self.bucket_key:
+            raise ValueError(
+                f"problem shape {problem.nbr.shape} does not match plan "
+                f"rung {self.bucket_key}")
+        if f0.dtype != jnp.float32:
+            f0 = f0.astype(jnp.float32)
+        f, iters, done, resid = self.run(
+            problem.nbr, problem.wgt, problem.wl0, problem.wl1,
+            problem.valid, f0, frontier0)
+        return PropagateResult(f=f, iterations=iters, converged=done,
+                               max_residual=resid)
+
+
+def build_stream_plan(
+    mesh,
+    bucket_key: tuple[int, int],
+    *,
+    backend: str = "ref",
+    delta: float = 1e-4,
+    max_iters: int = 100_000,
+    block_rows: int = 512,
+    interpret: bool | None = None,
+    donate: bool = True,
+) -> StreamShardPlan:
+    """Build (or fetch, memoized) the partition plan for one ladder rung.
+
+    Rows must shard evenly: ``bucket_key[0]`` has to be a multiple of the
+    mesh's device count (``core.snapshot.build_host_problem`` pads buckets
+    with ``row_multiple=mesh.devices.size`` to guarantee it).
+    """
+    u_pad, _ = bucket_key
+    n_dev = mesh.devices.size
+    if u_pad % n_dev != 0:
+        raise ValueError(
+            f"bucket rows {u_pad} not divisible by mesh device count "
+            f"{n_dev}; build snapshots with row_multiple={n_dev}")
+    fn_key = (mesh, backend, float(delta), max_iters, block_rows, interpret,
+              donate)
+    run = _FN_CACHE.get(fn_key)
+    if run is None:
+        run = make_sharded_propagate_fn(
+            mesh, backend=backend, delta=delta, max_iters=max_iters,
+            block_rows=block_rows, interpret=interpret, donate=donate)
+        _FN_CACHE[fn_key] = run
+    key = (fn_key, tuple(bucket_key))
+    plan = _PLAN_CACHE.get(key)
+    if plan is None:
+        axes = mesh.axis_names
+        plan = StreamShardPlan(
+            mesh=mesh, bucket_key=tuple(bucket_key), backend=backend,
+            delta=float(delta), max_iters=max_iters, block_rows=block_rows,
+            interpret=interpret,
+            row_sharding=jax.sharding.NamedSharding(mesh, P(axes)),
+            row2_sharding=jax.sharding.NamedSharding(mesh, P(axes, None)),
+            run=run)
+        _PLAN_CACHE[key] = plan
+    return plan
+
+
+def sharded_cache_size() -> int:
+    """Summed jit-cache entries of every streaming shard_map runner —
+    folded into ``kernels.ops.compile_cache_size`` so the stream's
+    recompile accounting covers the mesh path too."""
+    total = 0
+    for fn in _FN_CACHE.values():
+        try:
+            total += fn._cache_size()
+        except AttributeError:  # pragma: no cover — future jax rename
+            pass
+    return total
 
 
 def make_propagate_halo_fn(mesh, rows_per_shard: int, export_max: int,

@@ -73,12 +73,17 @@ class DynLP:
         max_degree: int | None = None,
         backend: str | None = None,
         auto_bucket: bool = True,
+        max_k: int | None = None,
     ):
         self.graph = graph
         self.delta = delta
         self.tau = tau
         self.max_iters = max_iters
         self.max_degree = max_degree
+        # max_k caps the ELL neighbor axis via heaviest-edge truncation
+        # (core.snapshot.build_host_problem) so hub vertices can't grow
+        # the K-bucket ladder unboundedly.
+        self.max_k = max_k
         # backend: kernels.ops dispatch ("auto"/None, "ref", "ell_pallas",
         # "bsr").  auto_bucket=False rebuilds at the exact (U, K) every
         # batch — the paper's "redundant recomputation" baseline that
@@ -99,7 +104,7 @@ class DynLP:
 
         # ---- Step 2: supernode label initialization for new vertices ----
         snap = build_problem(g, max_degree=self.max_degree,
-                             auto_bucket=self.auto_bucket)
+                             auto_bucket=self.auto_bucket, max_k=self.max_k)
         new_unl = effect.new_ids[g.labels[effect.new_ids] == UNLABELED]
         if m and len(new_unl):
             comp_local = gprime_components(effect, m)

@@ -16,9 +16,16 @@ build on (docs/streaming.md).
 from __future__ import annotations
 
 import dataclasses
+import logging
 
 import jax.numpy as jnp
 import numpy as np
+
+logger = logging.getLogger(__name__)
+
+# (max_k, natural-K rung) pairs whose truncation was already WARNed —
+# repeats log at DEBUG so a persistent hub doesn't spam every Δ_t.
+_MAX_K_WARNED: set[tuple[int, int]] = set()
 
 from repro.core.propagate import PropagationProblem
 from repro.graph.dynamic import UNLABELED, DynamicGraph
@@ -99,8 +106,22 @@ def build_host_problem(
     pad_to: int | None = None,
     k_pad: int | None = None,
     auto_bucket: bool = False,
+    row_multiple: int | None = None,
+    max_k: int | None = None,
 ) -> HostSnapshot:
-    """Host-side (numpy) snapshot build; see module docstring for padding."""
+    """Host-side (numpy) snapshot build; see module docstring for padding.
+
+    ``row_multiple`` rounds the (possibly bucketed) row count up to a
+    multiple — mesh-sharded streams pass the device count so every bucket
+    shape shards evenly (``core.distributed.build_stream_plan``).
+
+    ``max_k`` caps the ELL neighbor axis: rows whose natural degree
+    exceeds it keep only their ``max_k`` *heaviest* edges (the
+    ``csr_to_ell_fast`` truncation policy), so a single hub vertex can't
+    drag the whole K-bucket ladder — and every jit cache behind it — up.
+    Unlike ``max_degree`` it is a pure cap: low-degree snapshots keep
+    their tight natural K.  Truncation is logged when it fires.
+    """
     alive_unl = g.alive & (g.labels == UNLABELED)
     unl_ids = np.flatnonzero(alive_unl)
     u = len(unl_ids)
@@ -117,12 +138,32 @@ def build_host_problem(
     # unlabeled -> unlabeled edges form the ELL tensor
     uu = s_unl & d_unl
     csr = coo_to_csr(u, remap[src[uu]], remap[dst[uu]], wgt[uu])
+    if max_k is not None:
+        deg = np.diff(csr.rowptr)
+        nat_k = int(deg.max()) if u else 0
+        if nat_k > max_k:
+            n_over = int((deg > max_k).sum())
+            # a persistent hub would repeat this every Δ_t: warn once per
+            # (cap, natural-K rung) per process, then demote to debug
+            warn_key = (max_k, bucket_k(nat_k))
+            level = (logging.DEBUG if warn_key in _MAX_K_WARNED
+                     else logging.WARNING)
+            _MAX_K_WARNED.add(warn_key)
+            logger.log(
+                level,
+                "snapshot: max_k=%d truncating %d/%d rows (natural max "
+                "degree %d; heaviest-edge policy)", max_k, n_over, u, nat_k)
+            max_degree = max_k if max_degree is None else min(max_degree,
+                                                             max_k)
     ell = csr_to_ell_fast(csr, max_degree=max_degree)
     nbr, w = np.asarray(ell.nbr), np.asarray(ell.wgt)
     k = nbr.shape[1]
     if auto_bucket:
         pad_to = bucket(u) if pad_to is None else pad_to
         k_pad = bucket_k(k) if k_pad is None else k_pad
+    if row_multiple is not None and row_multiple > 1:
+        base = pad_to if pad_to is not None else u
+        pad_to = -row_multiple * (-base // row_multiple)
     if k_pad is not None and k < k_pad:
         nbr = np.concatenate(
             [nbr, np.full((nbr.shape[0], k_pad - k), -1, np.int32)], axis=1
@@ -160,9 +201,11 @@ def build_problem(
     max_degree: int | None = None,
     pad_to: int | None = None,
     auto_bucket: bool = False,
+    max_k: int | None = None,
 ) -> Snapshot:
     host = build_host_problem(
-        g, max_degree=max_degree, pad_to=pad_to, auto_bucket=auto_bucket
+        g, max_degree=max_degree, pad_to=pad_to, auto_bucket=auto_bucket,
+        max_k=max_k,
     )
     problem = PropagationProblem(
         nbr=jnp.asarray(host.nbr),

@@ -28,7 +28,14 @@ the amortized version:
 numerics — streamed labels are allclose to fresh per-batch DynLP results
 (tests/test_stream.py); the solve itself routes through
 ``kernels.ops.run_propagation`` so ref / ell_pallas / bsr backends are
-interchangeable.  See docs/streaming.md.
+interchangeable.
+
+With ``mesh=`` the same stream spans a device mesh: rows of every bucket
+shard over all mesh axes through the ``core.distributed`` all-gather
+transport, buckets are padded to a multiple of the device count, and one
+partition plan per ladder rung (``StreamShardPlan``) is reused across
+every batch in that rung.  Labels stay bit-identical to the single-device
+engine (tests/test_stream_sharded.py).  See docs/streaming.md.
 """
 
 from __future__ import annotations
@@ -41,6 +48,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import distributed
 from repro.core.components import compact_labels
 from repro.core.dynlp import gprime_components
 from repro.core.init_labels import supernode_init
@@ -93,6 +101,8 @@ class StreamEngine:
         backend: str | None = None,
         block_rows: int = 512,
         interpret: bool | None = None,
+        mesh: jax.sharding.Mesh | None = None,
+        max_k: int | None = None,
     ):
         self.graph = graph
         self.delta = delta
@@ -102,6 +112,18 @@ class StreamEngine:
         self.backend = backend
         self.block_rows = block_rows
         self.interpret = interpret
+        # mesh: shard the stream — rows of every bucket are partitioned
+        # over ALL mesh axes (core.distributed all-gather transport); row
+        # buckets are padded to a multiple of the device count so each
+        # rung shards evenly, and one partition plan per rung is reused
+        # across every batch that lands in it.
+        self.mesh = mesh
+        # max_k: cap the ELL neighbor axis (heaviest-edge truncation) so a
+        # hub vertex can't drag the K-bucket ladder up (core.snapshot).
+        self.max_k = max_k
+        self._row_multiple = int(mesh.devices.size) if mesh is not None else None
+        self._plans: dict[tuple[int, int], distributed.StreamShardPlan] = {}
+        self.plan_builds = 0  # partition plans built — ≤ rungs touched
         # bucket_key -> two generations of device problem buffers; the
         # generation toggles per commit so the in-flight solve never shares
         # storage with the snapshot being staged.
@@ -113,16 +135,40 @@ class StreamEngine:
         self.batches = 0
 
     # ------------------------------------------------------------------ #
-    def _commit(self, host: HostSnapshot) -> PropagationProblem:
+    def _plan_for(self, key: tuple[int, int]) -> distributed.StreamShardPlan:
+        """Partition plan for one ladder rung — built once, then reused
+        for every batch whose padded snapshot lands in that rung."""
+        plan = self._plans.get(key)
+        if plan is None:
+            plan = distributed.build_stream_plan(
+                self.mesh, key,
+                backend=ops.select_backend(self.backend, num_rows=key[0],
+                                           sharded=True),
+                delta=self.delta, max_iters=self.max_iters,
+                block_rows=self.block_rows, interpret=self.interpret,
+                donate=True)
+            self._plans[key] = plan
+            self.plan_builds += 1
+        return plan
+
+    # ------------------------------------------------------------------ #
+    def _commit(
+        self, host: HostSnapshot,
+        plan: distributed.StreamShardPlan | None = None,
+    ) -> PropagationProblem:
         """Stage a host snapshot into the persistent device buffers."""
         key = host.bucket_key
-        new = PropagationProblem(
-            nbr=jnp.asarray(host.nbr),
-            wgt=jnp.asarray(host.wgt),
-            wl0=jnp.asarray(host.wl0),
-            wl1=jnp.asarray(host.wl1),
-            valid=jnp.asarray(host.valid),
-        )
+        if plan is not None:  # mesh mode: row-sharded staging
+            new = plan.put_problem(host.nbr, host.wgt, host.wl0, host.wl1,
+                                   host.valid)
+        else:
+            new = PropagationProblem(
+                nbr=jnp.asarray(host.nbr),
+                wgt=jnp.asarray(host.wgt),
+                wl0=jnp.asarray(host.wl0),
+                wl1=jnp.asarray(host.wl1),
+                valid=jnp.asarray(host.valid),
+            )
         slots = self._buffers.setdefault(key, [None, None])
         gen = self._gen.get(key, 1) ^ 1
         self._gen[key] = gen
@@ -150,14 +196,18 @@ class StreamEngine:
 
         # ---- stage batch-t topology while batch t-1 still propagates ----
         host = build_host_problem(g, max_degree=self.max_degree,
-                                  auto_bucket=True)
-        problem = self._commit(host)
+                                  auto_bucket=True,
+                                  row_multiple=self._row_multiple,
+                                  max_k=self.max_k)
+        plan = self._plan_for(host.bucket_key) if self.mesh is not None else None
+        problem = self._commit(host, plan)
         u = len(host.unl_ids)
         u_pad = len(host.valid)
         frontier = np.zeros(u_pad, bool)
         aff_rows = host.remap[effect.affected]
         frontier[aff_rows[aff_rows >= 0]] = True
-        frontier_dev = jnp.asarray(frontier)
+        frontier_dev = (plan.put_row(frontier) if plan is not None
+                        else jnp.asarray(frontier))
 
         # ---- Step 2: supernode label initialization (host wl0/wl1) ----
         n_components = 0
@@ -180,12 +230,15 @@ class StreamEngine:
         # ---- Step 3: launch this batch's solve (async) ----
         f0 = np.full(u_pad, 0.5, np.float32)
         f0[:u] = g.f[host.unl_ids]
+        # f0 is donated into the solve in both modes; in mesh mode it is
+        # staged row-sharded first so each device recycles its own block.
+        f0_dev = plan.put_row(f0) if plan is not None else jnp.asarray(f0)
         before = ops.compile_cache_size()
         res = ops.run_propagation(
-            problem, jnp.asarray(f0), frontier_dev,
+            problem, f0_dev, frontier_dev,
             delta=self.delta, max_iters=self.max_iters,
             backend=self.backend, block_rows=self.block_rows,
-            interpret=self.interpret, donate=True,
+            interpret=self.interpret, donate=True, shard_plan=plan,
         )
         recompiled = ops.compile_cache_size() > before
         self.recompile_count += recompiled

@@ -24,12 +24,17 @@ from jax.experimental import pallas as pl
 
 
 def _kernel(nbr_ref, wgt_ref, wl0_ref, wl1_ref, frontier_ref, f_ref,
-            delta_ref, fout_ref, changed_ref):
+            delta_ref, offset_ref, fout_ref, changed_ref):
     nbr = nbr_ref[...]  # (R, K) int32
     wgt = wgt_ref[...]  # (R, K) f32
     f_all = f_ref[...]  # (N,) f32 — VMEM resident
-    row0 = pl.program_id(0) * nbr.shape[0]
+    # offset maps this invocation's row tile into F: 0 single-device, the
+    # shard's global row base under shard_map (core.distributed).
+    row0 = pl.program_id(0) * nbr.shape[0] + offset_ref[0]
     rows = row0 + jax.lax.iota(jnp.int32, nbr.shape[0])
+    # clamp: a shard whose row block is padded past a multiple of R may
+    # point its pad rows beyond F — their outputs are discarded anyway
+    rows = jnp.minimum(rows, f_all.shape[0] - 1)
     f_u = f_all[rows]  # (R,)
 
     mask = nbr >= 0
@@ -56,20 +61,31 @@ def ell_propagate_step(
     wl0: jax.Array,  # (N,)
     wl1: jax.Array,  # (N,)
     frontier: jax.Array,  # (N,) bool
-    f: jax.Array,  # (N,) float32
+    f: jax.Array,  # (Nf,) float32 — Nf ≥ N; the gathered GLOBAL labels
     delta: float = 1e-4,
     block_rows: int = 512,
     interpret: bool = True,
+    row_offset: jax.Array | int = 0,
 ) -> tuple[jax.Array, jax.Array]:
+    """One fused frontier sweep over ``nbr``'s rows.
+
+    Single-device callers pass ``f`` of the same length as ``nbr`` and
+    ``row_offset=0``.  Under ``shard_map`` (core.distributed) ``nbr`` is
+    the shard's row block, ``f`` the all-gathered global vector, and
+    ``row_offset`` the shard's global row base — outputs stay per-shard.
+    """
     n, k = nbr.shape
+    n_f = f.shape[0]
     r = min(block_rows, n)
     assert n % r == 0, (n, r)
     grid = (n // r,)
     delta_arr = jnp.full((1,), delta, jnp.float32)
+    offset_arr = jnp.full((1,), row_offset, jnp.int32)
     row_spec = lambda width=None: pl.BlockSpec(
         (r,) if width is None else (r, width), lambda i: (i,) if width is None else (i, 0)
     )
-    full_spec = pl.BlockSpec((n,), lambda i: (0,))
+    full_spec = pl.BlockSpec((n_f,), lambda i: (0,))
+    scalar_spec = pl.BlockSpec((1,), lambda i: (0,))
     fout, changed = pl.pallas_call(
         _kernel,
         grid=grid,
@@ -80,7 +96,8 @@ def ell_propagate_step(
             row_spec(),  # wl1
             row_spec(),  # frontier
             full_spec,  # f (whole vector in VMEM)
-            pl.BlockSpec((1,), lambda i: (0,)),  # delta
+            scalar_spec,  # delta
+            scalar_spec,  # row offset
         ],
         out_specs=[row_spec(), row_spec()],
         out_shape=[
@@ -89,5 +106,5 @@ def ell_propagate_step(
         ],
         interpret=interpret,
     )(nbr, wgt, wl0.astype(jnp.float32), wl1.astype(jnp.float32),
-      frontier, f.astype(jnp.float32), delta_arr)
+      frontier, f.astype(jnp.float32), delta_arr, offset_arr)
     return fout, changed

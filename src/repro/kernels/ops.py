@@ -63,17 +63,24 @@ _PALLAS_MIN_ROWS = 512
 
 
 def select_backend(backend: str | None = None,
-                   problem: PropagationProblem | None = None) -> str:
+                   problem: PropagationProblem | None = None,
+                   *,
+                   num_rows: int | None = None,
+                   sharded: bool = False) -> str:
     """Resolve ``backend`` (None/"auto" → hardware + shape, env override).
 
     Selection rules: an explicit backend wins; the ``REPRO_BACKEND`` env
     var replaces the "auto" default; auto gives TPU the fused ELL kernel
-    (unless ``problem`` is too small to amortize a kernel launch) and
-    everything else the XLA reference.  ``bsr`` pays an O(U²) host
-    densification, so it is only honored for problems within the BSR row
-    cap: explicitly passing ``backend="bsr"`` with a bigger problem
-    raises, while the fleet-wide env hint falls back to ``ref``.
+    (unless the problem — sized via ``problem`` or a bare ``num_rows`` —
+    is too small to amortize a kernel launch) and everything else the XLA
+    reference.  ``bsr`` pays an O(U²) host densification and has no
+    sharded form, so the fleet-wide env hint degrades to ``ref`` whenever
+    it is unusable (rows over the BSR cap, or ``sharded``); only an
+    *explicitly passed* ``backend="bsr"`` reaches the caller's error
+    path in those cases.
     """
+    if num_rows is None and problem is not None:
+        num_rows = problem.num_unlabeled
     from_env = False
     if backend in (None, "auto"):
         env = os.environ.get("REPRO_BACKEND", "auto")
@@ -81,11 +88,11 @@ def select_backend(backend: str | None = None,
         backend = env
     if backend == "auto":
         backend = "ell_pallas" if on_tpu() else "ref"
-        if (backend == "ell_pallas" and problem is not None
-                and problem.num_unlabeled < _PALLAS_MIN_ROWS):
+        if (backend == "ell_pallas" and num_rows is not None
+                and num_rows < _PALLAS_MIN_ROWS):
             backend = "ref"
-    if (from_env and backend == "bsr" and problem is not None
-            and problem.num_unlabeled > _BSR_MAX_ROWS):
+    if from_env and backend == "bsr" and (
+            sharded or (num_rows is not None and num_rows > _BSR_MAX_ROWS)):
         backend = "ref"
     if backend not in BACKENDS:
         raise ValueError(f"unknown backend {backend!r}; want one of {BACKENDS}")
@@ -265,9 +272,48 @@ def run_propagation(
     block_rows: int = 512,
     interpret: bool | None = None,
     donate: bool = False,
+    mesh: jax.sharding.Mesh | None = None,
+    shard_plan=None,
 ) -> PropagateResult:
-    """Single propagation entry point — see module docstring for routing."""
-    backend = select_backend(backend, problem)
+    """Single propagation entry point — see module docstring for routing.
+
+    ``mesh`` adds the distributed arm: the selected backend's update body
+    is wrapped in the vertex-partitioned ``shard_map`` transport of
+    ``core.distributed`` (rows sharded over every mesh axis, one
+    all-gather of F per sweep).  Requires ``problem``'s row count to be a
+    multiple of the mesh's device count.  Callers that stream many batches
+    pass a prebuilt ``shard_plan`` (one per bucket rung) so partition
+    planning isn't redone per Δ_t; otherwise the plan is resolved (and
+    memoized) from ``mesh`` + the problem shape.  ``bsr`` is single-device
+    only — its host-side densification has no sharded form.
+    """
+    sharded = mesh is not None or shard_plan is not None
+    backend = select_backend(backend, problem, sharded=sharded)
+    if sharded:
+        from repro.core import distributed
+
+        if backend == "bsr":
+            raise ValueError(
+                "bsr backend is single-device only; use 'ref' or "
+                "'ell_pallas' with mesh=")
+        plan = shard_plan
+        if plan is None:
+            plan = distributed.build_stream_plan(
+                mesh, tuple(problem.nbr.shape), backend=backend,
+                delta=float(delta), max_iters=max_iters,
+                block_rows=block_rows, interpret=interpret, donate=donate)
+        else:
+            # the plan's baked-in hyperparameters drive the solve — refuse
+            # kwargs that silently disagree with them
+            want = (backend, float(delta), max_iters, block_rows, interpret)
+            have = (plan.backend, plan.delta, plan.max_iters,
+                    plan.block_rows, plan.interpret)
+            if want != have:
+                raise ValueError(
+                    f"shard_plan mismatch: called with (backend, delta, "
+                    f"max_iters, block_rows, interpret)={want} but plan "
+                    f"was built with {have}")
+        return plan(problem, f0, frontier0)
     if backend == "ref":
         if donate:
             return _ref_donating(problem, f0, frontier0, delta, max_iters)
@@ -310,4 +356,6 @@ def compile_cache_size() -> int:
             total += fn._cache_size()
         except AttributeError:  # pragma: no cover — future jax rename
             pass
-    return total
+    from repro.core import distributed
+
+    return total + distributed.sharded_cache_size()

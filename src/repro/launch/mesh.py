@@ -27,6 +27,17 @@ def make_mesh(shape, axes):
     return jax.make_mesh(shape, axes)
 
 
+def make_stream_mesh(n_devices: int | None = None, axis: str = "data"):
+    """Flat 1-D mesh over the local devices — the shape sharded streaming
+    wants (``StreamEngine(mesh=...)``): rows partition over one axis, and
+    the bucket ladder pads row counts to a multiple of its size.  On a
+    CPU host, force more virtual devices with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` *before* jax
+    initializes (the multi-device CI job does exactly this)."""
+    n = len(jax.devices()) if n_devices is None else n_devices
+    return make_mesh((n,), (axis,))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")

@@ -1,5 +1,7 @@
 """Compile-once streaming engine: recompile bound, DynLP parity, churn."""
 
+import logging
+
 import numpy as np
 import pytest
 
@@ -149,6 +151,66 @@ def test_stream_deletion_only_batch():
         ins_labels=np.zeros(0, np.int8), del_ids=victims))
     assert st.converged
     assert not g.alive[victims].any()
+
+
+def _hub_stream(eng, rng, batches=4, per_batch=25):
+    """Insert tight clusters around one hub vertex so its degree — and
+    the natural ELL K — grows with every batch."""
+    dim = eng.graph.emb_dim
+    hub = np.zeros((1, dim), np.float32)
+    hub[0, 0] = 1.0
+    anchors = np.zeros((2, dim), np.float32)
+    anchors[0, 0], anchors[1, 0] = 1.0, -1.0
+    eng.step(BatchUpdate(
+        ins_emb=np.concatenate([anchors, hub]),
+        ins_labels=np.array([1, 0, UNLABELED], np.int8),
+        del_ids=np.zeros(0, np.int64)))
+    for _ in range(batches):
+        pts = np.tile(hub, (per_batch, 1)) + rng.normal(
+            0, 0.01, (per_batch, dim)).astype(np.float32)
+        eng.step(BatchUpdate(ins_emb=pts,
+                             ins_labels=np.full(per_batch, UNLABELED, np.int8),
+                             del_ids=np.zeros(0, np.int64)))
+
+
+def test_max_k_caps_hub_ladder(caplog, monkeypatch):
+    """A hub vertex drags the K ladder up batch after batch unless capped;
+    max_k truncates its heaviest-degree row and logs that it fired."""
+    from repro.core import snapshot
+
+    # the truncation WARNING dedups per (cap, rung) process-wide — reset
+    # so this test is order/rerun independent
+    monkeypatch.setattr(snapshot, "_MAX_K_WARNED", set())
+    rng = np.random.default_rng(0)
+    g_free = DynamicGraph(emb_dim=8, k=3)
+    free = StreamEngine(g_free, delta=1e-4)
+    _hub_stream(free, np.random.default_rng(0))
+    assert max(k for _, k in free.bucket_keys) >= 32  # the uncapped creep
+
+    g_cap = DynamicGraph(emb_dim=8, k=3)
+    capped = StreamEngine(g_cap, delta=1e-4, max_k=8)
+    with caplog.at_level(logging.WARNING, logger="repro.core.snapshot"):
+        _hub_stream(capped, rng)
+    assert max(k for _, k in capped.bucket_keys) <= 8
+    assert len(capped.bucket_keys) < len(free.bucket_keys)
+    assert any("max_k=8 truncating" in r.getMessage()
+               for r in caplog.records)
+    # the capped stream still converges to sane labels: everything hangs
+    # off the class-1 hub
+    ids = np.flatnonzero(g_cap.alive & (g_cap.labels == UNLABELED))
+    assert (g_cap.f[ids] > 0.5).all()
+
+
+def test_max_k_no_log_when_inactive(caplog):
+    """max_k above the natural degree neither truncates nor logs."""
+    spec = StreamSpec(total_vertices=200, batch_size=100, seed=4,
+                      class_sep=6.0, noise=0.9)
+    g = DynamicGraph(emb_dim=spec.emb_dim, k=5)
+    eng = StreamEngine(g, delta=1e-4, max_k=512)
+    with caplog.at_level(logging.WARNING, logger="repro.core.snapshot"):
+        for batch, _ in gaussian_mixture_stream(spec):
+            eng.step(batch)
+    assert not caplog.records
 
 
 @pytest.mark.parametrize("backend", ["ref", "ell_pallas", "bsr"])

@@ -1,0 +1,189 @@
+"""Mesh-sharded StreamEngine: bit-identical labels vs the single-device
+engine, per-rung partition-plan reuse, and even bucket sharding.
+
+Multi-device CPU needs XLA_FLAGS set before jax initializes, so the
+8-device checks run in a subprocess (same pattern as
+tests/test_distributed_lp.py); the in-process tests cover the 1-device
+degenerate mesh and the host-side padding/plan logic.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core.snapshot import build_host_problem
+from repro.core.stream import StreamEngine
+from repro.data.synth import StreamSpec, gaussian_mixture_stream
+from repro.graph.dynamic import DynamicGraph
+from repro.launch.mesh import make_stream_mesh
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+TESTS = os.path.abspath(os.path.dirname(__file__))
+
+
+def _run_pair(spec, mesh, **kw):
+    g_m = DynamicGraph(emb_dim=spec.emb_dim, k=5)
+    g_s = DynamicGraph(emb_dim=spec.emb_dim, k=5)
+    eng_m = StreamEngine(g_m, delta=1e-4, mesh=mesh, **kw)
+    eng_s = StreamEngine(g_s, delta=1e-4, **kw)
+    for i, (batch, _) in enumerate(gaussian_mixture_stream(spec)):
+        st_m = eng_m.step(batch)
+        st_s = eng_s.step(batch)
+        assert st_m.iterations == st_s.iterations, f"batch {i}"
+        assert st_m.num_unlabeled == st_s.num_unlabeled
+    return g_m, g_s, eng_m, eng_s
+
+
+def test_sharded_stream_matches_single_device_local_mesh():
+    """Mesh over whatever devices this process has (1 in plain CPU runs,
+    8 in the multi-device CI job): the sharded path must be bit-identical
+    to the unsharded engine either way."""
+    spec = StreamSpec(total_vertices=600, batch_size=60, seed=3,
+                      class_sep=6.0, noise=0.9)
+    g_m, g_s, eng_m, _ = _run_pair(spec, make_stream_mesh())
+    np.testing.assert_array_equal(g_m.f, g_s.f)
+    # one partition plan per rung, not per batch
+    assert eng_m.plan_builds == len(eng_m.bucket_keys)
+    assert eng_m.plan_builds < eng_m.batches
+
+
+def test_sharded_stream_pallas_backend_local_mesh():
+    """The ell_pallas update body composes with the shard_map transport."""
+    spec = StreamSpec(total_vertices=300, batch_size=100, seed=4,
+                      class_sep=6.0, noise=0.9)
+    g_m, g_s, _, _ = _run_pair(spec, make_stream_mesh(),
+                               backend="ell_pallas", block_rows=64)
+    np.testing.assert_array_equal(g_m.f, g_s.f)
+
+
+def test_bucket_rows_pad_to_mesh_multiple():
+    """row_multiple rounds every row bucket up so shapes shard evenly."""
+    spec = StreamSpec(total_vertices=700, batch_size=70, seed=2,
+                      class_sep=6.0, noise=0.9)
+    g = DynamicGraph(emb_dim=spec.emb_dim, k=5)
+    eng = StreamEngine(g, delta=1e-3)
+    for batch, _ in gaussian_mixture_stream(spec):
+        eng.step(batch)
+        host = build_host_problem(g, auto_bucket=True, row_multiple=8)
+        assert host.bucket_key[0] % 8 == 0
+        # never pads below the plain bucket (single-device shape)
+        plain = build_host_problem(g, auto_bucket=True)
+        assert host.bucket_key[0] >= plain.bucket_key[0]
+        assert host.bucket_key[0] - plain.bucket_key[0] < 8
+
+
+def test_env_bsr_hint_degrades_to_ref_when_sharded(monkeypatch):
+    """REPRO_BACKEND=bsr is a fleet-wide hint — unusable on a mesh, it
+    falls back to ref instead of killing the stream; an explicit request
+    still reaches the error path."""
+    from repro.kernels import ops
+
+    monkeypatch.setenv("REPRO_BACKEND", "bsr")
+    assert ops.select_backend(None, sharded=True) == "ref"
+    assert ops.select_backend(None, num_rows=64) == "bsr"  # hint honored
+    assert ops.select_backend("bsr", sharded=True) == "bsr"  # explicit
+
+
+def test_mesh_rejects_bsr_backend():
+    """bsr densifies on the host — there is no sharded form."""
+    import jax.numpy as jnp
+
+    from helpers import random_problem
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(0)
+    p = random_problem(rng, 64, 2)
+    with pytest.raises(ValueError, match="single-device"):
+        ops.run_propagation(p, jnp.full((64,), 0.5), jnp.ones(64, bool),
+                            backend="bsr", mesh=make_stream_mesh())
+
+
+
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    import sys
+    sys.path.insert(0, {src!r}); sys.path.insert(0, {tests!r})
+    import numpy as np
+    from repro.core.stream import StreamEngine
+    from repro.data.synth import StreamSpec, gaussian_mixture_stream
+    from repro.graph.dynamic import DynamicGraph
+    from repro.launch.mesh import make_stream_mesh
+
+    # 50 mixed insert/delete batches crossing several ladder rungs
+    spec = StreamSpec(total_vertices=1500, batch_size=30, seed=11,
+                      class_sep=6.0, noise=0.9, frac_deleted=0.2,
+                      frac_unlabeled=0.79)
+    batches = [b for b, _ in gaussian_mixture_stream(spec)]
+    assert len(batches) == 50
+    assert any(len(b.del_ids) for b in batches)     # deletions present
+
+    mesh = make_stream_mesh()
+    assert mesh.devices.size == 8, mesh
+
+    g_m = DynamicGraph(emb_dim=spec.emb_dim, k=5)
+    g_s = DynamicGraph(emb_dim=spec.emb_dim, k=5)
+    eng_m = StreamEngine(g_m, delta=1e-4, mesh=mesh)
+    eng_s = StreamEngine(g_s, delta=1e-4)
+    for i, b in enumerate(batches):
+        st_m = eng_m.step(b)
+        st_s = eng_s.step(b)
+        assert st_m.iterations == st_s.iterations, (i, st_m, st_s)
+        assert st_m.converged == st_s.converged
+
+    # the headline: bit-identical labels across the whole stream
+    assert np.array_equal(g_m.f, g_s.f), np.abs(g_m.f - g_s.f).max()
+
+    # every sharded bucket divides the mesh evenly
+    assert all(u % 8 == 0 for u, _ in eng_m.bucket_keys), eng_m.bucket_keys
+
+    # the stream regrew across several ladder rungs ...
+    rungs = len(eng_m.bucket_keys)
+    assert rungs >= 3, eng_m.bucket_keys
+    # ... yet partition planning happened once per rung, not per batch,
+    # and compiles stayed bounded by the rungs actually touched
+    assert eng_m.plan_builds == rungs, (eng_m.plan_builds, rungs)
+    assert eng_m.recompile_count <= rungs, (eng_m.recompile_count, rungs)
+
+    # pipelined submit/drain works on sharded arrays and reaches the
+    # same labels (per-shard donated f0, double-buffered topology)
+    g_p = DynamicGraph(emb_dim=spec.emb_dim, k=5)
+    eng_p = StreamEngine(g_p, delta=1e-4, mesh=mesh)
+    done = 0
+    for b in batches:
+        if eng_p.submit(b) is not None:
+            done += 1
+    assert eng_p.drain() is not None
+    done += 1
+    assert done == len(batches)
+    assert np.array_equal(g_p.f, g_s.f)
+
+    # a bucket that doesn't divide the mesh is refused at planning time
+    from repro.core.distributed import build_stream_plan
+    try:
+        build_stream_plan(mesh, (257, 8))
+    except ValueError as e:
+        assert "row_multiple" in str(e)
+    else:
+        raise AssertionError("uneven bucket accepted")
+    print("OK sharded-stream", rungs, "rungs", eng_m.recompile_count,
+          "recompiles")
+""")
+
+
+def test_sharded_stream_bit_identical_8dev():
+    """50 mixed insert/delete batches on a forced 8-device CPU mesh:
+    labels bit-identical to the single-device engine, plans reused per
+    rung across a multi-rung ladder regrow, pipelining intact."""
+    env = dict(os.environ, JAX_PLATFORMS="cpu")
+    out = subprocess.run(
+        [sys.executable, "-c", SCRIPT.format(src=SRC, tests=TESTS)],
+        capture_output=True, text=True, env=env, timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "OK sharded-stream" in out.stdout
