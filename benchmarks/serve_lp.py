@@ -1,0 +1,184 @@
+"""LP serving benchmark: sustained query throughput while mutations stream.
+
+Drives ``serving.lp_service.LPService`` (queries answered from the last
+committed ``LabelView``, mutations coalesced per admission window and
+pipelined through ``StreamEngine.submit``/``poll``) with a mixed
+query/mutation workload: every stream batch is fed as several mutations,
+and while its solve is in flight the driver issues query bursts — the
+read path never blocks on the device, so queries overlap propagation.
+
+Arms:
+
+  * ``serve``          — single-device StreamEngine under the service;
+  * ``serve_sharded``  — the same workload with the engine's buckets
+                         row-sharded over every visible device (set
+                         ``REPRO_FORCE_HOST_DEVICES=8`` to force an
+                         8-virtual-device CPU mesh, decided before jax
+                         initializes; the CI bench-smoke job does this).
+
+Per arm it records sustained query calls/sec and node-lookups/sec,
+query latency percentiles, mutation enqueue→commit latency percentiles,
+and the engine's recompile count, into ``BENCH_serve.json``.
+``--check`` hard-asserts the serving contract: queries were served while
+a batch was in flight (overlap), every admitted batch committed, and
+recompiles stayed ≤ the bucket-ladder bound.  ``--tiny`` shrinks the
+stream for CI smoke runs.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import statistics
+import time
+
+# Must run before jax initializes: virtual CPU devices for the sharded arm.
+_force = os.environ.get("REPRO_FORCE_HOST_DEVICES")
+if _force:
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={_force}"
+    ).strip()
+
+import jax
+import numpy as np
+
+from repro.core.snapshot import ladder_size
+from repro.core.stream import StreamEngine
+from repro.data.synth import StreamSpec, gaussian_mixture_stream
+from repro.graph.dynamic import DynamicGraph
+from repro.kernels import ops
+from repro.launch.mesh import make_stream_mesh
+from repro.serving.lp_service import LPService
+
+OUT = "BENCH_serve.json"
+DELTA = 1e-3  # match stream_throughput: measure machinery, not solve depth
+
+SPEC = dict(total_vertices=3000, batch_size=60, seed=0,
+            class_sep=6.0, noise=0.9, frac_deleted=0.09)
+TINY = dict(total_vertices=600, batch_size=60, seed=0,
+            class_sep=6.0, noise=0.9, frac_deleted=0.09)
+
+QUERY_BURST = 64  # node ids per query call
+MIN_BURSTS_PER_BATCH = 25
+MUTATIONS_PER_BATCH = 4  # each stream batch arrives as this many mutations
+
+
+def _pct(xs: list[float]) -> dict:
+    arr = np.asarray(xs)
+    return {"p50": round(float(np.percentile(arr, 50)), 4),
+            "p95": round(float(np.percentile(arr, 95)), 4),
+            "p99": round(float(np.percentile(arr, 99)), 4),
+            "max": round(float(arr.max()), 4)}
+
+
+def _run_serve(spec: StreamSpec, mesh=None) -> dict:
+    g = DynamicGraph(emb_dim=spec.emb_dim, k=5)
+    eng = StreamEngine(g, delta=DELTA, mesh=mesh)
+    # window bound sits above one batch's ops so admission happens at the
+    # driver's flush() — the solve is then guaranteed in flight when the
+    # query bursts start (in_flight clears only at commit, via pump()).
+    svc = LPService(eng, window_ops=spec.batch_size * 2, window_ms=1e9,
+                    max_pending_ops=spec.batch_size * 8)
+    rng = np.random.default_rng(7)
+    q_ms: list[float] = []
+    t0 = time.perf_counter()
+    for batch, _ in gaussian_mixture_stream(spec):
+        n = len(batch.ins_emb)
+        cuts = [(i * n) // MUTATIONS_PER_BATCH
+                for i in range(MUTATIONS_PER_BATCH + 1)]
+        svc.mutate(ins_emb=batch.ins_emb[:cuts[1]],
+                   ins_labels=batch.ins_labels[:cuts[1]],
+                   del_ids=batch.del_ids)
+        for a, b in zip(cuts[1:], cuts[2:]):
+            svc.mutate(ins_emb=batch.ins_emb[a:b],
+                       ins_labels=batch.ins_labels[a:b])
+        svc.flush()  # close the window; solve now in flight
+        # serve reads while the batch propagates; pump() commits the
+        # moment the device is done — reads never wait on it
+        bursts = 0
+        while eng.in_flight or bursts < MIN_BURSTS_PER_BATCH:
+            hi = max(1, svc.committed_view().num_nodes)
+            ids = rng.integers(0, hi, QUERY_BURST)
+            tq = time.perf_counter()
+            svc.query(ids)
+            q_ms.append((time.perf_counter() - tq) * 1e3)
+            bursts += 1
+            svc.pump()
+    svc.sync()
+    elapsed = time.perf_counter() - t0
+    st = svc.stats()
+    max_k = max(k for _, k in eng.bucket_keys)
+    out = {
+        "batches": eng.batches,
+        "mutations": st.mutations,
+        "ops_accepted": st.ops_accepted,
+        "batches_admitted": st.batches_admitted,
+        "batches_committed": st.batches_committed,
+        "queries": st.queries,
+        "query_nodes": st.query_nodes,
+        "queries_while_inflight": st.queries_while_inflight,
+        "elapsed_s": round(elapsed, 3),
+        "query_calls_per_sec": round(st.queries / elapsed, 1),
+        "node_lookups_per_sec": round(st.query_nodes / elapsed, 1),
+        "mutation_ops_per_sec": round(st.ops_accepted / elapsed, 1),
+        "query_latency_ms": _pct(q_ms),
+        "median_query_ms": round(statistics.median(q_ms), 4),
+        "mutation_commit_latency_ms": st.commit_latency_ms,
+        "recompiles": st.recompiles,
+        "bucket_rungs": st.bucket_rungs,
+        "ladder_bound": ladder_size(spec.total_vertices + 256, max_k),
+    }
+    if mesh is not None:
+        out["mesh_devices"] = int(mesh.devices.size)
+        out["plan_builds"] = eng.plan_builds
+    return out
+
+
+def main(out: str = OUT, tiny: bool = False, check: bool = False) -> dict:
+    n_dev = len(jax.devices())
+    mesh = make_stream_mesh() if n_dev > 1 else None
+    spec = StreamSpec(**(TINY if tiny else SPEC))
+    results = {
+        "backend_auto_resolves_to": ops.select_backend("auto"),
+        "devices": n_dev,
+        "sharded_arm": mesh is not None,
+        "query_burst": QUERY_BURST,
+        "serve": _run_serve(spec),
+    }
+    arms = {"serve": results["serve"]}
+    if mesh is not None:
+        results["serve_sharded"] = _run_serve(spec, mesh=mesh)
+        arms["serve_sharded"] = results["serve_sharded"]
+    for name, r in arms.items():
+        print(f"{name}: {r['query_calls_per_sec']:.0f} queries/s "
+              f"({r['node_lookups_per_sec']:.0f} node lookups/s, "
+              f"p95 {r['query_latency_ms']['p95']:.3f} ms) while "
+              f"{r['mutation_ops_per_sec']:.0f} mutation ops/s streamed | "
+              f"{r['queries_while_inflight']}/{r['queries']} queries served "
+              f"mid-flight | mutation commit p50/p95 "
+              f"{r['mutation_commit_latency_ms'].get('p50')}/"
+              f"{r['mutation_commit_latency_ms'].get('p95')} ms | "
+              f"{r['recompiles']} recompiles ≤ ladder {r['ladder_bound']}")
+        if check:  # the serving contract, as a hard gate
+            assert r["queries_while_inflight"] > 0, (name, r)
+            assert r["batches_admitted"] == r["batches_committed"], (name, r)
+            assert r["recompiles"] <= r["ladder_bound"], (name, r)
+            if "plan_builds" in r:
+                assert r["plan_builds"] <= r["bucket_rungs"], (name, r)
+    with open(out, "w") as fh:
+        json.dump(results, fh, indent=2)
+    print(f"wrote {os.path.abspath(out)}")
+    return results
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: 600-vertex stream")
+    ap.add_argument("--check", action="store_true",
+                    help="assert overlap + commit + compile-once contract")
+    ap.add_argument("--out", default=OUT, help="output JSON path")
+    args = ap.parse_args()
+    main(out=args.out, tiny=args.tiny, check=args.check)

@@ -46,16 +46,21 @@ if _force:
     ).strip()
 
 import jax
+import numpy as np
 
 from repro.core.dynlp import DynLP
-from repro.core.snapshot import ladder_size
+from repro.core.snapshot import bucket_k, ladder_size
 from repro.core.stream import StreamEngine
-from repro.data.synth import StreamSpec, gaussian_mixture_stream
+from repro.data.synth import StreamSpec, accuracy, gaussian_mixture_stream, hub_stream
 from repro.graph.dynamic import DynamicGraph
 from repro.kernels import ops
 from repro.launch.mesh import make_stream_mesh
 
 OUT = "BENCH_stream.json"
+
+# Truncated-vs-untruncated prediction agreement the max_k arm must hold
+# (same floor as tests/test_max_k_accuracy.py's slow-tier assert).
+MAX_K_AGREEMENT_FLOOR = 0.98
 
 # All three arms converge to the same labels at the same δ; a looser δ
 # keeps the measurement on the update machinery (rebuild/compile/staging
@@ -131,6 +136,42 @@ def _run_dynlp(spec: StreamSpec, auto_bucket: bool) -> dict:
     }
 
 
+def _run_max_k_accuracy(cap: int = 8, n_batches: int = 5, per_hub: int = 20,
+                        hubs: int = 4, seed: int = 0) -> dict:
+    """max_k accuracy arm (ROADMAP follow-up): stream a hub-heavy graph
+    with and without the heaviest-edge K cap and measure how far the
+    truncated labels drift from the untruncated ones (plus both arms'
+    accuracy against ground truth and the K-ladder shrinkage the cap
+    buys)."""
+
+    def run(max_k):
+        g = DynamicGraph(emb_dim=8, k=4)
+        eng = StreamEngine(g, delta=DELTA, max_k=max_k)
+        truth = []
+        for batch, cls in hub_stream(n_batches=n_batches, per_hub=per_hub,
+                                     hubs=hubs, seed=seed):
+            eng.step(batch)
+            truth.extend(int(c) for c in cls)
+        return g, eng, np.asarray(truth, np.int8)
+
+    g_free, eng_free, truth = run(None)
+    g_cap, eng_cap, _ = run(cap)
+    # both arms saw the identical insert-only stream, so the id sets match
+    ids, pred_free = eng_free.predictions()
+    _, pred_cap = eng_cap.predictions()
+    return {
+        "max_k": cap,
+        "agreement": round(float((pred_free == pred_cap).mean()), 4),
+        "accuracy_untruncated": round(accuracy(pred_free, truth[ids]), 4),
+        "accuracy_truncated": round(accuracy(pred_cap, truth[ids]), 4),
+        "natural_max_K": max(k for _, k in eng_free.bucket_keys),
+        "capped_max_K": max(k for _, k in eng_cap.bucket_keys),
+        "rungs_untruncated": len(eng_free.bucket_keys),
+        "rungs_truncated": len(eng_cap.bucket_keys),
+        "agreement_floor": MAX_K_AGREEMENT_FLOOR,
+    }
+
+
 def main(full: bool = False, out: str = OUT, tiny: bool = False,
          check: bool = False) -> dict:
     n_dev = len(jax.devices())
@@ -188,6 +229,18 @@ def main(full: bool = False, out: str = OUT, tiny: bool = False,
             if mesh is not None:
                 assert sharded["plan_builds"] <= len(sharded["bucket_keys"]), (
                     name, sharded["plan_builds"], sharded["bucket_keys"])
+    mk = _run_max_k_accuracy(
+        n_batches=3 if tiny else 5, per_hub=12 if tiny else 20)
+    results["max_k_accuracy"] = mk
+    print(f"max_k_accuracy: K {mk['natural_max_K']} -> {mk['capped_max_K']} "
+          f"({mk['rungs_untruncated']} -> {mk['rungs_truncated']} rungs) | "
+          f"agreement {mk['agreement']:.3f} (floor {mk['agreement_floor']}) | "
+          f"accuracy {mk['accuracy_untruncated']:.3f} untruncated / "
+          f"{mk['accuracy_truncated']:.3f} truncated")
+    if check:
+        assert mk["agreement"] >= MAX_K_AGREEMENT_FLOOR, mk
+        # bucket_keys hold the LADDER-padded K, so compare on the rung
+        assert mk["capped_max_K"] <= bucket_k(mk["max_k"]), mk
     with open(out, "w") as fh:
         json.dump(results, fh, indent=2)
     print(f"wrote {os.path.abspath(out)}")

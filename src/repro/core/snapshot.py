@@ -39,6 +39,71 @@ class Snapshot:
     remap: np.ndarray  # (num_nodes,) global -> compact (or -1)
 
 
+@dataclasses.dataclass(frozen=True)
+class LabelView:
+    """Immutable query-side view of the labels at one commit point.
+
+    The serving layer answers label queries from the *last committed*
+    snapshot while the next batch's solve may still be in flight — and
+    ``StreamEngine.submit`` mutates the host graph (new vertices, deleted
+    rows, supernode label inits) *before* that solve commits.  A query
+    that read the live ``DynamicGraph`` mid-flight would therefore see a
+    torn state.  ``LabelView`` is the fix: plain numpy copies of
+    ``(f, labels, alive)`` frozen at drain time, so reads are consistent,
+    never block on the device, and vertices from a not-yet-committed
+    batch simply don't exist yet.  Built by ``StreamEngine.drain`` (one
+    view per commit); served by ``serving.lp_service.LPService``.
+    """
+
+    f: np.ndarray  # (num_nodes,) float32 fractional labels
+    labels: np.ndarray  # (num_nodes,) int8 ground truth (UNLABELED = -1)
+    alive: np.ndarray  # (num_nodes,) bool
+    commit_id: int  # number of committed (drained) batches behind this view
+
+    def __post_init__(self):
+        for a in (self.f, self.labels, self.alive):
+            a.setflags(write=False)
+
+    @classmethod
+    def from_graph(cls, g: DynamicGraph, commit_id: int = 0) -> "LabelView":
+        return cls(f=g.f.copy(), labels=g.labels.copy(),
+                   alive=g.alive.copy(), commit_id=commit_id)
+
+    @property
+    def num_nodes(self) -> int:
+        return len(self.labels)
+
+    def predictions(self, cutoff: float = 0.5) -> tuple[np.ndarray, np.ndarray]:
+        """(global ids, binary predictions) for alive unlabeled vertices —
+        the committed-state twin of ``StreamEngine.predictions``."""
+        ids = np.flatnonzero(self.alive & (self.labels == UNLABELED))
+        return ids, (self.f[ids] >= cutoff).astype(np.int8)
+
+    def query(self, node_ids, cutoff: float = 0.5
+              ) -> tuple[np.ndarray, np.ndarray]:
+        """Per-node (prediction, confidence) for arbitrary global ids.
+
+        Ground-truth seeds answer with their label at confidence 1.0;
+        unlabeled alive vertices with their thresholded fractional label
+        at confidence ``max(f, 1-f)``; dead or never-seen ids (including
+        vertices inserted by a batch that has not committed yet) with
+        ``UNLABELED`` at confidence 0.0.
+        """
+        ids = np.asarray(node_ids, np.int64).reshape(-1)
+        pred = np.full(len(ids), UNLABELED, np.int8)
+        conf = np.zeros(len(ids), np.float32)
+        known = (ids >= 0) & (ids < self.num_nodes)
+        live = known.copy()
+        live[known] = self.alive[ids[known]]
+        kn = ids[live]
+        seeded = self.labels[kn] != UNLABELED
+        f = self.f[kn]
+        pred[live] = np.where(seeded, self.labels[kn],
+                              (f >= cutoff).astype(np.int8))
+        conf[live] = np.where(seeded, 1.0, np.maximum(f, 1.0 - f))
+        return pred, conf
+
+
 @dataclasses.dataclass
 class HostSnapshot:
     """Numpy twin of ``Snapshot`` — not yet shipped to the device.

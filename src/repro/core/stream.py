@@ -53,7 +53,7 @@ from repro.core.components import compact_labels
 from repro.core.dynlp import gprime_components
 from repro.core.init_labels import supernode_init
 from repro.core.propagate import PropagationProblem
-from repro.core.snapshot import HostSnapshot, build_host_problem
+from repro.core.snapshot import HostSnapshot, LabelView, build_host_problem
 from repro.graph.dynamic import UNLABELED, BatchUpdate, DynamicGraph
 from repro.kernels import ops
 
@@ -67,7 +67,8 @@ class StreamStats:
     num_unlabeled: int
     wall_ms: float
     max_residual: float
-    bucket: tuple[int, int]  # (U_bucket, K_bucket) device shape this Δ_t
+    bucket: tuple[int, int]  # (U_bucket, K_bucket) device shape this Δ_t;
+    # (0, 0) for a no-op Δ_t whose empty frontier staged nothing
     recompiled: bool  # True iff this Δ_t triggered any XLA compile
 
 
@@ -79,13 +80,20 @@ def _adopt(old: PropagationProblem, new: PropagationProblem) -> PropagationProbl
 
 @dataclasses.dataclass
 class _Pending:
-    res: object  # PropagateResult (device, possibly still in flight)
+    res: object  # PropagateResult (device, possibly still in flight);
+    # None for a no-op batch whose frontier was empty (nothing to solve)
     unl_ids: np.ndarray
     t0: float
     num_components: int
     frontier_size: int
     bucket: tuple[int, int]
     recompiled: bool
+    # Post-batch host state captured at submit (after the previous drain
+    # folded its labels in): becomes the committed LabelView at drain,
+    # with this batch's solved rows folded over view_f.
+    view_labels: np.ndarray
+    view_alive: np.ndarray
+    view_f: np.ndarray
 
 
 class StreamEngine:
@@ -133,6 +141,11 @@ class StreamEngine:
         self.bucket_keys: set[tuple[int, int]] = set()
         self.recompile_count = 0  # batches that triggered any XLA compile
         self.batches = 0
+        self.commits = 0  # batches whose results have been drained
+        # Query-side committed snapshot (serving read path): refreshed at
+        # every drain, never mutated in place — readers hold a consistent
+        # view while the next batch's solve is in flight.
+        self._view = LabelView.from_graph(graph, commit_id=0)
 
     # ------------------------------------------------------------------ #
     def _plan_for(self, key: tuple[int, int]) -> distributed.StreamShardPlan:
@@ -194,18 +207,42 @@ class StreamEngine:
         effect = g.apply_batch(batch, tau=self.tau)
         m = len(effect.new_ids)
 
+        # ``effect.affected`` is already alive-filtered, so the frontier
+        # below is nonempty iff some affected vertex is unlabeled — an
+        # O(|affected|) test, decided BEFORE the O(U·K) snapshot build.
+        if not (len(effect.affected)
+                and (g.labels[effect.affected] == UNLABELED).any()):
+            # No-op Δ_t (empty batch, or deletions touching nothing
+            # unlabeled): the solve would run zero sweeps and return f0
+            # bit-identically, so skip the snapshot build, device staging
+            # and dispatch entirely.  The batch still commits — drain()
+            # publishes a LabelView reflecting any alive/labels changes.
+            prev = self.drain()
+            self.batches += 1
+            unl_ids = np.flatnonzero(g.alive & (g.labels == UNLABELED))
+            self._pending = _Pending(
+                res=None, unl_ids=unl_ids, t0=t0,
+                num_components=0, frontier_size=0,
+                bucket=(0, 0),  # nothing staged this Δ_t
+                recompiled=False,
+                view_labels=g.labels.copy(), view_alive=g.alive.copy(),
+                view_f=g.f.copy(),
+            )
+            return prev
+
         # ---- stage batch-t topology while batch t-1 still propagates ----
         host = build_host_problem(g, max_degree=self.max_degree,
                                   auto_bucket=True,
                                   row_multiple=self._row_multiple,
                                   max_k=self.max_k)
-        plan = self._plan_for(host.bucket_key) if self.mesh is not None else None
-        problem = self._commit(host, plan)
         u = len(host.unl_ids)
         u_pad = len(host.valid)
         frontier = np.zeros(u_pad, bool)
         aff_rows = host.remap[effect.affected]
         frontier[aff_rows[aff_rows >= 0]] = True
+
+        plan = self._plan_for(host.bucket_key) if self.mesh is not None else None
+        problem = self._commit(host, plan)
         frontier_dev = (plan.put_row(frontier) if plan is not None
                         else jnp.asarray(frontier))
 
@@ -247,29 +284,77 @@ class StreamEngine:
             res=res, unl_ids=host.unl_ids, t0=t0,
             num_components=n_components, frontier_size=int(frontier.sum()),
             bucket=host.bucket_key, recompiled=recompiled,
+            # Batch-t host state (labels/alive fixed by apply_batch above;
+            # f now holds batch t-1's committed labels plus this batch's
+            # supernode inits).  drain() folds the solved rows over view_f
+            # and publishes the result as the committed LabelView.
+            view_labels=g.labels.copy(), view_alive=g.alive.copy(),
+            view_f=g.f.copy(),
         )
         return prev
 
     # ------------------------------------------------------------------ #
     def drain(self) -> StreamStats | None:
         """Block on the in-flight solve and fold its labels back into the
-        host graph; returns its stats (None if nothing is pending)."""
+        host graph; returns its stats (None if nothing is pending).
+
+        Draining COMMITS the batch: the committed ``LabelView`` is
+        rebuilt here (solved rows folded over the state captured at
+        submit), so ``committed_view()`` readers flip atomically from
+        batch t-1's labels to batch t's."""
         p, self._pending = self._pending, None
         if p is None:
             return None
-        f = np.asarray(p.res.f)  # synchronizes
-        self.graph.f[p.unl_ids] = f[: len(p.unl_ids)]
+        if p.res is None:  # no-op batch: nothing was solved
+            iterations, converged, resid = 0, True, 0.0
+        else:
+            f = np.asarray(p.res.f)  # synchronizes
+            self.graph.f[p.unl_ids] = f[: len(p.unl_ids)]
+            p.view_f[p.unl_ids] = f[: len(p.unl_ids)]
+            iterations = int(p.res.iterations)
+            converged = bool(p.res.converged)
+            resid = float(p.res.max_residual)
+        self.commits += 1
+        self._view = LabelView(f=p.view_f, labels=p.view_labels,
+                               alive=p.view_alive, commit_id=self.commits)
         return StreamStats(
-            iterations=int(p.res.iterations),
-            converged=bool(p.res.converged),
+            iterations=iterations,
+            converged=converged,
             num_components=p.num_components,
             frontier_size=p.frontier_size,
             num_unlabeled=len(p.unl_ids),
             wall_ms=(time.perf_counter() - p.t0) * 1e3,
-            max_residual=float(p.res.max_residual),
+            max_residual=resid,
             bucket=p.bucket,
             recompiled=p.recompiled,
         )
+
+    # ------------------------------------------------------------------ #
+    def poll(self) -> StreamStats | None:
+        """Non-blocking ``drain``: commit the in-flight batch only if its
+        device solve has already finished; otherwise return None without
+        waiting.  The serving layer calls this between requests so commits
+        land as soon as the device is done, never stalling the caller."""
+        p = self._pending
+        if p is None:
+            return None
+        if p.res is not None and not p.res.f.is_ready():
+            return None
+        return self.drain()
+
+    @property
+    def in_flight(self) -> bool:
+        """True while a submitted batch has not been drained (committed)."""
+        return self._pending is not None
+
+    def committed_view(self) -> LabelView:
+        """The query-side snapshot of the last COMMITTED batch.
+
+        Safe to read while a later batch is in flight: ``submit`` mutates
+        the host graph immediately, but the view only advances at drain
+        time, so readers never observe a torn half-applied batch.  Before
+        any commit it reflects the graph the engine was built around."""
+        return self._view
 
     # ------------------------------------------------------------------ #
     def step(self, batch: BatchUpdate) -> StreamStats:

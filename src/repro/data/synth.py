@@ -82,6 +82,43 @@ def gaussian_mixture_stream(
         del n_unl
 
 
+def hub_stream(
+    n_batches: int = 5,
+    per_hub: int = 20,
+    hubs: int = 2,
+    emb_dim: int = 8,
+    class_sep: float = 2.0,
+    spread: float = 0.02,
+    seed: int = 0,
+) -> Iterator[tuple[BatchUpdate, np.ndarray]]:
+    """Hub-heavy stream: every batch drops ``per_hub`` vertices into a
+    tight cloud around each of ``hubs`` fixed centers, so the hub
+    vertices' kNN in-degree — and the snapshot's natural ELL K — grows
+    with every batch.  The stress case for the ``max_k`` heaviest-edge
+    cap (ROADMAP follow-up): without a cap the K-bucket ladder climbs
+    batch after batch; with one, truncation must not change the label a
+    hub neighborhood converges to.  Hubs alternate classes along axis 0
+    (ground truth = nearest hub's class); batch 0 seeds one labeled
+    anchor per class at the hub centers.
+    """
+    rng = np.random.default_rng(seed)
+    centers = np.zeros((hubs, emb_dim), np.float32)
+    cls = (np.arange(hubs) % 2).astype(np.int8)
+    centers[:, 0] = np.where(cls == 1, class_sep / 2, -class_sep / 2)
+    centers[:, 1] = np.arange(hubs)  # separate hubs within a class
+    for b in range(n_batches):
+        emb = np.repeat(centers, per_hub, axis=0) + rng.normal(
+            0, spread, (hubs * per_hub, emb_dim)).astype(np.float32)
+        truth = np.repeat(cls, per_hub)
+        labels = np.full(len(emb), UNLABELED, np.int8)
+        if b == 0:  # seed the hub centers themselves, ground-truth labeled
+            emb = np.concatenate([centers, emb])
+            truth = np.concatenate([cls, truth])
+            labels = np.concatenate([cls, labels])
+        yield BatchUpdate(ins_emb=emb, ins_labels=labels,
+                          del_ids=np.zeros(0, np.int64)), truth
+
+
 def seeded_graph(
     n: int, spec: StreamSpec, frac_labeled: float = 0.01
 ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:

@@ -1,0 +1,338 @@
+"""Request-level label-propagation serving on the streaming engine.
+
+``LPService`` turns the batch-oriented ``core.stream.StreamEngine`` into
+a front-end for the two request kinds a label service sees:
+
+  * **queries** — predict labels/confidences for arbitrary node sets.
+    Served entirely from the engine's last *committed* ``LabelView``
+    (the read side of the double buffer), so reads never block on an
+    in-flight propagation and never observe a torn half-applied batch.
+  * **mutations** — vertex inserts (embeddings + optional ground-truth
+    labels) and vertex deletes.  Mutations are coalesced into one
+    ``BatchUpdate`` per *admission window* — the window closes when it
+    reaches ``window_ops`` operations or ``window_ms`` milliseconds,
+    whichever first — and admitted through ``StreamEngine.submit`` so
+    host staging of window t+1 overlaps device propagation of window t.
+
+Commit flow: ``submit`` pipelines; ``poll`` (called from ``pump`` /
+``mutate``) commits a finished solve without blocking; ``sync`` flushes
+the open window and blocks until everything admitted has committed —
+after ``sync()`` returns, queries see every prior mutation
+(read-your-writes).  Each mutation gets a ``MutationTicket`` whose
+commit latency feeds the service stats (``benchmarks/serve_lp.py``
+reports the percentiles).
+
+Backpressure: when queued + in-flight operations would exceed
+``max_pending_ops``, ``mutate`` either blocks draining the backlog
+(default) or raises ``Backpressure`` (``reject_on_overload=True``) so
+callers can shed load.  See docs/serving.md.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.core.snapshot import LabelView
+from repro.core.stream import StreamEngine, StreamStats
+from repro.graph.dynamic import UNLABELED, BatchUpdate
+
+
+class Backpressure(RuntimeError):
+    """Raised when the mutation queue bound would be exceeded and the
+    service was configured to reject rather than block."""
+
+
+@dataclasses.dataclass
+class MutationTicket:
+    """Tracks one mutation from enqueue to commit."""
+
+    ticket: int
+    ops: int  # inserted vertices + delete requests in this mutation
+    enqueued_at: float  # perf_counter at enqueue
+    committed_at: float | None = None
+    commit_id: int | None = None  # engine commit that made it visible
+
+    @property
+    def committed(self) -> bool:
+        return self.committed_at is not None
+
+    @property
+    def latency_ms(self) -> float | None:
+        if self.committed_at is None:
+            return None
+        return (self.committed_at - self.enqueued_at) * 1e3
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryResult:
+    """Answer for one query request, consistent as of ``commit_id``."""
+
+    ids: np.ndarray  # (Q,) the requested global ids
+    pred: np.ndarray  # (Q,) int8 — 0/1, or UNLABELED for dead/unknown ids
+    confidence: np.ndarray  # (Q,) float32 — 1.0 for seeds, 0.0 dead/unknown
+    commit_id: int  # committed batch the answer reflects
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceStats:
+    queries: int
+    query_nodes: int
+    queries_while_inflight: int  # reads served while a solve was pending
+    mutations: int
+    ops_accepted: int
+    rejected: int  # mutations refused by backpressure
+    batches_admitted: int
+    batches_committed: int
+    pending_ops: int  # queued (window) + in-flight right now
+    recompiles: int  # engine recompile count (bucket-ladder bounded)
+    bucket_rungs: int
+    commit_latency_ms: dict  # p50/p95/p99/max over the last <=4096 commits
+
+
+@dataclasses.dataclass
+class _QueuedMutation:
+    ticket: MutationTicket
+    ins_emb: np.ndarray
+    ins_labels: np.ndarray
+    del_ids: np.ndarray
+
+
+class LPService:
+    """Query/mutation front-end over a ``StreamEngine`` (see module doc).
+
+    The service is clocked by its callers: ``mutate`` and ``pump`` check
+    the admission deadline and harvest finished solves; ``query`` is a
+    pure read and touches neither the device nor the window.
+    """
+
+    def __init__(
+        self,
+        engine: StreamEngine,
+        *,
+        window_ops: int = 64,
+        window_ms: float = 50.0,
+        max_pending_ops: int = 1024,
+        reject_on_overload: bool = False,
+        cutoff: float = 0.5,
+    ):
+        if window_ops < 1:
+            raise ValueError("window_ops must be >= 1")
+        if max_pending_ops < window_ops:
+            raise ValueError("max_pending_ops must be >= window_ops")
+        self.engine = engine
+        self.window_ops = window_ops
+        self.window_ms = window_ms
+        self.max_pending_ops = max_pending_ops
+        self.reject_on_overload = reject_on_overload
+        self.cutoff = cutoff
+
+        self._window: list[_QueuedMutation] = []
+        self._window_ops = 0
+        self._window_t0: float | None = None  # opened when first op queued
+        self._inflight: list[MutationTicket] = []
+        self._inflight_ops = 0
+        self._next_ticket = 0
+        # Rolling window: a long-lived service must not grow a per-
+        # mutation history (or re-percentile it) without bound.
+        self._commit_latency_ms: collections.deque[float] = \
+            collections.deque(maxlen=4096)
+
+        self.queries = 0
+        self.query_nodes = 0
+        self.queries_while_inflight = 0
+        self.mutations = 0
+        self.ops_accepted = 0
+        self.rejected = 0
+        self.batches_admitted = 0
+        self.batches_committed = 0
+
+    # ------------------------------------------------------------------ #
+    # read path
+    # ------------------------------------------------------------------ #
+    def query(self, node_ids, cutoff: float | None = None) -> QueryResult:
+        """Labels + confidences for ``node_ids`` from the last committed
+        snapshot.  Never blocks; ids from a batch that has not committed
+        yet answer ``UNLABELED`` at confidence 0."""
+        view = self.engine.committed_view()
+        ids = np.asarray(node_ids, np.int64).reshape(-1)
+        pred, conf = view.query(ids, self.cutoff if cutoff is None else cutoff)
+        self.queries += 1
+        self.query_nodes += len(ids)
+        if self.engine.in_flight:
+            self.queries_while_inflight += 1
+        return QueryResult(ids=ids, pred=pred, confidence=conf,
+                           commit_id=view.commit_id)
+
+    def committed_view(self) -> LabelView:
+        return self.engine.committed_view()
+
+    # ------------------------------------------------------------------ #
+    # write path
+    # ------------------------------------------------------------------ #
+    def mutate(
+        self,
+        ins_emb: np.ndarray | None = None,
+        ins_labels: np.ndarray | None = None,
+        del_ids: np.ndarray | None = None,
+    ) -> MutationTicket:
+        """Enqueue one mutation (inserts and/or deletes) for the current
+        admission window; returns its ticket.  May admit a batch (window
+        full or deadline passed) and, under backpressure, may block until
+        the backlog drains — or raise ``Backpressure`` if configured to
+        reject."""
+        dim = self.engine.graph.emb_dim
+        emb = (np.zeros((0, dim), np.float32) if ins_emb is None
+               else np.asarray(ins_emb, np.float32).reshape(-1, dim))
+        if ins_labels is None:
+            labels = np.full(len(emb), UNLABELED, np.int8)
+        else:
+            labels = np.asarray(ins_labels, np.int8).reshape(-1)
+        if len(labels) != len(emb):
+            raise ValueError(
+                f"ins_labels length {len(labels)} != ins_emb rows {len(emb)}")
+        dels = (np.zeros(0, np.int64) if del_ids is None
+                else np.asarray(del_ids, np.int64).reshape(-1))
+        ops = len(emb) + len(dels)
+        if ops == 0:
+            raise ValueError("empty mutation: no inserts and no deletes")
+
+        self.pump()  # harvest a finished solve / deadline-flush first
+        if self._pending_ops() + ops > self.max_pending_ops:
+            if self.reject_on_overload:
+                self.rejected += 1
+                raise Backpressure(
+                    f"mutation of {ops} ops over bound: "
+                    f"{self._pending_ops()} pending, "
+                    f"max_pending_ops={self.max_pending_ops}")
+            self._relieve(ops)
+
+        ticket = MutationTicket(ticket=self._next_ticket, ops=ops,
+                                enqueued_at=time.perf_counter())
+        self._next_ticket += 1
+        self._window.append(_QueuedMutation(ticket, emb, labels, dels))
+        self._window_ops += ops
+        if self._window_t0 is None:
+            self._window_t0 = time.perf_counter()
+        self.mutations += 1
+        self.ops_accepted += ops
+        if self._window_ops >= self.window_ops:
+            self._admit()
+        return ticket
+
+    def pump(self) -> StreamStats | None:
+        """Advance the service without blocking: commit the in-flight
+        batch if its solve finished, then admit the open window if it hit
+        the size or deadline bound.  Returns commit stats if one landed."""
+        st = self.engine.poll()
+        if st is not None:
+            self._resolve(st)
+        if self._window and (
+                self._window_ops >= self.window_ops
+                or (time.perf_counter() - self._window_t0) * 1e3
+                >= self.window_ms):
+            self._admit()
+        return st
+
+    def flush(self) -> BatchUpdate | None:
+        """Force-admit the open window regardless of size/deadline;
+        returns the coalesced ``BatchUpdate`` (None if nothing queued)."""
+        st = self.engine.poll()
+        if st is not None:
+            self._resolve(st)
+        return self._admit()
+
+    def sync(self) -> StreamStats | None:
+        """Flush + block until every admitted batch has committed.  After
+        ``sync()`` returns, queries observe all prior mutations
+        (read-your-writes).  Returns the last commit's stats."""
+        self._admit()
+        st = self.engine.drain()
+        if st is not None:
+            self._resolve(st)
+        return st
+
+    # ------------------------------------------------------------------ #
+    def _pending_ops(self) -> int:
+        return self._window_ops + self._inflight_ops
+
+    def _relieve(self, incoming: int):
+        """Blockingly shrink the backlog until ``incoming`` fits."""
+        if incoming > self.max_pending_ops:
+            self.rejected += 1  # can never fit: rejected even in block mode
+            raise Backpressure(
+                f"single mutation of {incoming} ops exceeds "
+                f"max_pending_ops={self.max_pending_ops}")
+        while self._pending_ops() + incoming > self.max_pending_ops:
+            if self._inflight:
+                st = self.engine.drain()
+                if st is not None:
+                    self._resolve(st)
+            elif self._window:
+                self._admit()
+            else:  # pragma: no cover — nothing left to shed
+                break
+
+    def _admit(self) -> BatchUpdate | None:
+        """Coalesce the window into one BatchUpdate and submit it."""
+        if not self._window:
+            return None
+        window, self._window = self._window, []
+        ops, self._window_ops = self._window_ops, 0
+        self._window_t0 = None
+        batch = BatchUpdate(
+            ins_emb=np.concatenate([q.ins_emb for q in window]),
+            ins_labels=np.concatenate([q.ins_labels for q in window]),
+            del_ids=np.concatenate([q.del_ids for q in window]),
+        )
+        # submit internally drains the previous batch — those are the
+        # current in-flight tickets, resolved below if that drain ran.
+        prev = self.engine.submit(batch)
+        if prev is not None:
+            self._resolve(prev)
+        self._inflight = [q.ticket for q in window]
+        self._inflight_ops = ops
+        self.batches_admitted += 1
+        return batch
+
+    def _resolve(self, stats: StreamStats):
+        """Mark the in-flight tickets committed (their batch drained)."""
+        now = time.perf_counter()
+        for t in self._inflight:
+            t.committed_at = now
+            t.commit_id = self.engine.commits
+            self._commit_latency_ms.append(t.latency_ms)
+        self._inflight = []
+        self._inflight_ops = 0
+        self.batches_committed += 1
+
+    # ------------------------------------------------------------------ #
+    def stats(self) -> ServiceStats:
+        lat = self._commit_latency_ms
+        pct = {}
+        if lat:
+            arr = np.asarray(lat)
+            pct = {
+                "p50": round(float(np.percentile(arr, 50)), 3),
+                "p95": round(float(np.percentile(arr, 95)), 3),
+                "p99": round(float(np.percentile(arr, 99)), 3),
+                "max": round(float(arr.max()), 3),
+                "count": len(lat),
+            }
+        return ServiceStats(
+            queries=self.queries,
+            query_nodes=self.query_nodes,
+            queries_while_inflight=self.queries_while_inflight,
+            mutations=self.mutations,
+            ops_accepted=self.ops_accepted,
+            rejected=self.rejected,
+            batches_admitted=self.batches_admitted,
+            batches_committed=self.batches_committed,
+            pending_ops=self._pending_ops(),
+            recompiles=self.engine.recompile_count,
+            bucket_rungs=len(self.engine.bucket_keys),
+            commit_latency_ms=pct,
+        )

@@ -1,0 +1,53 @@
+"""max_k accuracy on hub-heavy graphs (ROADMAP follow-up): heaviest-edge
+truncation must cap the K-bucket ladder without degrading label quality.
+
+The agreement floor asserted here matches the ``--check`` gate of the
+``max_k_accuracy`` arm in benchmarks/stream_throughput.py.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.stream import StreamEngine
+from repro.data.synth import accuracy, hub_stream
+from repro.graph.dynamic import DynamicGraph
+
+AGREEMENT_FLOOR = 0.98  # truncated vs untruncated prediction agreement
+
+
+def _run(max_k, seed):
+    g = DynamicGraph(emb_dim=8, k=4)
+    eng = StreamEngine(g, delta=1e-4, max_k=max_k)
+    truth = {}
+    nid = 0
+    for batch, cls in hub_stream(n_batches=5, per_hub=20, hubs=4, seed=seed):
+        eng.step(batch)
+        for c in cls:
+            truth[nid] = int(c)
+            nid += 1
+    return g, eng, truth
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("seed", [0, 1])
+def test_max_k_truncation_keeps_label_agreement(seed):
+    _, eng_free, truth = _run(None, seed)
+    _, eng_cap, _ = _run(8, seed)
+
+    # the cap did real work: the free ladder climbed past it
+    k_free = max(k for _, k in eng_free.bucket_keys)
+    k_cap = max(k for _, k in eng_cap.bucket_keys)
+    assert k_free > 8 and k_cap <= 8, (k_free, k_cap)
+    assert len(eng_cap.bucket_keys) <= len(eng_free.bucket_keys)
+
+    # both arms saw the identical insert-only stream, so the id sets match
+    ids, pred_free = eng_free.predictions()
+    ids_cap, pred_cap = eng_cap.predictions()
+    np.testing.assert_array_equal(ids, ids_cap)
+    agreement = float((pred_free == pred_cap).mean())
+    assert agreement >= AGREEMENT_FLOOR, agreement
+
+    # and neither arm lost the ground truth
+    tr = np.array([truth[i] for i in ids])
+    assert accuracy(pred_free, tr) >= AGREEMENT_FLOOR
+    assert accuracy(pred_cap, tr) >= AGREEMENT_FLOOR

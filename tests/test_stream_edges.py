@@ -1,0 +1,128 @@
+"""StreamEngine edge cases: idle drains, empty batches, no-op deletes,
+pre-commit reads, and the non-blocking poll."""
+
+import time
+
+import numpy as np
+
+from repro.core.stream import StreamEngine
+from repro.graph.dynamic import UNLABELED, BatchUpdate, DynamicGraph
+
+
+def _empty_batch(dim=4):
+    return BatchUpdate(ins_emb=np.zeros((0, dim), np.float32),
+                       ins_labels=np.zeros(0, np.int8),
+                       del_ids=np.zeros(0, np.int64))
+
+
+def _seed_batch(rng, dim=4, n=20):
+    emb = rng.normal(0, 1, (n, dim)).astype(np.float32)
+    emb[0, 0], emb[1, 0] = 3.0, -3.0
+    labels = np.full(n, UNLABELED, np.int8)
+    labels[0], labels[1] = 1, 0
+    return BatchUpdate(ins_emb=emb, ins_labels=labels,
+                       del_ids=np.zeros(0, np.int64))
+
+
+def test_drain_with_nothing_pending_returns_none():
+    eng = StreamEngine(DynamicGraph(emb_dim=4, k=3))
+    assert eng.drain() is None
+    assert eng.poll() is None
+    assert not eng.in_flight
+
+
+def test_double_drain_second_returns_none():
+    rng = np.random.default_rng(0)
+    eng = StreamEngine(DynamicGraph(emb_dim=4, k=3), delta=1e-4)
+    eng.submit(_seed_batch(rng))
+    assert eng.drain() is not None
+    assert eng.drain() is None
+    assert eng.commits == 1
+
+
+def test_empty_batch_on_empty_graph_is_noop_without_device_work():
+    g = DynamicGraph(emb_dim=4, k=3)
+    eng = StreamEngine(g, delta=1e-4)
+    st = eng.step(_empty_batch())
+    assert st.converged and st.iterations == 0 and st.frontier_size == 0
+    # the no-op path never touches the device: no buffers, no compiles
+    assert not st.recompiled and eng.recompile_count == 0
+    assert not eng.bucket_keys
+    assert eng.batches == eng.commits == 1
+
+
+def test_empty_batch_on_live_graph_commits_unchanged_labels():
+    rng = np.random.default_rng(1)
+    g = DynamicGraph(emb_dim=4, k=3)
+    eng = StreamEngine(g, delta=1e-4)
+    eng.step(_seed_batch(rng))
+    f_before = g.f.copy()
+    compiles_before = eng.recompile_count
+    st = eng.step(_empty_batch())
+    assert st.converged and st.iterations == 0
+    assert eng.recompile_count == compiles_before  # no dispatch at all
+    np.testing.assert_array_equal(g.f, f_before)
+    np.testing.assert_array_equal(eng.committed_view().f, f_before)
+    assert eng.committed_view().commit_id == 2
+
+
+def test_delete_of_unknown_ids_is_noop_commit():
+    """Deleting never-seen / already-dead ids changes nothing but still
+    commits (the view advances) without a solve."""
+    rng = np.random.default_rng(2)
+    g = DynamicGraph(emb_dim=4, k=3)
+    eng = StreamEngine(g, delta=1e-4)
+    eng.step(_seed_batch(rng))
+    alive_before = g.alive.copy()
+    st = eng.step(BatchUpdate(ins_emb=np.zeros((0, 4), np.float32),
+                              ins_labels=np.zeros(0, np.int8),
+                              del_ids=np.array([999, -5], np.int64)))
+    assert st.converged and st.frontier_size == 0 and not st.recompiled
+    np.testing.assert_array_equal(g.alive, alive_before)
+    assert eng.commits == 2
+
+
+def test_predictions_and_view_before_any_commit():
+    eng = StreamEngine(DynamicGraph(emb_dim=4, k=3))
+    ids, pred = eng.predictions()
+    assert len(ids) == 0 and len(pred) == 0
+    view = eng.committed_view()
+    assert view.commit_id == 0 and view.num_nodes == 0
+    p, c = view.query([0, 7, -1])
+    assert (p == UNLABELED).all() and (c == 0).all()
+
+
+def test_poll_commits_only_when_ready():
+    rng = np.random.default_rng(3)
+    g = DynamicGraph(emb_dim=4, k=3)
+    eng = StreamEngine(g, delta=1e-4)
+    assert eng.poll() is None  # nothing pending
+    eng.submit(_seed_batch(rng))
+    assert eng.in_flight
+    deadline = time.monotonic() + 30
+    st = None
+    while st is None and time.monotonic() < deadline:
+        st = eng.poll()
+    assert st is not None and st.converged
+    assert not eng.in_flight and eng.commits == 1
+    assert eng.poll() is None  # already committed
+
+
+def test_submit_after_empty_batch_resumes_normal_path():
+    """A no-op Δ_t must not wedge the pipeline: the next real batch
+    stages, solves, and commits as usual."""
+    rng = np.random.default_rng(4)
+    g = DynamicGraph(emb_dim=4, k=3)
+    eng = StreamEngine(g, delta=1e-4)
+    eng.submit(_seed_batch(rng))
+    eng.submit(_empty_batch())  # drains batch 0, queues the no-op
+    more = rng.normal([3, 0, 0, 0], 0.1, (10, 4)).astype(np.float32)
+    prev = eng.submit(BatchUpdate(ins_emb=more,
+                                  ins_labels=np.full(10, UNLABELED, np.int8),
+                                  del_ids=np.zeros(0, np.int64)))
+    assert prev is not None and prev.iterations == 0  # the no-op's stats
+    st = eng.drain()
+    assert st is not None and st.converged and st.frontier_size > 0
+    assert eng.batches == eng.commits == 3
+    assert eng.bucket_keys  # the real batches DID stage device buffers
+    assert eng.committed_view().commit_id == 3
