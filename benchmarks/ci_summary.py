@@ -1,0 +1,108 @@
+"""Render BENCH_stream.json / BENCH_serve.json headline numbers as a
+GitHub job-summary markdown table.
+
+The bench-smoke CI job appends this script's stdout to
+``$GITHUB_STEP_SUMMARY`` so perf regressions are visible on the PR
+checks page without downloading artifacts.  Missing files or keys render
+as ``—`` rather than failing: the summary is reporting, the gating lives
+in the benchmarks' ``--check``.
+
+Usage: ``python benchmarks/ci_summary.py [BENCH_stream.json] [BENCH_serve.json]``
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+
+def _load(path: str) -> dict:
+    try:
+        with open(path) as fh:
+            return json.load(fh)
+    except (OSError, ValueError):
+        return {}
+
+
+def _get(d: dict, *keys, default="—"):
+    for k in keys:
+        if not isinstance(d, dict) or k not in d:
+            return default
+        d = d[k]
+    return round(d, 3) if isinstance(d, float) else d
+
+
+def stream_rows(bench: dict) -> list[tuple[str, str]]:
+    rows = []
+    for cfg in ("ins_heavy_50", "churn_50"):
+        rows += [
+            (f"{cfg}: stream median ms/batch",
+             _get(bench, cfg, "stream", "median_ms")),
+            (f"{cfg}: speedup vs naive rebuild",
+             f"{_get(bench, cfg, 'median_per_batch_speedup')}x"),
+            (f"{cfg}: recompiles (≤ ladder)",
+             f"{_get(bench, cfg, 'stream', 'recompiles')} / "
+             f"{_get(bench, cfg, 'stream', 'ladder_bound')}"),
+        ]
+    tr = bench.get("transport", {})
+    if tr:
+        rows += [
+            ("transport: halo steady ms/batch",
+             _get(tr, "halo", "steady_median_ms")),
+            ("transport: allgather steady ms/batch",
+             _get(tr, "allgather", "steady_median_ms")),
+            ("transport: halo/allgather ratio",
+             _get(tr, "steady_median_ratio_halo_vs_allgather")),
+            ("transport: top-rung export fraction",
+             f"{_get(tr, 'top_rung_export_fraction')} "
+             f"({_get(tr, 'top_rung')})"),
+            ("transport: labels byte-identical",
+             _get(tr, "labels_identical")),
+            ("transport: halo plans / rungs / overflows",
+             f"{_get(tr, 'halo', 'plan_builds')} / "
+             f"{_get(tr, 'halo', 'rungs')} / "
+             f"{_get(tr, 'halo', 'overflows')}"),
+        ]
+    mk = bench.get("max_k_accuracy", {})
+    if mk:
+        rows.append(("max_k: truncated-vs-free agreement",
+                     f"{_get(mk, 'agreement')} "
+                     f"(floor {_get(mk, 'agreement_floor')})"))
+    return rows
+
+
+def serve_rows(bench: dict) -> list[tuple[str, str]]:
+    rows = []
+    for arm in ("serve", "serve_sharded"):
+        r = bench.get(arm)
+        if not r:
+            continue
+        rows += [
+            (f"{arm}: query calls/sec", _get(r, "query_calls_per_sec")),
+            (f"{arm}: node lookups/sec", _get(r, "node_lookups_per_sec")),
+            (f"{arm}: query p95 ms", _get(r, "query_latency_ms", "p95")),
+            (f"{arm}: commit p50/p95 ms",
+             f"{_get(r, 'mutation_commit_latency_ms', 'p50')} / "
+             f"{_get(r, 'mutation_commit_latency_ms', 'p95')}"),
+            (f"{arm}: queries while in-flight",
+             f"{_get(r, 'queries_while_inflight')} / {_get(r, 'queries')}"),
+        ]
+    return rows
+
+
+def main(stream_path: str = "BENCH_stream.json",
+         serve_path: str = "BENCH_serve.json") -> str:
+    lines = ["## Benchmark smoke headlines", ""]
+    for title, rows in (("stream throughput", stream_rows(_load(stream_path))),
+                        ("LP serving", serve_rows(_load(serve_path)))):
+        lines += [f"### {title}", "", "| metric | value |", "|---|---|"]
+        if not rows:
+            rows = [("(no data)", "—")]
+        lines += [f"| {k} | {v} |" for k, v in rows]
+        lines.append("")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    args = sys.argv[1:]
+    print(main(*args[:2]))

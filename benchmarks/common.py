@@ -1,7 +1,8 @@
-"""Shared benchmark utilities: stream runners + timing."""
+"""Shared benchmark utilities: stream runners, timing, --check gates."""
 
 from __future__ import annotations
 
+import sys
 import time
 
 import numpy as np
@@ -12,6 +13,31 @@ from repro.core.snapshot import build_problem
 from repro.core.stlp import STLP
 from repro.data.synth import StreamSpec, accuracy, gaussian_mixture_stream
 from repro.graph.dynamic import UNLABELED, DynamicGraph
+
+
+# ------------------------------------------------------------------ #
+# --check gate harness (shared by stream_throughput.py / serve_lp.py):
+# a violated recorded floor is collected as a one-line diff instead of
+# raising, so EVERY regression prints before the nonzero exit.
+# ------------------------------------------------------------------ #
+_CHECK_FAILURES: list[str] = []
+
+
+def check_gate(name: str, ok: bool, detail: str) -> None:
+    """Record a --check floor violation (reported by ``finish_checks``)."""
+    if not ok:
+        _CHECK_FAILURES.append(f"{name}: {detail}")
+
+
+def finish_checks() -> None:
+    """Print collected one-line diffs and exit nonzero if any floor was
+    violated; clears the collection either way (run.py may drive several
+    benchmarks in one process)."""
+    failures, _CHECK_FAILURES[:] = list(_CHECK_FAILURES), []
+    if failures:
+        for line in failures:
+            print("CHECK FAIL", line)
+        sys.exit(1)
 
 
 def run_stream(engine_cls, spec: StreamSpec, k: int = 5, **engine_kw):

@@ -16,24 +16,33 @@ partitionings).
 The body reuses the exact update semantics of ``core.propagate`` (same
 fixpoint, same iteration count), so single-device tests transfer.
 
-Two transports exist:
+Two transports exist, both built by ``make_sharded_propagate_fn`` and
+both wrapping the same pluggable per-shard *update* body
+(``backend="ref"`` inlines the XLA Jacobi update, ``backend="ell_pallas"``
+calls the fused ELL Pallas kernel over the shard's row block):
 
-  * all-gather (``make_sharded_propagate_fn`` / ``distributed_propagate``)
-    — shape-only partitioning (contiguous row blocks), usable for
-    streaming because the plan depends on the bucket shape, not the
-    topology.  The per-shard *update* body is pluggable: ``backend="ref"``
-    inlines the XLA Jacobi update, ``backend="ell_pallas"`` calls the
-    fused ELL Pallas kernel over the shard's row block with the gathered
-    global F.
-  * halo-exchange (``make_propagate_halo_fn``) — ships only export
-    prefixes, but the export layout is topology-dependent
-    (``graph.partition.build_halo_plan``), so it stays a one-shot API;
-    an evolving stream would have to re-plan every Δ_t.
+  * ``transport="allgather"`` — every shard's full F block is gathered
+    per iteration.  Shape-only partitioning (contiguous row blocks),
+    topology-free, the safe default.
+  * ``transport="halo"`` — only each shard's EXPORT PREFIX (length
+    ``export_max``) is gathered; rows must be laid out so every
+    cross-shard-referenced row leads its shard
+    (``graph.partition.build_halo_plan``).  The gathered prefixes are
+    scattered back into a full-length substitute vector whose entries
+    match the all-gathered F at every *referenced* position, so the
+    update body — and therefore the fixpoint, iteration count, and the
+    labels bit for bit — is identical to the all-gather transport while
+    the collective ships Σ|exports| instead of N values.
 
 ``StreamShardPlan`` packages the all-gather transport for
 ``core.stream.StreamEngine``: one plan per bucket-ladder rung (shape),
 reused across every batch that lands in that rung, holding the row
 shardings for staging and the jitted (optionally f0-donating) runner.
+``StreamHaloPlan`` is its halo twin: same per-rung lifecycle, plus the
+rung's compiled export budget — the engine re-derives the export *layout*
+per Δ_t on the host (stale exports within the budget are harmless: they
+carry committed labels) and falls back to all-gather for any batch whose
+exports overflow the budget.
 """
 
 from __future__ import annotations
@@ -68,11 +77,13 @@ def shard_map(f, *, mesh, in_specs, out_specs):
     return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
                       **_CHECK_KW)
 
-from repro.core.propagate import PropagateResult, PropagationProblem
+from repro.core.propagate import (PropagateResult, PropagationProblem,
+                                  update_island)
 from repro.graph.structures import PAD
 from repro.kernels.ell_propagate import ell_propagate_step
 
 STREAM_BACKENDS = ("ref", "ell_pallas")
+TRANSPORTS = ("allgather", "halo")
 
 
 class ShardedProblem(NamedTuple):
@@ -106,16 +117,31 @@ def make_sharded_propagate_fn(
     block_rows: int = 512,
     interpret: bool | None = None,
     donate: bool = False,
+    transport: str = "allgather",
+    export_max: int | None = None,
 ):
-    """Build the jitted all-gather propagation step (lowerable with
+    """Build the jitted sharded propagation step (lowerable with
     ShapeDtypeStructs for the LP roofline dry-run).
 
     The per-shard update body is the selected single-device backend:
     ``"ref"`` inlines the exact ``core.propagate`` Jacobi arithmetic (same
     per-row reduction order, so sharded labels are bit-identical to the
     single-device engine); ``"ell_pallas"`` runs the fused ELL kernel over
-    the shard's row block against the all-gathered global F
+    the shard's row block against the gathered global F
     (``row_offset`` keys the kernel's F reads to this shard's rows).
+
+    ``transport`` picks the per-iteration collective: ``"allgather"``
+    ships every shard's full F block; ``"halo"`` ships only the leading
+    ``export_max`` rows of each shard and scatters them into a
+    full-length substitute vector (own block overwritten with exact local
+    values).  With rows laid out so every cross-shard-referenced row sits
+    inside its shard's export prefix (``graph.partition.build_halo_plan``),
+    the substitute agrees with the all-gathered F at every position the
+    update body reads, so both transports produce bit-identical labels —
+    the halo form just moves Σ|exports|·4 instead of N·4 bytes per
+    gather.  Positions outside any export prefix are zero-filled; they
+    are only ever touched by PAD-masked lanes whose contribution is
+    zeroed (ref) or weight-masked (ell_pallas).
 
     ``donate=True`` donates the f0 argument *per shard* — each device
     recycles its own label-block allocation across Δ_t (no-op on CPU).
@@ -124,7 +150,13 @@ def make_sharded_propagate_fn(
         raise ValueError(
             f"sharded backend {backend!r} not supported; want one of "
             f"{STREAM_BACKENDS} (bsr densifies O(U²) on the host)")
+    if transport not in TRANSPORTS:
+        raise ValueError(
+            f"transport {transport!r} not supported; want one of {TRANSPORTS}")
+    if transport == "halo" and (export_max is None or export_max < 1):
+        raise ValueError("transport='halo' needs export_max >= 1")
     axes = mesh.axis_names
+    n_dev = int(mesh.devices.size)
     delta_ = jnp.float32(delta)
     row = P(axes)  # rows sharded over ALL mesh axes (flattened view)
     row2 = P(axes, None)
@@ -142,8 +174,49 @@ def make_sharded_propagate_fn(
         idx = jnp.where(mask, nbr, 0)
         m = f_loc.shape[0]
 
-        def gather_full(x_loc):
-            return jax.lax.all_gather(x_loc, axes, tiled=True)
+        if transport == "halo":
+            e = min(export_max, m)
+            my = jax.lax.axis_index(axes)
+            my_row0 = my * m
+            owner = idx // m  # (m, K) owning shard of each referenced row
+            offset = idx % m
+            # (m, K) positions into the [local block | export prefixes]
+            # concat buffer built per gather below: local references read
+            # their own block, cross-shard ones read inside the owner's
+            # export prefix (guaranteed by the halo row layout; masked
+            # PAD lanes resolve to idx 0 = shard 0's prefix row 0, a
+            # defined value the update masks out).  Integer select, so
+            # the floating-point values reach the update through a plain
+            # gather — the same producer-op shape as the all-gather
+            # transport, which keeps XLA emitting the update arithmetic
+            # identically (bit-equality contract).
+            pos = jnp.where(owner == my, offset,
+                            m + owner * e + jnp.minimum(offset, e - 1))
+
+            def gather_full(x_loc):
+                """Full-length substitute vector (ell_pallas path: the
+                fused kernel indexes F globally, so the export prefixes
+                are scattered back into an (N,) buffer; own block is
+                exact, so reads of local rows never go stale)."""
+                ex = jax.lax.all_gather(x_loc[:e], axes, tiled=True)
+                full = jnp.zeros((n_dev, m), x_loc.dtype)
+                full = full.at[:, :e].set(ex.reshape(n_dev, e)).reshape(-1)
+                return jax.lax.dynamic_update_slice(full, x_loc, (my_row0,))
+
+            def gather_vals(x_loc):
+                """(m, K) values of x at the referenced positions — the
+                ref-body path: the collective ships only the (D, e)
+                export prefixes and values are picked per reference from
+                a small (m + D·e) concat buffer, never a full-length
+                temporary."""
+                ex = jax.lax.all_gather(x_loc[:e], axes, tiled=True)
+                return jnp.concatenate([x_loc, ex])[pos]
+        else:
+            def gather_full(x_loc):
+                return jax.lax.all_gather(x_loc, axes, tiled=True)
+
+            def gather_vals(x_loc):
+                return gather_full(x_loc)[idx]
 
         if backend == "ell_pallas":
             # Pad the shard's row block to a multiple of the kernel tile
@@ -157,8 +230,9 @@ def make_sharded_propagate_fn(
             wl0_k = jnp.pad(wl0, (0, m_pad - m))
             wl1_k = jnp.pad(wl1, (0, m_pad - m))
 
-        def update(f_l, fr_l, f_full):
+        def update(f_l, fr_l):
             if backend == "ell_pallas":
+                f_full = gather_full(f_l)  # (N,) — the collective
                 row0 = jax.lax.axis_index(axes) * m
                 f_new, changed = ell_propagate_step(
                     nbr_k, wgt_k, wl0_k, wl1_k,
@@ -166,22 +240,20 @@ def make_sharded_propagate_fn(
                     block_rows=r, interpret=interpret, row_offset=row0)
                 return f_new[:m], changed[:m] & valid
             f_u = f_l
-            f_v = f_full[idx]
-            nbr_term = jnp.sum(wgt * jnp.where(mask, f_v - f_u[:, None], 0.0),
-                               axis=1)
-            wall = jnp.sum(wgt, axis=1) + wl0 + wl1
-            d_f = (0.0 - f_u) * wl0 + (1.0 - f_u) * wl1 + nbr_term
-            f_new = f_u + jnp.where(wall > 0, d_f / jnp.maximum(wall, 1e-30), 0)
+            # the barrier-isolated Jacobi island — the exact HLO shared
+            # with the single-device engine, so every transport contracts
+            # the arithmetic identically (bit-equality contract); the
+            # transports differ only in how the (m, K) neighbor values
+            # are fetched, never in their bits
+            f_new = update_island(wgt, wl0, wl1, f_u, gather_vals(f_l), mask)
             f_new = jnp.where(fr_l, f_new, f_u)
             changed = (jnp.abs(f_new - f_u) > delta_) & valid
             return f_new, changed
 
         def body(state):
             f_l, fr_l, it, _ = state
-            f_full = gather_full(f_l)  # (N,) — the collective
-            f_new, changed_l = update(f_l, fr_l, f_full)
-            changed_full = gather_full(changed_l)
-            nbr_changed = jnp.any(changed_full[idx] & mask, axis=1)
+            f_new, changed_l = update(f_l, fr_l)
+            nbr_changed = jnp.any(gather_vals(changed_l) & mask, axis=1)
             fr_new = (changed_l | nbr_changed) & valid
             resid = jax.lax.pmax(
                 jnp.max(jnp.abs(f_new - f_l), initial=0.0), axes)
@@ -264,6 +336,8 @@ class StreamShardPlan:
     row2_sharding: jax.sharding.NamedSharding
     run: object  # jitted shard_map propagation fn
 
+    transport = "allgather"
+
     @property
     def n_devices(self) -> int:
         return self.mesh.devices.size
@@ -297,6 +371,53 @@ class StreamShardPlan:
                                max_residual=resid)
 
 
+@dataclasses.dataclass(frozen=True)
+class StreamHaloPlan(StreamShardPlan):
+    """Per-rung halo-exchange plan: ``StreamShardPlan`` + the rung's
+    compiled export-prefix budget.
+
+    The export *budget* (``export_max``) is fixed once per rung so the
+    jitted runner compiles once; the export *layout* (which rows lead
+    each shard) is re-derived per Δ_t on the host by the engine and is
+    allowed to overshoot the real export set — stale/extra prefix rows
+    ship committed labels, which is harmless.  A batch whose export
+    counts exceed the budget can't run on this plan; the engine falls
+    back to its all-gather twin for that Δ_t.
+    """
+
+    export_max: int = 0
+
+    transport = "halo"
+
+
+def _sharded_run_for(mesh, *, backend, delta, max_iters, block_rows,
+                     interpret, donate, transport="allgather",
+                     export_max=None):
+    """Fetch (or build, memoized) the jitted runner for one hyperparameter
+    set.  All-gather runners are shared across every rung (each rung is
+    one shape specialization in the jit cache); halo runners additionally
+    key on the rung's export budget."""
+    fn_key = (mesh, backend, float(delta), max_iters, block_rows, interpret,
+              donate, transport, export_max)
+    run = _FN_CACHE.get(fn_key)
+    if run is None:
+        run = make_sharded_propagate_fn(
+            mesh, backend=backend, delta=delta, max_iters=max_iters,
+            block_rows=block_rows, interpret=interpret, donate=donate,
+            transport=transport, export_max=export_max)
+        _FN_CACHE[fn_key] = run
+    return fn_key, run
+
+
+def _check_bucket(bucket_key, mesh):
+    u_pad, _ = bucket_key
+    n_dev = mesh.devices.size
+    if u_pad % n_dev != 0:
+        raise ValueError(
+            f"bucket rows {u_pad} not divisible by mesh device count "
+            f"{n_dev}; build snapshots with row_multiple={n_dev}")
+
+
 def build_stream_plan(
     mesh,
     bucket_key: tuple[int, int],
@@ -308,26 +429,17 @@ def build_stream_plan(
     interpret: bool | None = None,
     donate: bool = True,
 ) -> StreamShardPlan:
-    """Build (or fetch, memoized) the partition plan for one ladder rung.
+    """Build (or fetch, memoized) the all-gather partition plan for one
+    ladder rung.
 
     Rows must shard evenly: ``bucket_key[0]`` has to be a multiple of the
     mesh's device count (``core.snapshot.build_host_problem`` pads buckets
     with ``row_multiple=mesh.devices.size`` to guarantee it).
     """
-    u_pad, _ = bucket_key
-    n_dev = mesh.devices.size
-    if u_pad % n_dev != 0:
-        raise ValueError(
-            f"bucket rows {u_pad} not divisible by mesh device count "
-            f"{n_dev}; build snapshots with row_multiple={n_dev}")
-    fn_key = (mesh, backend, float(delta), max_iters, block_rows, interpret,
-              donate)
-    run = _FN_CACHE.get(fn_key)
-    if run is None:
-        run = make_sharded_propagate_fn(
-            mesh, backend=backend, delta=delta, max_iters=max_iters,
-            block_rows=block_rows, interpret=interpret, donate=donate)
-        _FN_CACHE[fn_key] = run
+    _check_bucket(bucket_key, mesh)
+    fn_key, run = _sharded_run_for(
+        mesh, backend=backend, delta=delta, max_iters=max_iters,
+        block_rows=block_rows, interpret=interpret, donate=donate)
     key = (fn_key, tuple(bucket_key))
     plan = _PLAN_CACHE.get(key)
     if plan is None:
@@ -339,6 +451,45 @@ def build_stream_plan(
             row_sharding=jax.sharding.NamedSharding(mesh, P(axes)),
             row2_sharding=jax.sharding.NamedSharding(mesh, P(axes, None)),
             run=run)
+        _PLAN_CACHE[key] = plan
+    return plan
+
+
+def build_stream_halo_plan(
+    mesh,
+    bucket_key: tuple[int, int],
+    export_max: int,
+    *,
+    backend: str = "ref",
+    delta: float = 1e-4,
+    max_iters: int = 100_000,
+    block_rows: int = 512,
+    interpret: bool | None = None,
+    donate: bool = True,
+) -> StreamHaloPlan:
+    """Halo twin of ``build_stream_plan``: one plan per (rung, export
+    budget), memoized.  Callers stage problems in the export-prefix row
+    layout of ``graph.partition.build_halo_plan`` and guarantee
+    ``export_counts.max() <= export_max`` for every batch they run on it.
+    """
+    _check_bucket(bucket_key, mesh)
+    m = bucket_key[0] // mesh.devices.size
+    export_max = int(min(max(1, export_max), m))
+    fn_key, run = _sharded_run_for(
+        mesh, backend=backend, delta=delta, max_iters=max_iters,
+        block_rows=block_rows, interpret=interpret, donate=donate,
+        transport="halo", export_max=export_max)
+    key = (fn_key, tuple(bucket_key))
+    plan = _PLAN_CACHE.get(key)
+    if plan is None:
+        axes = mesh.axis_names
+        plan = StreamHaloPlan(
+            mesh=mesh, bucket_key=tuple(bucket_key), backend=backend,
+            delta=float(delta), max_iters=max_iters, block_rows=block_rows,
+            interpret=interpret,
+            row_sharding=jax.sharding.NamedSharding(mesh, P(axes)),
+            row2_sharding=jax.sharding.NamedSharding(mesh, P(axes, None)),
+            run=run, export_max=export_max)
         _PLAN_CACHE[key] = plan
     return plan
 
@@ -358,70 +509,15 @@ def sharded_cache_size() -> int:
 
 def make_propagate_halo_fn(mesh, rows_per_shard: int, export_max: int,
                            delta: float = 1e-4, max_iters: int = 100_000):
-    """Build the jitted halo-exchange propagation step.
-
-    Only each shard's EXPORT PREFIX is all-gathered per iteration
-    (cross-shard-referenced rows lead each shard —
-    ``graph.partition.build_halo_plan``).  For locality-ordered graphs the
-    exchanged bytes drop from N·4 to Σ|exports|·4 — the §Perf iteration on
-    the collective term.  Fixpoint and iteration count are identical to
-    the all-gather transport (same Jacobi update)."""
-    axes = mesh.axis_names
-    m = rows_per_shard
-    delta_ = jnp.float32(delta)
-    row = P(axes)
-    row2 = P(axes, None)
-
-    @functools.partial(
-        shard_map,
-        mesh=mesh,
-        in_specs=(row2, row2, row, row, row, row, row),
-        out_specs=(row, P(), P(), P()),
-    )
-    def run(nbr, wgt, wl0, wl1, valid, f_loc, fr_loc):
-        mask = nbr != PAD
-        gid = jnp.where(mask, nbr, 0)
-        owner = gid // m  # (m, K) owning shard of each neighbor
-        offset = gid % m
-        my = jax.lax.axis_index(axes)  # linearized index over all mesh axes
-        local_ref = owner == my
-
-        def body(state):
-            f_l, fr_l, it, _ = state
-            exports = jax.lax.all_gather(f_l[:export_max], axes)  # (D, E)
-            f_local_v = f_l[offset]  # own-shard values
-            f_remote_v = exports[owner, jnp.minimum(offset, export_max - 1)]
-            f_v = jnp.where(local_ref, f_local_v, f_remote_v)
-            f_u = f_l
-            nbr_term = jnp.sum(wgt * jnp.where(mask, f_v - f_u[:, None], 0.0),
-                               axis=1)
-            wall = jnp.sum(wgt, axis=1) + wl0 + wl1
-            d_f = (0.0 - f_u) * wl0 + (1.0 - f_u) * wl1 + nbr_term
-            f_new = f_u + jnp.where(wall > 0, d_f / jnp.maximum(wall, 1e-30), 0)
-            f_new = jnp.where(fr_l, f_new, f_u)
-            resid_l = jnp.abs(f_new - f_u)
-            changed_l = (resid_l > delta_) & valid
-            # frontier expansion needs changed flags of remote neighbors too
-            ch_exp = jax.lax.all_gather(changed_l[:export_max], axes)
-            ch_local = changed_l[offset]
-            ch_remote = ch_exp[owner, jnp.minimum(offset, export_max - 1)]
-            ch_v = jnp.where(local_ref, ch_local, ch_remote)
-            nbr_changed = jnp.any(ch_v & mask, axis=1)
-            fr_new = (changed_l | nbr_changed) & valid
-            resid = jax.lax.pmax(jnp.max(resid_l, initial=0.0), axes)
-            return f_new, fr_new, it + 1, resid
-
-        def cond(state):
-            _, fr_l, it, _ = state
-            any_frontier = jax.lax.pmax(fr_l.any().astype(jnp.int32), axes)
-            return jnp.logical_and(any_frontier > 0, it < max_iters)
-
-        f_l, fr_l, iters, resid = jax.lax.while_loop(
-            cond, body, (f_loc, fr_loc, jnp.int32(0), jnp.float32(0)))
-        done = jax.lax.pmax(fr_l.any().astype(jnp.int32), axes) == 0
-        return f_l, iters, done, resid
-
-    return jax.jit(run)
+    """Historical one-shot halo entry point — now a thin wrapper over the
+    unified ``make_sharded_propagate_fn(transport="halo")`` builder, so
+    the one-shot API and the streaming ``StreamHaloPlan`` path exercise
+    the same code.  ``rows_per_shard`` is kept for signature compat (the
+    traced shapes imply it)."""
+    del rows_per_shard
+    return make_sharded_propagate_fn(
+        mesh, backend="ref", delta=delta, max_iters=max_iters,
+        transport="halo", export_max=export_max)
 
 
 def distributed_propagate_halo(

@@ -73,7 +73,7 @@ class DynLP:
         max_degree: int | None = None,
         backend: str | None = None,
         auto_bucket: bool = True,
-        max_k: int | None = None,
+        max_k: int | None | str = "auto",
     ):
         self.graph = graph
         self.delta = delta
@@ -82,8 +82,15 @@ class DynLP:
         self.max_degree = max_degree
         # max_k caps the ELL neighbor axis via heaviest-edge truncation
         # (core.snapshot.build_host_problem) so hub vertices can't grow
-        # the K-bucket ladder unboundedly.
-        self.max_k = max_k
+        # the K-bucket ladder unboundedly.  Default "auto" = 4x the
+        # graph's kNN k — the same wiring as StreamEngine, so the
+        # stream-vs-recompute bit-equality suites compare engines with
+        # identical truncation; pass max_k=None for the uncapped form.
+        if isinstance(max_k, str) and max_k != "auto":
+            raise ValueError(
+                f"max_k={max_k!r} invalid; want an int, None (uncapped), "
+                "or 'auto' (4x the graph's kNN k)")
+        self.max_k = 4 * graph.k if max_k == "auto" else max_k
         # backend: kernels.ops dispatch ("auto"/None, "ref", "ell_pallas",
         # "bsr").  auto_bucket=False rebuilds at the exact (U, K) every
         # batch — the paper's "redundant recomputation" baseline that

@@ -55,6 +55,31 @@ def _gather_labels(f: jax.Array, nbr: jax.Array) -> tuple[jax.Array, jax.Array]:
     return f[idx], mask
 
 
+def update_island(wgt, wl0, wl1, f, f_v, mask):
+    """The per-row Jacobi arithmetic, isolated between optimization
+    barriers so it compiles IDENTICALLY in every program that embeds it.
+
+    XLA freely fuses this arithmetic with whatever surrounds it —
+    all-gather collectives, halo scatter reconstructions, donation copies
+    — and different fusion contexts can contract multiplies/adds (FMA)
+    differently, shifting a row's update by 1 ULP.  A row whose |ΔF|
+    straddles the δ threshold by that ULP then makes a different frontier
+    decision, and the engines' bit-equality contract (single-device ≡
+    all-gather ≡ halo, tests/test_stream_sharded.py) silently breaks.
+    Barriering every operand and the result pins the island's HLO to one
+    shape everywhere, so the contraction decision — whatever it is — is
+    the same in all engines.  The barriers are no-copy identity ops at
+    runtime; they only stop cross-boundary fusion.
+    """
+    wgt, wl0, wl1, f, f_v = jax.lax.optimization_barrier(
+        (wgt, wl0, wl1, f, f_v))
+    nbr_term = jnp.sum(wgt * jnp.where(mask, f_v - f[:, None], 0.0), axis=1)
+    wall = jnp.sum(wgt, axis=1) + wl0 + wl1
+    d_f = (0.0 - f) * wl0 + (1.0 - f) * wl1 + nbr_term
+    fu = f + jnp.where(wall > 0, d_f / jnp.maximum(wall, 1e-30), 0.0)
+    return jax.lax.optimization_barrier(fu)
+
+
 def lp_update(problem: PropagationProblem, f: jax.Array) -> jax.Array:
     """One unmasked LP update for every row (paper Eq. in §4 / Alg.2 L28).
 
@@ -62,10 +87,7 @@ def lp_update(problem: PropagationProblem, f: jax.Array) -> jax.Array:
     which §5 proves equals the classic weighted neighborhood average.
     """
     nbr_f, mask = _gather_labels(f, problem.nbr)
-    nbr_term = jnp.sum(problem.wgt * jnp.where(mask, nbr_f - f[:, None], 0.0), axis=1)
-    wall = problem.wall()
-    delta = (0.0 - f) * problem.wl0 + (1.0 - f) * problem.wl1 + nbr_term
-    fu = f + jnp.where(wall > 0, delta / jnp.maximum(wall, 1e-30), 0.0)
+    fu = update_island(problem.wgt, problem.wl0, problem.wl1, f, nbr_f, mask)
     return jnp.where(problem.valid, fu, f)
 
 

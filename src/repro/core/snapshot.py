@@ -126,6 +126,37 @@ class HostSnapshot:
         return self.nbr.shape
 
 
+def apply_halo_layout(host: HostSnapshot, plan) -> HostSnapshot:
+    """Reorder a host snapshot's rows into a halo export-prefix layout.
+
+    ``plan`` is a ``graph.partition.HaloPlan`` built from THIS snapshot's
+    ``nbr`` (same padded row count): rows permute so every
+    cross-shard-referenced row leads its shard, neighbor ids are already
+    remapped by the plan.  Row order is invisible to the fixpoint — each
+    row's K-axis reduction order is untouched and updates read neighbors
+    by id — so the permuted snapshot converges to bit-identical labels;
+    callers keep ``plan.inv_perm`` to fold solved rows back to
+    ``unl_ids`` order.  ``unl_ids``/``remap`` stay in ORIGINAL row order
+    (they index the pre-permutation rows, which is what the engine's
+    frontier/f0 construction uses before permuting).
+
+    Snapshot rows follow insertion order (``unl_ids`` ascends), so
+    streams whose arrival order is spatially local — see
+    ``data.synth.locality_stream`` — get contiguous row blocks whose kNN
+    edges mostly stay inside a shard: small export sets are a property
+    of the stream's locality, not of this reordering, which only makes
+    whatever export set exists contiguous per shard.
+    """
+    if len(plan.perm) != len(host.valid):
+        raise ValueError(
+            f"halo plan rows {len(plan.perm)} != snapshot rows "
+            f"{len(host.valid)}; build the plan from this snapshot's nbr")
+    p = plan.perm
+    return HostSnapshot(
+        nbr=plan.nbr, wgt=host.wgt[p], wl0=host.wl0[p], wl1=host.wl1[p],
+        valid=host.valid[p], unl_ids=host.unl_ids, remap=host.remap)
+
+
 def bucket(n: int, ratio: float = 1.3, floor: int = 256) -> int:
     """Round ``n`` up to a geometric bucket so jit caches hit across batches
     (the evolving graph would otherwise trigger one recompile per Δ_t)."""

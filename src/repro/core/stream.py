@@ -31,17 +31,27 @@ numerics — streamed labels are allclose to fresh per-batch DynLP results
 interchangeable.
 
 With ``mesh=`` the same stream spans a device mesh: rows of every bucket
-shard over all mesh axes through the ``core.distributed`` all-gather
+shard over all mesh axes through the ``core.distributed`` shard_map
 transport, buckets are padded to a multiple of the device count, and one
-partition plan per ladder rung (``StreamShardPlan``) is reused across
-every batch in that rung.  Labels stay bit-identical to the single-device
-engine (tests/test_stream_sharded.py).  See docs/streaming.md.
+partition plan per ladder rung is reused across every batch in that rung.
+``transport=`` picks the per-sweep collective: ``"allgather"`` ships
+every shard's full F block (topology-free); ``"halo"`` ships only each
+shard's export prefix, with the export budget compiled once per rung
+(``StreamHaloPlan``) and the export row layout re-derived per Δ_t on the
+host — a batch whose exports overflow the rung's budget falls back to
+all-gather for that Δ_t with a logged warning.  ``"auto"`` (default)
+measures the rung's export fraction at rung entry and picks halo when it
+is small enough to pay.  Labels stay bit-identical to the single-device
+engine under every transport (tests/test_stream_sharded.py,
+tests/test_stream_property.py).  See docs/streaming.md §Transports.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
+import logging
+import os
 import time
 
 import jax
@@ -53,9 +63,19 @@ from repro.core.components import compact_labels
 from repro.core.dynlp import gprime_components
 from repro.core.init_labels import supernode_init
 from repro.core.propagate import PropagationProblem
-from repro.core.snapshot import HostSnapshot, LabelView, build_host_problem
+from repro.core.snapshot import (HostSnapshot, LabelView, apply_halo_layout,
+                                 build_host_problem)
+from repro.graph import partition
 from repro.graph.dynamic import UNLABELED, BatchUpdate, DynamicGraph
 from repro.kernels import ops
+
+logger = logging.getLogger(__name__)
+
+TRANSPORTS = ("allgather", "halo", "auto")
+
+# auto picks halo for a rung iff its compiled export budget would move
+# at most this fraction of the full all-gather bytes per sweep.
+AUTO_EXPORT_FRACTION = 0.5
 
 
 @dataclasses.dataclass
@@ -70,6 +90,8 @@ class StreamStats:
     bucket: tuple[int, int]  # (U_bucket, K_bucket) device shape this Δ_t;
     # (0, 0) for a no-op Δ_t whose empty frontier staged nothing
     recompiled: bool  # True iff this Δ_t triggered any XLA compile
+    transport: str = "single"  # collective this Δ_t rode: "single" (no
+    # mesh), "allgather", "halo", or "none" (no-op Δ_t, nothing solved)
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))
@@ -94,6 +116,10 @@ class _Pending:
     view_labels: np.ndarray
     view_alive: np.ndarray
     view_f: np.ndarray
+    transport: str = "single"
+    # halo layout inverse: solved row for original row i is rows[i]
+    # (None when rows were staged unpermuted)
+    rows: np.ndarray | None = None
 
 
 class StreamEngine:
@@ -110,7 +136,8 @@ class StreamEngine:
         block_rows: int = 512,
         interpret: bool | None = None,
         mesh: jax.sharding.Mesh | None = None,
-        max_k: int | None = None,
+        max_k: int | None | str = "auto",
+        transport: str | None = None,
     ):
         self.graph = graph
         self.delta = delta
@@ -121,17 +148,50 @@ class StreamEngine:
         self.block_rows = block_rows
         self.interpret = interpret
         # mesh: shard the stream — rows of every bucket are partitioned
-        # over ALL mesh axes (core.distributed all-gather transport); row
+        # over ALL mesh axes (core.distributed shard_map transport); row
         # buckets are padded to a multiple of the device count so each
         # rung shards evenly, and one partition plan per rung is reused
         # across every batch that lands in it.
         self.mesh = mesh
+        # transport: per-sweep collective of the sharded solve.  An
+        # explicit "halo" demands a mesh; when left unset the
+        # REPRO_STREAM_TRANSPORT env var replaces the "auto" default —
+        # as a fleet-wide hint it is simply ignored on mesh-less engines
+        # (mirroring the REPRO_BACKEND degrade semantics).
+        if transport is not None and transport not in TRANSPORTS:
+            raise ValueError(f"unknown transport {transport!r}; want one "
+                             f"of {TRANSPORTS}")
+        if transport == "halo" and mesh is None:
+            raise ValueError("transport='halo' requires mesh= (a "
+                             "single-device stream has no collective)")
+        if transport is None:
+            transport = os.environ.get("REPRO_STREAM_TRANSPORT", "auto")
+            if transport not in TRANSPORTS:
+                raise ValueError(
+                    f"REPRO_STREAM_TRANSPORT={transport!r} invalid; want "
+                    f"one of {TRANSPORTS}")
+        self.transport = transport
         # max_k: cap the ELL neighbor axis (heaviest-edge truncation) so a
         # hub vertex can't drag the K-bucket ladder up (core.snapshot).
-        self.max_k = max_k
+        # Default "auto" = 4x the graph's kNN k (measured at parity on
+        # hub-heavy synthetics, BENCH_stream.json max_k_accuracy); pass
+        # max_k=None to stream untruncated.
+        if isinstance(max_k, str) and max_k != "auto":
+            raise ValueError(
+                f"max_k={max_k!r} invalid; want an int, None (uncapped), "
+                "or 'auto' (4x the graph's kNN k)")
+        self.max_k = 4 * graph.k if max_k == "auto" else max_k
         self._row_multiple = int(mesh.devices.size) if mesh is not None else None
         self._plans: dict[tuple[int, int], distributed.StreamShardPlan] = {}
+        self._halo_plans: dict[tuple, distributed.StreamHaloPlan] = {}
         self.plan_builds = 0  # partition plans built — ≤ rungs touched
+        # per-rung transport state: mode fixed at rung entry ("halo" or
+        # "allgather"), export budget compiled into the rung's halo plan
+        self._transport_modes: dict[tuple[int, int], str] = {}
+        self._export_budgets: dict[tuple[int, int], int] = {}
+        self._overflow_warned: set[tuple[int, int]] = set()
+        self.halo_batches = 0  # batches solved on the halo transport
+        self.transport_overflows = 0  # halo batches forced onto all-gather
         # bucket_key -> two generations of device problem buffers; the
         # generation toggles per commit so the in-flight solve never shares
         # storage with the snapshot being staged.
@@ -163,6 +223,82 @@ class StreamEngine:
             self._plans[key] = plan
             self.plan_builds += 1
         return plan
+
+    # ------------------------------------------------------------------ #
+    def _halo_plan_for(self, key: tuple[int, int],
+                       export_max: int) -> distributed.StreamHaloPlan:
+        """Halo partition plan for one ladder rung — the export budget is
+        fixed at rung entry, so like the all-gather plan it is built once
+        and reused for every same-rung batch."""
+        hkey = (key, export_max)
+        plan = self._halo_plans.get(hkey)
+        if plan is None:
+            plan = distributed.build_stream_halo_plan(
+                self.mesh, key, export_max,
+                backend=ops.select_backend(self.backend, num_rows=key[0],
+                                           sharded=True),
+                delta=self.delta, max_iters=self.max_iters,
+                block_rows=self.block_rows, interpret=self.interpret,
+                donate=True)
+            self._halo_plans[hkey] = plan
+            self.plan_builds += 1
+        return plan
+
+    # ------------------------------------------------------------------ #
+    def _mesh_plan(self, host: HostSnapshot):
+        """Resolve this batch's (plan, halo layout) on the mesh.
+
+        The rung's transport mode and export budget are decided once, at
+        rung entry: ``"auto"`` partitions the first snapshot that lands
+        in the rung and takes halo iff the budgeted export fraction is at
+        most ``AUTO_EXPORT_FRACTION`` (a single-device mesh has nothing
+        to save and always takes all-gather).  Within a halo rung the
+        export *layout* is re-derived from every batch's topology (the
+        budget tolerates stale/extra prefix rows — they ship committed
+        labels); a batch whose export counts overflow the budget runs on
+        the rung's all-gather twin instead (warned once per rung).
+        Returns ``(plan, halo_layout)`` with ``halo_layout=None`` for
+        all-gather batches.
+        """
+        key = host.bucket_key
+        n_dev = self.mesh.devices.size
+        mode = self._transport_modes.get(key)
+        if mode is None and (
+                self.transport == "allgather"
+                or (self.transport == "auto" and n_dev == 1)):
+            mode = self._transport_modes[key] = "allgather"
+        if mode == "allgather":
+            return self._plan_for(key), None
+        layout = partition.build_halo_plan(host.nbr, n_dev)
+        if mode is None:  # rung entry: fix budget + mode for the rung
+            budget = partition.export_budget(layout, len(host.unl_ids))
+            frac = budget * n_dev / key[0]
+            mode = ("halo" if self.transport == "halo"
+                    or frac <= AUTO_EXPORT_FRACTION else "allgather")
+            self._transport_modes[key] = mode
+            if mode == "allgather":
+                logger.info(
+                    "stream transport: rung %s export fraction %.2f > %.2f"
+                    " — auto takes all-gather", key, frac,
+                    AUTO_EXPORT_FRACTION)
+                return self._plan_for(key), None
+            self._export_budgets[key] = budget
+        budget = self._export_budgets[key]
+        if int(layout.export_counts.max()) > budget:
+            # overflow: this Δ_t's cross-shard rows exceed the rung's
+            # compiled export prefix — correctness falls back to the
+            # all-gather twin for this batch only
+            if key not in self._overflow_warned:
+                self._overflow_warned.add(key)
+                logger.warning(
+                    "stream halo: rung %s export count %d overflows the "
+                    "compiled budget %d — falling back to all-gather for "
+                    "this batch (warned once per rung)", key,
+                    int(layout.export_counts.max()), budget)
+            self.transport_overflows += 1
+            return self._plan_for(key), None
+        self.halo_batches += 1
+        return self._halo_plan_for(key, budget), layout
 
     # ------------------------------------------------------------------ #
     def _commit(
@@ -224,7 +360,7 @@ class StreamEngine:
                 res=None, unl_ids=unl_ids, t0=t0,
                 num_components=0, frontier_size=0,
                 bucket=(0, 0),  # nothing staged this Δ_t
-                recompiled=False,
+                recompiled=False, transport="none",
                 view_labels=g.labels.copy(), view_alive=g.alive.copy(),
                 view_f=g.f.copy(),
             )
@@ -241,10 +377,23 @@ class StreamEngine:
         aff_rows = host.remap[effect.affected]
         frontier[aff_rows[aff_rows >= 0]] = True
 
-        plan = self._plan_for(host.bucket_key) if self.mesh is not None else None
-        problem = self._commit(host, plan)
-        frontier_dev = (plan.put_row(frontier) if plan is not None
-                        else jnp.asarray(frontier))
+        # mesh: resolve this batch's transport; halo batches permute the
+        # snapshot into the export-prefix row layout before staging (row
+        # order is invisible to the fixpoint, so labels stay bit-equal —
+        # ``host`` itself stays in original row order for the supernode
+        # init and f0 builds below, which fold back via halo.inv_perm)
+        halo = None
+        staged = host
+        if self.mesh is not None:
+            plan, halo = self._mesh_plan(host)
+            if halo is not None:
+                staged = apply_halo_layout(host, halo)
+        else:
+            plan = None
+        problem = self._commit(staged, plan)
+        frontier_staged = frontier if halo is None else frontier[halo.perm]
+        frontier_dev = (plan.put_row(frontier_staged) if plan is not None
+                        else jnp.asarray(frontier_staged))
 
         # ---- Step 2: supernode label initialization (host wl0/wl1) ----
         n_components = 0
@@ -267,6 +416,8 @@ class StreamEngine:
         # ---- Step 3: launch this batch's solve (async) ----
         f0 = np.full(u_pad, 0.5, np.float32)
         f0[:u] = g.f[host.unl_ids]
+        if halo is not None:
+            f0 = f0[halo.perm]
         # f0 is donated into the solve in both modes; in mesh mode it is
         # staged row-sharded first so each device recycles its own block.
         f0_dev = plan.put_row(f0) if plan is not None else jnp.asarray(f0)
@@ -284,6 +435,8 @@ class StreamEngine:
             res=res, unl_ids=host.unl_ids, t0=t0,
             num_components=n_components, frontier_size=int(frontier.sum()),
             bucket=host.bucket_key, recompiled=recompiled,
+            transport=(plan.transport if plan is not None else "single"),
+            rows=None if halo is None else halo.inv_perm[:u],
             # Batch-t host state (labels/alive fixed by apply_batch above;
             # f now holds batch t-1's committed labels plus this batch's
             # supernode inits).  drain() folds the solved rows over view_f
@@ -309,8 +462,11 @@ class StreamEngine:
             iterations, converged, resid = 0, True, 0.0
         else:
             f = np.asarray(p.res.f)  # synchronizes
-            self.graph.f[p.unl_ids] = f[: len(p.unl_ids)]
-            p.view_f[p.unl_ids] = f[: len(p.unl_ids)]
+            # halo batches solved in export-prefix row order: gather the
+            # original rows back through the layout's inverse permutation
+            solved = f[p.rows] if p.rows is not None else f[: len(p.unl_ids)]
+            self.graph.f[p.unl_ids] = solved
+            p.view_f[p.unl_ids] = solved
             iterations = int(p.res.iterations)
             converged = bool(p.res.converged)
             resid = float(p.res.max_residual)
@@ -327,6 +483,7 @@ class StreamEngine:
             max_residual=resid,
             bucket=p.bucket,
             recompiled=p.recompiled,
+            transport=p.transport,
         )
 
     # ------------------------------------------------------------------ #
@@ -362,6 +519,24 @@ class StreamEngine:
         compile.  Use ``submit``/``drain`` directly to pipeline batches."""
         self.submit(batch)
         return self.drain()
+
+    # ------------------------------------------------------------------ #
+    def transport_summary(self) -> dict:
+        """JSON-friendly account of the sharded transport: the requested
+        knob, the per-rung mode/budget decisions, and how many batches
+        actually rode halo vs overflowed back to all-gather.  Surfaced by
+        ``LPService.stats()`` and the streaming benchmarks."""
+        return {
+            "requested": self.transport,
+            "mesh_devices": (int(self.mesh.devices.size)
+                             if self.mesh is not None else 0),
+            "rung_modes": {f"{u}x{k}": m for (u, k), m
+                           in sorted(self._transport_modes.items())},
+            "export_budgets": {f"{u}x{k}": b for (u, k), b
+                               in sorted(self._export_budgets.items())},
+            "halo_batches": self.halo_batches,
+            "overflows": self.transport_overflows,
+        }
 
     # ------------------------------------------------------------------ #
     def predictions(self, cutoff: float = 0.5) -> tuple[np.ndarray, np.ndarray]:

@@ -6,6 +6,13 @@ references it.  Rows are permuted so each shard's exports form a prefix;
 then one all-gather of the (padded) export prefixes replaces the full-vector
 all-gather — the §Perf iteration on the collective term of the LP roofline
 (the paper's CC-clustered ordering gives exactly the locality this exploits).
+
+Plans are built per call from a concrete ELL topology.  The streaming
+engine (``core.stream.StreamEngine(transport="halo")``) rebuilds the
+layout per Δ_t (an O(U·K) host pass, same order as the snapshot build it
+rides along with) but compiles only one halo runner per bucket-ladder
+rung, sized by ``export_budget`` so in-rung topology drift doesn't force
+a recompile.
 """
 
 from __future__ import annotations
@@ -43,18 +50,13 @@ def build_halo_plan(nbr: np.ndarray, n_shards: int) -> HaloPlan:
     exported = np.zeros(n_pad, bool)
     exported[np.unique(tgt[cross])] = True
 
-    # permutation: within each shard, exported rows first
-    perm = np.empty(n_pad, np.int64)  # new -> old
+    # permutation: within each shard, exported rows first (stable sort on
+    # (shard, not-exported) keeps the original order inside both groups —
+    # the vectorized twin of a per-shard partition loop, run per Δ_t by
+    # the streaming halo transport so it must stay O(n log n))
+    perm = np.argsort(owner * 2 + (~exported), kind="stable")  # new -> old
+    counts = np.bincount(owner[exported], minlength=n_shards).astype(np.int64)
     inv = np.empty(n_pad, np.int64)
-    counts = np.zeros(n_shards, np.int64)
-    for s in range(n_shards):
-        lo = s * m
-        rows = np.arange(lo, lo + m)
-        exp = rows[exported[rows]]
-        rest = rows[~exported[rows]]
-        counts[s] = len(exp)
-        order = np.concatenate([exp, rest])
-        perm[lo : lo + m] = order
     inv[perm] = np.arange(n_pad)
 
     remapped = np.where(nbr[perm] >= 0, inv[np.where(nbr[perm] >= 0, nbr[perm], 0)], -1)
@@ -79,3 +81,24 @@ def apply_plan(plan: HaloPlan, arr: np.ndarray, fill=0) -> np.ndarray:
 def unapply_plan(plan: HaloPlan, arr: np.ndarray, n_orig: int) -> np.ndarray:
     """Inverse reordering back to original row ids."""
     return arr[plan.inv_perm[:n_orig]]
+
+
+def export_budget(plan: HaloPlan, n_valid: int, headroom: float = 2.0) -> int:
+    """Per-shard export-prefix length a ladder rung should COMPILE for.
+
+    The streaming halo transport fixes one ``export_max`` per bucket rung
+    and reuses the compiled runner for every batch in that rung, so the
+    budget must absorb in-rung growth: the observed max export count is
+    scaled by the rung's remaining fill factor (a rung entered at
+    ``n_valid`` rows can grow to its full padded row count, and export
+    sets grow roughly with it) times ``headroom`` for topology drift,
+    then rounded up for lane alignment and capped at the shard size.  A
+    batch that still exceeds it falls back to all-gather for that Δ_t
+    (logged by the engine), so the budget is a perf knob, never a
+    correctness one.
+    """
+    n_pad = len(plan.perm)
+    fill = n_pad / max(1, n_valid)
+    want = int(np.ceil(max(1, int(plan.export_counts.max())) * fill * headroom))
+    want = -8 * (-want // 8)  # lane-align like build_halo_plan
+    return int(min(want, plan.rows_per_shard))

@@ -274,20 +274,35 @@ def run_propagation(
     donate: bool = False,
     mesh: jax.sharding.Mesh | None = None,
     shard_plan=None,
+    transport: str | None = None,
+    export_max: int | None = None,
 ) -> PropagateResult:
     """Single propagation entry point — see module docstring for routing.
 
     ``mesh`` adds the distributed arm: the selected backend's update body
     is wrapped in the vertex-partitioned ``shard_map`` transport of
     ``core.distributed`` (rows sharded over every mesh axis, one
-    all-gather of F per sweep).  Requires ``problem``'s row count to be a
-    multiple of the mesh's device count.  Callers that stream many batches
-    pass a prebuilt ``shard_plan`` (one per bucket rung) so partition
+    collective per sweep).  ``transport`` selects that collective:
+    ``"allgather"`` (default) ships full F blocks and is layout-free;
+    ``"halo"`` ships only per-shard export prefixes of length
+    ``export_max`` and requires the problem's rows to already sit in a
+    halo export-prefix layout (``graph.partition.build_halo_plan`` /
+    ``core.snapshot.apply_halo_layout``) — labels are bit-identical
+    either way.  Requires ``problem``'s row count to be a multiple of the
+    mesh's device count.  Callers that stream many batches pass a
+    prebuilt ``shard_plan`` (one per bucket rung; ``StreamShardPlan`` or
+    ``StreamHaloPlan``, which then fixes the transport) so partition
     planning isn't redone per Δ_t; otherwise the plan is resolved (and
     memoized) from ``mesh`` + the problem shape.  ``bsr`` is single-device
     only — its host-side densification has no sharded form.
     """
     sharded = mesh is not None or shard_plan is not None
+    if transport not in (None, "allgather", "halo"):
+        raise ValueError(f"unknown transport {transport!r}; "
+                         "want 'allgather' or 'halo'")
+    if transport == "halo" and not sharded:
+        raise ValueError("transport='halo' needs mesh= or a shard_plan "
+                         "(single-device solves have no collective)")
     backend = select_backend(backend, problem, sharded=sharded)
     if sharded:
         from repro.core import distributed
@@ -298,21 +313,34 @@ def run_propagation(
                 "'ell_pallas' with mesh=")
         plan = shard_plan
         if plan is None:
-            plan = distributed.build_stream_plan(
-                mesh, tuple(problem.nbr.shape), backend=backend,
-                delta=float(delta), max_iters=max_iters,
-                block_rows=block_rows, interpret=interpret, donate=donate)
+            if transport == "halo":
+                if export_max is None:
+                    raise ValueError(
+                        "transport='halo' without a shard_plan needs "
+                        "export_max (the per-shard export-prefix length)")
+                plan = distributed.build_stream_halo_plan(
+                    mesh, tuple(problem.nbr.shape), export_max,
+                    backend=backend, delta=float(delta),
+                    max_iters=max_iters, block_rows=block_rows,
+                    interpret=interpret, donate=donate)
+            else:
+                plan = distributed.build_stream_plan(
+                    mesh, tuple(problem.nbr.shape), backend=backend,
+                    delta=float(delta), max_iters=max_iters,
+                    block_rows=block_rows, interpret=interpret,
+                    donate=donate)
         else:
             # the plan's baked-in hyperparameters drive the solve — refuse
             # kwargs that silently disagree with them
-            want = (backend, float(delta), max_iters, block_rows, interpret)
+            want = (backend, float(delta), max_iters, block_rows, interpret,
+                    transport if transport is not None else plan.transport)
             have = (plan.backend, plan.delta, plan.max_iters,
-                    plan.block_rows, plan.interpret)
+                    plan.block_rows, plan.interpret, plan.transport)
             if want != have:
                 raise ValueError(
                     f"shard_plan mismatch: called with (backend, delta, "
-                    f"max_iters, block_rows, interpret)={want} but plan "
-                    f"was built with {have}")
+                    f"max_iters, block_rows, interpret, transport)={want} "
+                    f"but plan was built with {have}")
         return plan(problem, f0, frontier0)
     if backend == "ref":
         if donate:

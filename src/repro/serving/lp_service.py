@@ -26,6 +26,14 @@ Backpressure: when queued + in-flight operations would exceed
 ``max_pending_ops``, ``mutate`` either blocks draining the backlog
 (default) or raises ``Backpressure`` (``reject_on_overload=True``) so
 callers can shed load.  See docs/serving.md.
+
+Engine-level knobs ride along with the engine the service wraps: a
+mesh-sharded engine serves through the ``transport`` it was built with
+("allgather"/"halo"/"auto" — docs/streaming.md §Transports;
+``ServiceStats.transport`` surfaces its per-rung decisions and halo
+traffic), and the default ``max_k`` hub cap (4x the graph's kNN k,
+``max_k=None`` to disable) bounds the compile ladder under hub-heavy
+mutation streams.
 """
 
 from __future__ import annotations
@@ -91,6 +99,8 @@ class ServiceStats:
     recompiles: int  # engine recompile count (bucket-ladder bounded)
     bucket_rungs: int
     commit_latency_ms: dict  # p50/p95/p99/max over the last <=4096 commits
+    transport: dict  # StreamEngine.transport_summary(): requested knob,
+    # per-rung allgather/halo decisions, halo batch + overflow counts
 
 
 @dataclasses.dataclass
@@ -335,4 +345,5 @@ class LPService:
             recompiles=self.engine.recompile_count,
             bucket_rungs=len(self.engine.bucket_keys),
             commit_latency_ms=pct,
+            transport=self.engine.transport_summary(),
         )

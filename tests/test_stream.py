@@ -183,7 +183,7 @@ def test_max_k_caps_hub_ladder(caplog, monkeypatch):
     monkeypatch.setattr(snapshot, "_MAX_K_WARNED", set())
     rng = np.random.default_rng(0)
     g_free = DynamicGraph(emb_dim=8, k=3)
-    free = StreamEngine(g_free, delta=1e-4)
+    free = StreamEngine(g_free, delta=1e-4, max_k=None)  # escape hatch
     _hub_stream(free, np.random.default_rng(0))
     assert max(k for _, k in free.bucket_keys) >= 32  # the uncapped creep
 
@@ -199,6 +199,26 @@ def test_max_k_caps_hub_ladder(caplog, monkeypatch):
     # off the class-1 hub
     ids = np.flatnonzero(g_cap.alive & (g_cap.labels == UNLABELED))
     assert (g_cap.f[ids] > 0.5).all()
+
+
+def test_max_k_defaults_to_4x_knn_k():
+    """The hub cap is on by default (4x the graph's kNN k, for both the
+    stream and the DynLP recompute oracle); ``max_k=None`` is the
+    explicit uncapped escape hatch."""
+    from repro.core.dynlp import DynLP
+
+    g = DynamicGraph(emb_dim=8, k=3)
+    assert StreamEngine(g).max_k == 12
+    assert DynLP(g).max_k == 12
+    assert StreamEngine(g, max_k=None).max_k is None
+    assert DynLP(g, max_k=None).max_k is None
+    assert StreamEngine(g, max_k=7).max_k == 7
+    # the default cap actually bounds the hub ladder (same stream as the
+    # explicit-cap test, no max_k argument at all)
+    g_def = DynamicGraph(emb_dim=8, k=3)
+    eng = StreamEngine(g_def, delta=1e-4)
+    _hub_stream(eng, np.random.default_rng(0))
+    assert max(k for _, k in eng.bucket_keys) <= 16  # bucket_k(12)
 
 
 def test_max_k_no_log_when_inactive(caplog):

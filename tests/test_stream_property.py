@@ -13,6 +13,7 @@ from hypothesis import given, settings, strategies as st
 from repro.core.dynlp import DynLP
 from repro.core.stream import StreamEngine
 from repro.graph.dynamic import UNLABELED, BatchUpdate, DynamicGraph
+from repro.launch.mesh import make_stream_mesh
 
 EMB_DIM = 8
 
@@ -110,6 +111,37 @@ def test_pipelined_stream_bit_identical_to_dynlp(seed, n_batches,
     done += 1
     assert done == len(batches) == eng.commits
     np.testing.assert_array_equal(g_p.f, g_d.f)
+
+
+@given(st.integers(0, 10_000), st.integers(2, 4), st.integers(10, 30),
+       st.floats(0.0, 0.3), st.booleans(),
+       st.sampled_from(["ref", "ell_pallas"]))
+@settings(max_examples=6, deadline=None)
+def test_transport_equivalence_halo_allgather_single(
+        seed, n_batches, batch_size, frac_del, hostile_dels, backend):
+    """For ANY random insert/delete stream, the sharded transports are
+    bit-interchangeable: halo ≡ all-gather ≡ single-device, for both
+    update bodies.  Random streams have no locality, so this also
+    exercises saturated export budgets; correctness must never depend on
+    which collective a batch happened to ride (overflow fallback
+    included — the assertion holds whether or not any batch fell back)."""
+    batches = _random_batches(seed, n_batches, batch_size, frac_del,
+                              hostile_dels, include_empty=False)
+    mesh = make_stream_mesh()  # 1 device in tier-1, 8 in the matrix job
+    f_ref = None
+    for transport in (None, "allgather", "halo"):
+        g = DynamicGraph(emb_dim=EMB_DIM, k=4)
+        eng = (StreamEngine(g, delta=1e-4, backend=backend, block_rows=64)
+               if transport is None else
+               StreamEngine(g, delta=1e-4, backend=backend, block_rows=64,
+                            mesh=mesh, transport=transport))
+        for batch in batches:
+            eng.step(batch)
+        if f_ref is None:
+            f_ref = g.f.copy()
+        else:
+            np.testing.assert_array_equal(
+                g.f, f_ref, err_msg=f"{transport} ({backend})")
 
 
 @given(st.integers(0, 10_000), st.integers(8, 40))

@@ -164,6 +164,39 @@ SCRIPT = textwrap.dedent("""
     assert done == len(batches)
     assert np.array_equal(g_p.f, g_s.f)
 
+    # ---- halo transport: same 50 mixed insert/delete batches ----
+    g_h = DynamicGraph(emb_dim=spec.emb_dim, k=5)
+    eng_h = StreamEngine(g_h, delta=1e-4, mesh=mesh, transport="halo")
+    for b in batches:
+        eng_h.step(b)
+    # the headline: halo labels bit-identical to all-gather AND to the
+    # single-device engine over the whole stream
+    assert np.array_equal(g_h.f, g_s.f), np.abs(g_h.f - g_s.f).max()
+    assert np.array_equal(g_h.f, g_m.f)
+    # one halo plan per rung (no overflow on this deterministic stream:
+    # every batch ran the halo collective, none fell back)
+    h_rungs = len(eng_h.bucket_keys)
+    assert eng_h.plan_builds <= h_rungs, (eng_h.plan_builds, h_rungs)
+    assert eng_h.transport_overflows == 0, eng_h.transport_summary()
+    assert eng_h.halo_batches == len(batches), eng_h.transport_summary()
+
+    # pipelined submit/drain composes with the halo layout permutation
+    g_hp = DynamicGraph(emb_dim=spec.emb_dim, k=5)
+    eng_hp = StreamEngine(g_hp, delta=1e-4, mesh=mesh, transport="halo")
+    for b in batches:
+        eng_hp.submit(b)
+    eng_hp.drain()
+    assert np.array_equal(g_hp.f, g_s.f)
+
+    # auto decides per rung but never changes the labels
+    g_au = DynamicGraph(emb_dim=spec.emb_dim, k=5)
+    eng_au = StreamEngine(g_au, delta=1e-4, mesh=mesh, transport="auto")
+    for b in batches:
+        eng_au.step(b)
+    assert np.array_equal(g_au.f, g_s.f)
+    assert set(eng_au.transport_summary()["rung_modes"].values()) <= {{
+        "allgather", "halo"}}
+
     # a bucket that doesn't divide the mesh is refused at planning time
     from repro.core.distributed import build_stream_plan
     try:
@@ -173,14 +206,17 @@ SCRIPT = textwrap.dedent("""
     else:
         raise AssertionError("uneven bucket accepted")
     print("OK sharded-stream", rungs, "rungs", eng_m.recompile_count,
-          "recompiles")
+          "recompiles |", eng_h.halo_batches, "halo batches",
+          eng_h.plan_builds, "halo plans")
 """)
 
 
 def test_sharded_stream_bit_identical_8dev():
     """50 mixed insert/delete batches on a forced 8-device CPU mesh:
-    labels bit-identical to the single-device engine, plans reused per
-    rung across a multi-rung ladder regrow, pipelining intact."""
+    labels bit-identical to the single-device engine for BOTH transports
+    (all-gather and halo, pipelined submit/drain included), plans reused
+    per rung across a multi-rung ladder regrow, halo plan_builds <=
+    rungs with zero overflow fallbacks."""
     env = dict(os.environ, JAX_PLATFORMS="cpu")
     out = subprocess.run(
         [sys.executable, "-c", SCRIPT.format(src=SRC, tests=TESTS)],
