@@ -63,6 +63,16 @@ def stream_rows(bench: dict) -> list[tuple[str, str]]:
              f"{_get(tr, 'halo', 'rungs')} / "
              f"{_get(tr, 'halo', 'overflows')}"),
         ]
+    be = bench.get("backend", {})
+    for b in be.get("backends", []):
+        r = be.get(b, {})
+        detail = (f"{_get(r, 'median_ms')} ms/batch, "
+                  f"{_get(r, 'recompiles')} compiles ≤ "
+                  f"{_get(r, 'ladder_bound')} + "
+                  f"{_get(r, 'backend_overflows')} overflows")
+        if b != "ref":  # no raw pipes — they would split the md table cell
+            detail += f", max Δf vs ref {_get(r, 'max_abs_diff_vs_ref')}"
+        rows.append((f"backend {b}", detail))
     mk = bench.get("max_k_accuracy", {})
     if mk:
         rows.append(("max_k: truncated-vs-free agreement",

@@ -26,14 +26,23 @@ Set ``REPRO_FORCE_HOST_DEVICES=8`` to force an 8-virtual-device CPU mesh
 (must be decided before jax initializes, hence the env hook below); the
 CI benchmark-smoke job does exactly this.
 
+A BACKEND arm drives the same stream through every backend in the
+``kernels.ops`` registry (``ref`` / ``ell_pallas`` / ``bsr``, Pallas
+backends in interpret mode on CPU), recording per-batch medians,
+compile counts vs the ladder bound, the per-rung registry decisions
+(rung backends, BSR slot budgets, overflow fallbacks) and each
+backend's max |Δf| against the ref arm.
+
 Per config it records recompile counts, per-batch wall ms, and batches/sec
 into ``BENCH_stream.json`` (repo root / cwd).  ``--check`` gates the
 recorded floors — compile-once bounds, the naive-rebuild speedup floor,
-max_k agreement, and the transport contract (byte-identical labels, halo
+max_k agreement, the transport contract (byte-identical labels, halo
 plan_builds ≤ rungs, zero overflows, steady-median ratio and export
-fraction under their recorded ceilings) — and exits nonzero with a
-one-line diff per violated floor.  ``--tiny`` shrinks the streams for CI
-smoke runs.
+fraction under their recorded ceilings), and the backend contract
+(labels within the recorded |Δf| floor of ref, compiles ≤ ladder + slot
+overflows, every bsr batch actually solved on bsr) — and exits nonzero
+with a one-line diff per violated floor.  ``--tiny`` shrinks the
+streams for CI smoke runs.
 """
 
 from __future__ import annotations
@@ -139,6 +148,65 @@ def _run_streamed(spec: StreamSpec, mesh=None) -> dict:
         out["mesh_devices"] = int(mesh.devices.size)
         out["plan_builds"] = eng.plan_builds
         out["transport"] = eng.transport_summary()
+    return out
+
+
+# Backend arm: the same stream through every registered backend (Pallas
+# ones in interpret mode on CPU).  The recorded floors are correctness
+# (labels within BACKEND_MAX_ABS_DIFF of ref), the compile-once bound
+# (+1 per recorded slot-budget overflow), and zero overflows on this
+# deterministic stream.
+BACKEND_CONFIG = dict(total_vertices=500, batch_size=100, seed=6,
+                      class_sep=6.0, noise=0.9, frac_deleted=0.1,
+                      frac_unlabeled=0.89)
+# bsr sums edges in tile order, so per-row updates near the δ threshold
+# stop a few δ apart from ref; 20·δ is the same calibration the test
+# suite uses (atol 2e-3 at δ=1e-4, tests/test_stream_bsr.py).
+BACKEND_MAX_ABS_DIFF = 20 * DELTA
+
+
+def _run_backend_arm(tiny: bool = False) -> dict:
+    """One stream per registry backend — per-batch medians, recompiles
+    vs the ladder bound, per-rung registry decisions (rung_backends,
+    slot budgets, overflow fallbacks) and max |Δf| vs the ref arm."""
+    kw = dict(BACKEND_CONFIG)
+    if tiny:
+        kw.update(total_vertices=240, batch_size=60)
+    spec = StreamSpec(**kw)
+    batches = [b for b, _ in gaussian_mixture_stream(spec)]
+    out: dict = {"spec": kw, "batches": len(batches),
+                 "backends": list(ops.backend_names())}
+    labels = {}
+    for backend in ops.backend_names():
+        g = DynamicGraph(emb_dim=spec.emb_dim, k=5)
+        eng = StreamEngine(g, delta=DELTA, backend=backend, block_rows=128)
+        cache0 = ops.compile_cache_size()
+        stats = []
+        marks = [time.perf_counter()]
+        for b in batches:
+            stats.append(eng.step(b))
+            marks.append(time.perf_counter())
+        per_batch = [(b - a) * 1e3 for a, b in zip(marks, marks[1:])]
+        steady = [ms for ms, s in zip(per_batch, stats) if not s.recompiled]
+        max_k = max(k for _, k in eng.bucket_keys)
+        summary = eng.transport_summary()
+        labels[backend] = g.f.copy()
+        out[backend] = {
+            "median_ms": round(statistics.median(per_batch), 3),
+            "steady_median_ms": round(statistics.median(steady), 3)
+            if steady else None,
+            "recompiles": ops.compile_cache_size() - cache0,
+            "ladder_bound": ladder_size(spec.total_vertices + 256, max_k),
+            "rungs": len(eng.bucket_keys),
+            "rung_backends": summary["rung_backends"],
+            "bsr_batches": summary["bsr_batches"],
+            "backend_overflows": summary["backend_overflows"],
+            "slot_budgets": summary["slot_budgets"],
+        }
+        if backend != "ref":
+            out[backend]["max_abs_diff_vs_ref"] = round(
+                float(np.abs(labels[backend] - labels["ref"]).max()), 6)
+    out["floors"] = {"max_abs_diff_vs_ref": BACKEND_MAX_ABS_DIFF}
     return out
 
 
@@ -393,6 +461,35 @@ def main(full: bool = False, out: str = OUT, tiny: bool = False,
                   f"top-rung export fraction {frac} > floor "
                   f"{TRANSPORT_TOP_RUNG_FRACTION_MAX} — halo ships no "
                   "fewer bytes than all-gather")
+    be = _run_backend_arm(tiny=tiny)
+    results["backend"] = be
+    for b in ops.backend_names():
+        r = be[b]
+        extra = (f" | diff vs ref {r['max_abs_diff_vs_ref']}"
+                 if b != "ref" else "")
+        print(f"backend {b}: {r['median_ms']} ms/batch "
+              f"({r['recompiles']} recompiles ≤ ladder {r['ladder_bound']}"
+              f" + {r['backend_overflows']} overflows){extra}")
+    if check:  # the registry contract + its recorded floors
+        for b in ops.backend_names():
+            r = be[b]
+            _gate(f"backend/{b}/recompiles",
+                  r["recompiles"] <= r["ladder_bound"]
+                  + r["backend_overflows"],
+                  f"{r['recompiles']} recompiles > ladder "
+                  f"{r['ladder_bound']} + {r['backend_overflows']} "
+                  "overflows")
+            if b != "ref":
+                _gate(f"backend/{b}/labels",
+                      r["max_abs_diff_vs_ref"] <= BACKEND_MAX_ABS_DIFF,
+                      f"max |Δf| vs ref {r['max_abs_diff_vs_ref']} > floor "
+                      f"{BACKEND_MAX_ABS_DIFF}")
+        _gate("backend/bsr/solved_on_bsr",
+              be["bsr"]["bsr_batches"] == be["batches"]
+              and be["bsr"]["backend_overflows"] == 0,
+              f"{be['bsr']['bsr_batches']}/{be['batches']} batches on bsr, "
+              f"{be['bsr']['backend_overflows']} slot-budget overflows "
+              "(budget regression)")
     mk = _run_max_k_accuracy(
         n_batches=3 if tiny else 5, per_hub=12 if tiny else 20)
     results["max_k_accuracy"] = mk

@@ -78,6 +78,59 @@ def connected_components(
     return CCResult(labels=par, iterations=iters)
 
 
+def host_components(nbr, max_iters: int = 10_000):
+    """Numpy twin of ``connected_components`` for host-side passes.
+
+    Same min-hook / path-halving fixpoint, vectorized over the ELL
+    tensor — used by the snapshot pipeline (ELL→BSR component reorder)
+    where a device round-trip per Δ_t would serialize against the
+    in-flight solve.  Requires the same symmetric adjacency.
+    """
+    import numpy as np
+
+    n = len(nbr)
+    own = np.arange(n)
+    idx = np.where(nbr >= 0, nbr, own[:, None])
+    par = own.copy()
+    for _ in range(max_iters):
+        hooked = np.minimum(par, par[idx].min(axis=1))
+        jumped = hooked[hooked]
+        jumped = jumped[jumped]
+        if np.array_equal(jumped, par):
+            break
+        par = jumped
+    return par
+
+
+def component_order(nbr):
+    """Step-1 clustering order: row permutation (new → old) grouping rows
+    by connected component (stable within a component, so insertion
+    order — and with it stream locality — survives inside each group).
+    This is the ordering that makes the adjacency block-dense for the
+    ELL→BSR build (``kernels.bsr_spmv``)."""
+    import numpy as np
+
+    return np.argsort(host_components(nbr), kind="stable")
+
+
+def permute_ell_rows(nbr, order):
+    """Permute ELL rows by ``order`` (new → old), remapping neighbor ids
+    into the new row space (-1 lanes stay -1).
+
+    The one primitive behind every row reordering that must stay
+    self-consistent — ``core.snapshot.reorder_host_snapshot`` and the
+    bsr one-shot path both call it.  Returns ``(nbr', inv)`` with
+    ``inv`` the old → new map (``inv[order] == arange``).
+    """
+    import numpy as np
+
+    inv = np.empty(len(order), np.int64)
+    inv[order] = np.arange(len(order))
+    p = nbr[order]
+    out = np.where(p >= 0, inv[np.where(p >= 0, p, 0)], -1).astype(np.int32)
+    return out, inv
+
+
 def compact_labels(labels: jax.Array) -> jax.Array:
     """Make component ids sequential 0..C-1 (paper: thrust prefix scan)."""
     n = labels.shape[0]

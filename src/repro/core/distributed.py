@@ -19,7 +19,10 @@ fixpoint, same iteration count), so single-device tests transfer.
 Two transports exist, both built by ``make_sharded_propagate_fn`` and
 both wrapping the same pluggable per-shard *update* body
 (``backend="ref"`` inlines the XLA Jacobi update, ``backend="ell_pallas"``
-calls the fused ELL Pallas kernel over the shard's row block):
+calls the fused ELL Pallas kernel over the shard's row block,
+``backend="bsr"`` scatter-builds the shard's BSR tiles from the staged
+ELL rows and aggregates with the ``bsr_spmv`` MXU kernel against the
+reconstructed global F):
 
   * ``transport="allgather"`` — every shard's full F block is gathered
     per iteration.  Shape-only partitioning (contiguous row blocks),
@@ -78,11 +81,12 @@ def shard_map(f, *, mesh, in_specs, out_specs):
                       **_CHECK_KW)
 
 from repro.core.propagate import (PropagateResult, PropagationProblem,
-                                  update_island)
+                                  bsr_update_island, update_island)
 from repro.graph.structures import PAD
+from repro.kernels.bsr_spmv import bsr_spmv, fill_bsr_blocks
 from repro.kernels.ell_propagate import ell_propagate_step
 
-STREAM_BACKENDS = ("ref", "ell_pallas")
+STREAM_BACKENDS = ("ref", "ell_pallas", "bsr")
 TRANSPORTS = ("allgather", "halo")
 
 
@@ -119,6 +123,8 @@ def make_sharded_propagate_fn(
     donate: bool = False,
     transport: str = "allgather",
     export_max: int | None = None,
+    block_size: int = 0,
+    num_slots: int = 0,
 ):
     """Build the jitted sharded propagation step (lowerable with
     ShapeDtypeStructs for the LP roofline dry-run).
@@ -128,7 +134,20 @@ def make_sharded_propagate_fn(
     per-row reduction order, so sharded labels are bit-identical to the
     single-device engine); ``"ell_pallas"`` runs the fused ELL kernel over
     the shard's row block against the gathered global F
-    (``row_offset`` keys the kernel's F reads to this shard's rows).
+    (``row_offset`` keys the kernel's F reads to this shard's rows);
+    ``"bsr"`` scatter-builds the shard's BSR tiles from its staged ELL
+    rows (``kernels.bsr_spmv.fill_bsr_blocks`` — inside the jit, so the
+    tiles never exist on the host) and aggregates with the ``bsr_spmv``
+    MXU kernel against the reconstructed global F.  The bsr runner takes
+    one extra row-sharded input, the per-edge ``slot`` map, and its
+    ``run`` signature is ``(nbr, wgt, wl0, wl1, valid, slot, f, fr)``;
+    ``block_size``/``num_slots`` fix the compiled tile layout (callers
+    keep snapshots whose slot requirement exceeds ``num_slots`` off this
+    runner — the streaming engine falls back to ell_pallas for such a
+    Δ_t).  Because the tile layout is part of the program, bsr labels
+    are bit-identical across the two transports for the same row layout
+    (the engine stages bsr snapshots in the halo layout under BOTH
+    transports for exactly this reason).
 
     ``transport`` picks the per-iteration collective: ``"allgather"``
     ships every shard's full F block; ``"halo"`` ships only the leading
@@ -149,12 +168,15 @@ def make_sharded_propagate_fn(
     if backend not in STREAM_BACKENDS:
         raise ValueError(
             f"sharded backend {backend!r} not supported; want one of "
-            f"{STREAM_BACKENDS} (bsr densifies O(U²) on the host)")
+            f"{STREAM_BACKENDS}")
     if transport not in TRANSPORTS:
         raise ValueError(
             f"transport {transport!r} not supported; want one of {TRANSPORTS}")
     if transport == "halo" and (export_max is None or export_max < 1):
         raise ValueError("transport='halo' needs export_max >= 1")
+    if backend == "bsr" and (block_size < 1 or num_slots < 1):
+        raise ValueError("sharded backend='bsr' needs block_size >= 1 and "
+                         "num_slots >= 1 (the compiled tile layout)")
     axes = mesh.axis_names
     n_dev = int(mesh.devices.size)
     delta_ = jnp.float32(delta)
@@ -163,13 +185,20 @@ def make_sharded_propagate_fn(
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
 
+    # bsr takes one extra row-sharded input (the per-edge tile-slot map)
+    in_specs = ((row2, row2, row, row, row, row2, row, row)
+                if backend == "bsr" else
+                (row2, row2, row, row, row, row, row))
+
     @functools.partial(
         shard_map,
         mesh=mesh,
-        in_specs=(row2, row2, row, row, row, row, row),
+        in_specs=in_specs,
         out_specs=(row, P(), P(), P()),
     )
-    def run(nbr, wgt, wl0, wl1, valid, f_loc, fr_loc):
+    def run(nbr, wgt, wl0, wl1, valid, *rest):
+        slot = rest[0] if backend == "bsr" else None
+        f_loc, fr_loc = rest[-2:]
         mask = nbr != PAD
         idx = jnp.where(mask, nbr, 0)
         m = f_loc.shape[0]
@@ -229,8 +258,26 @@ def make_sharded_propagate_fn(
             wgt_k = jnp.pad(wgt, rpad)
             wl0_k = jnp.pad(wl0, (0, m_pad - m))
             wl1_k = jnp.pad(wl1, (0, m_pad - m))
+        elif backend == "bsr":
+            # Scatter the shard's staged ELL rows into its BSR tiles once
+            # per solve (loop-invariant; block columns stay GLOBAL so the
+            # SpMV consumes the reconstructed full-length F directly).
+            # Tiles whose columns fall outside any export prefix carry
+            # exact-zero weights, so the halo transport's zero-filled
+            # substitute positions contribute identical bits to the
+            # all-gathered values — the cross-transport equality argument.
+            blocks, bcols = fill_bsr_blocks(
+                nbr, wgt, slot, block_size=block_size, num_slots=num_slots)
+            wall = jnp.sum(wgt, axis=1) + wl0 + wl1
 
         def update(f_l, fr_l):
+            if backend == "bsr":
+                f_full = gather_full(f_l)  # (N,) — the collective
+                y = bsr_spmv(blocks, bcols, f_full, interpret=interpret)[:m]
+                f_all = bsr_update_island(y, wl1, wall, f_l)
+                f_new = jnp.where(fr_l & valid, f_all, f_l)
+                changed = (jnp.abs(f_new - f_l) > delta_) & valid
+                return f_new, changed
             if backend == "ell_pallas":
                 f_full = gather_full(f_l)  # (N,) — the collective
                 row0 = jax.lax.axis_index(axes) * m
@@ -269,7 +316,8 @@ def make_sharded_propagate_fn(
         done = jax.lax.pmax(fr_l.any().astype(jnp.int32), axes) == 0
         return f_l, iters, done, resid
 
-    return jax.jit(run, donate_argnums=(5,) if donate else ())
+    f0_idx = 6 if backend == "bsr" else 5  # slot shifts the arg list
+    return jax.jit(run, donate_argnums=(f0_idx,) if donate else ())
 
 
 def make_propagate_fn(mesh, delta: float = 1e-4, max_iters: int = 100_000):
@@ -335,6 +383,11 @@ class StreamShardPlan:
     row_sharding: jax.sharding.NamedSharding
     row2_sharding: jax.sharding.NamedSharding
     run: object  # jitted shard_map propagation fn
+    # bsr plans carry their compiled tile layout (0 for other backends):
+    # the streaming engine memoizes one plan per rung and checks each
+    # Δ_t's slot requirement against num_slots before running on it.
+    block_size: int = 0
+    num_slots: int = 0
 
     transport = "allgather"
 
@@ -357,16 +410,23 @@ class StreamShardPlan:
             valid=self.put_row(valid))
 
     def __call__(self, problem: PropagationProblem, f0: jax.Array,
-                 frontier0: jax.Array) -> PropagateResult:
+                 frontier0: jax.Array, slot=None) -> PropagateResult:
         if tuple(problem.nbr.shape) != self.bucket_key:
             raise ValueError(
                 f"problem shape {problem.nbr.shape} does not match plan "
                 f"rung {self.bucket_key}")
         if f0.dtype != jnp.float32:
             f0 = f0.astype(jnp.float32)
-        f, iters, done, resid = self.run(
-            problem.nbr, problem.wgt, problem.wl0, problem.wl1,
-            problem.valid, f0, frontier0)
+        if self.backend == "bsr":
+            if slot is None:
+                raise ValueError("bsr shard plan needs the per-edge slot "
+                                 "map (stage it with put_row2)")
+            args = (problem.nbr, problem.wgt, problem.wl0, problem.wl1,
+                    problem.valid, slot, f0, frontier0)
+        else:
+            args = (problem.nbr, problem.wgt, problem.wl0, problem.wl1,
+                    problem.valid, f0, frontier0)
+        f, iters, done, resid = self.run(*args)
         return PropagateResult(f=f, iterations=iters, converged=done,
                                max_residual=resid)
 
@@ -392,30 +452,37 @@ class StreamHaloPlan(StreamShardPlan):
 
 def _sharded_run_for(mesh, *, backend, delta, max_iters, block_rows,
                      interpret, donate, transport="allgather",
-                     export_max=None):
+                     export_max=None, block_size=0, num_slots=0):
     """Fetch (or build, memoized) the jitted runner for one hyperparameter
     set.  All-gather runners are shared across every rung (each rung is
     one shape specialization in the jit cache); halo runners additionally
-    key on the rung's export budget."""
+    key on the rung's export budget, bsr runners on the compiled tile
+    layout."""
     fn_key = (mesh, backend, float(delta), max_iters, block_rows, interpret,
-              donate, transport, export_max)
+              donate, transport, export_max, block_size, num_slots)
     run = _FN_CACHE.get(fn_key)
     if run is None:
         run = make_sharded_propagate_fn(
             mesh, backend=backend, delta=delta, max_iters=max_iters,
             block_rows=block_rows, interpret=interpret, donate=donate,
-            transport=transport, export_max=export_max)
+            transport=transport, export_max=export_max,
+            block_size=block_size, num_slots=num_slots)
         _FN_CACHE[fn_key] = run
     return fn_key, run
 
 
-def _check_bucket(bucket_key, mesh):
+def _check_bucket(bucket_key, mesh, block_size=0):
     u_pad, _ = bucket_key
     n_dev = mesh.devices.size
     if u_pad % n_dev != 0:
         raise ValueError(
             f"bucket rows {u_pad} not divisible by mesh device count "
             f"{n_dev}; build snapshots with row_multiple={n_dev}")
+    if block_size and (u_pad // n_dev) % block_size != 0:
+        raise ValueError(
+            f"bsr needs each shard's {u_pad // n_dev} rows to be a "
+            f"multiple of block_size {block_size}; build snapshots with "
+            f"row_multiple={n_dev * block_size}")
 
 
 def build_stream_plan(
@@ -428,18 +495,22 @@ def build_stream_plan(
     block_rows: int = 512,
     interpret: bool | None = None,
     donate: bool = True,
+    block_size: int = 0,
+    num_slots: int = 0,
 ) -> StreamShardPlan:
     """Build (or fetch, memoized) the all-gather partition plan for one
     ladder rung.
 
     Rows must shard evenly: ``bucket_key[0]`` has to be a multiple of the
     mesh's device count (``core.snapshot.build_host_problem`` pads buckets
-    with ``row_multiple=mesh.devices.size`` to guarantee it).
+    with ``row_multiple=mesh.devices.size`` to guarantee it — times
+    ``block_size`` for bsr plans, whose shards must also tile evenly).
     """
-    _check_bucket(bucket_key, mesh)
+    _check_bucket(bucket_key, mesh, block_size if backend == "bsr" else 0)
     fn_key, run = _sharded_run_for(
         mesh, backend=backend, delta=delta, max_iters=max_iters,
-        block_rows=block_rows, interpret=interpret, donate=donate)
+        block_rows=block_rows, interpret=interpret, donate=donate,
+        block_size=block_size, num_slots=num_slots)
     key = (fn_key, tuple(bucket_key))
     plan = _PLAN_CACHE.get(key)
     if plan is None:
@@ -450,7 +521,7 @@ def build_stream_plan(
             interpret=interpret,
             row_sharding=jax.sharding.NamedSharding(mesh, P(axes)),
             row2_sharding=jax.sharding.NamedSharding(mesh, P(axes, None)),
-            run=run)
+            run=run, block_size=block_size, num_slots=num_slots)
         _PLAN_CACHE[key] = plan
     return plan
 
@@ -466,19 +537,22 @@ def build_stream_halo_plan(
     block_rows: int = 512,
     interpret: bool | None = None,
     donate: bool = True,
+    block_size: int = 0,
+    num_slots: int = 0,
 ) -> StreamHaloPlan:
     """Halo twin of ``build_stream_plan``: one plan per (rung, export
     budget), memoized.  Callers stage problems in the export-prefix row
     layout of ``graph.partition.build_halo_plan`` and guarantee
     ``export_counts.max() <= export_max`` for every batch they run on it.
     """
-    _check_bucket(bucket_key, mesh)
+    _check_bucket(bucket_key, mesh, block_size if backend == "bsr" else 0)
     m = bucket_key[0] // mesh.devices.size
     export_max = int(min(max(1, export_max), m))
     fn_key, run = _sharded_run_for(
         mesh, backend=backend, delta=delta, max_iters=max_iters,
         block_rows=block_rows, interpret=interpret, donate=donate,
-        transport="halo", export_max=export_max)
+        transport="halo", export_max=export_max,
+        block_size=block_size, num_slots=num_slots)
     key = (fn_key, tuple(bucket_key))
     plan = _PLAN_CACHE.get(key)
     if plan is None:
@@ -489,7 +563,8 @@ def build_stream_halo_plan(
             interpret=interpret,
             row_sharding=jax.sharding.NamedSharding(mesh, P(axes)),
             row2_sharding=jax.sharding.NamedSharding(mesh, P(axes, None)),
-            run=run, export_max=export_max)
+            run=run, block_size=block_size, num_slots=num_slots,
+            export_max=export_max)
         _PLAN_CACHE[key] = plan
     return plan
 

@@ -98,6 +98,9 @@ class DynLP:
         self.backend = backend
         self.auto_bucket = auto_bucket
         self.last_snapshot: Snapshot | None = None
+        # per-engine max_k truncation-warning dedup (matches StreamEngine:
+        # a fresh engine warns again instead of inheriting process state)
+        self._max_k_warned: set[tuple[int, int]] = set()
 
     # ------------------------------------------------------------------ #
     def step(self, batch: BatchUpdate) -> StepStats:
@@ -111,7 +114,8 @@ class DynLP:
 
         # ---- Step 2: supernode label initialization for new vertices ----
         snap = build_problem(g, max_degree=self.max_degree,
-                             auto_bucket=self.auto_bucket, max_k=self.max_k)
+                             auto_bucket=self.auto_bucket, max_k=self.max_k,
+                             warned=self._max_k_warned)
         new_unl = effect.new_ids[g.labels[effect.new_ids] == UNLABELED]
         if m and len(new_unl):
             comp_local = gprime_components(effect, m)

@@ -80,6 +80,22 @@ def update_island(wgt, wl0, wl1, f, f_v, mask):
     return jax.lax.optimization_barrier(fu)
 
 
+def bsr_update_island(y, wl1, wall, f):
+    """The BSR backend's per-row update, isolated like ``update_island``.
+
+    ``y`` is the block-sparse neighbor aggregation Σ_v w(u,v)·F_v; the
+    weighted-average form F' = (y + wl1)/Wall (paper §5) replaces the
+    Jacobi-delta form because the MXU matvec produces the sum directly.
+    Barriered for the same reason as ``update_island``: the sharded
+    transports embed this arithmetic next to different collectives, and
+    the bsr-allgather ≡ bsr-halo bit-equality contract needs XLA to emit
+    it identically in both programs.
+    """
+    y, wl1, wall, f = jax.lax.optimization_barrier((y, wl1, wall, f))
+    fu = jnp.where(wall > 0, (y + wl1) / jnp.maximum(wall, 1e-30), f)
+    return jax.lax.optimization_barrier(fu)
+
+
 def lp_update(problem: PropagationProblem, f: jax.Array) -> jax.Array:
     """One unmasked LP update for every row (paper Eq. in §4 / Alg.2 L28).
 

@@ -24,8 +24,18 @@ import numpy as np
 logger = logging.getLogger(__name__)
 
 # (max_k, natural-K rung) pairs whose truncation was already WARNed —
-# repeats log at DEBUG so a persistent hub doesn't spam every Δ_t.
+# repeats log at DEBUG so a persistent hub doesn't spam every Δ_t.  This
+# module-level set is the fallback for bare ``build_host_problem`` calls
+# only: engines (DynLP / StreamEngine) pass their own per-engine set via
+# ``warned=`` so a fresh engine warns again instead of inheriting another
+# engine's (or test's) dedup state.  ``reset_max_k_warnings`` clears the
+# fallback for callers that need a clean slate without an engine.
 _MAX_K_WARNED: set[tuple[int, int]] = set()
+
+
+def reset_max_k_warnings() -> None:
+    """Clear the process-wide max_k truncation-warning dedup state."""
+    _MAX_K_WARNED.clear()
 
 from repro.core.propagate import PropagationProblem
 from repro.graph.dynamic import UNLABELED, DynamicGraph
@@ -157,6 +167,30 @@ def apply_halo_layout(host: HostSnapshot, plan) -> HostSnapshot:
         valid=host.valid[p], unl_ids=host.unl_ids, remap=host.remap)
 
 
+def reorder_host_snapshot(host: HostSnapshot,
+                          order: np.ndarray) -> tuple[HostSnapshot, np.ndarray]:
+    """Permute a host snapshot's rows by ``order`` (new → old), remapping
+    neighbor ids to the new row space.
+
+    The generic twin of ``apply_halo_layout`` for orderings that carry no
+    precomputed remapped ``nbr`` — the BSR backend uses it with the
+    Step-1 component order (``core.components.component_order``) so the
+    adjacency densifies into tiles.  Row order is invisible to the
+    fixpoint (same argument as the halo layout); returns the permuted
+    snapshot plus ``inv`` (old → new) for folding solved rows back.
+    """
+    from repro.core.components import permute_ell_rows
+
+    if len(order) != len(host.valid):
+        raise ValueError(f"order has {len(order)} rows, snapshot has "
+                         f"{len(host.valid)}")
+    nbr, inv = permute_ell_rows(host.nbr, order)
+    return HostSnapshot(
+        nbr=nbr, wgt=host.wgt[order], wl0=host.wl0[order],
+        wl1=host.wl1[order], valid=host.valid[order],
+        unl_ids=host.unl_ids, remap=host.remap), inv
+
+
 def bucket(n: int, ratio: float = 1.3, floor: int = 256) -> int:
     """Round ``n`` up to a geometric bucket so jit caches hit across batches
     (the evolving graph would otherwise trigger one recompile per Δ_t)."""
@@ -204,20 +238,26 @@ def build_host_problem(
     auto_bucket: bool = False,
     row_multiple: int | None = None,
     max_k: int | None = None,
+    warned: set | None = None,
 ) -> HostSnapshot:
     """Host-side (numpy) snapshot build; see module docstring for padding.
 
     ``row_multiple`` rounds the (possibly bucketed) row count up to a
     multiple — mesh-sharded streams pass the device count so every bucket
-    shape shards evenly (``core.distributed.build_stream_plan``).
+    shape shards evenly (``core.distributed.build_stream_plan``) — times
+    the BSR block size when the bsr backend is selectable.
 
     ``max_k`` caps the ELL neighbor axis: rows whose natural degree
     exceeds it keep only their ``max_k`` *heaviest* edges (the
     ``csr_to_ell_fast`` truncation policy), so a single hub vertex can't
     drag the whole K-bucket ladder — and every jit cache behind it — up.
     Unlike ``max_degree`` it is a pure cap: low-degree snapshots keep
-    their tight natural K.  Truncation is logged when it fires.
+    their tight natural K.  Truncation is logged when it fires; ``warned``
+    scopes the once-per-rung WARNING dedup (engines pass their own set,
+    bare calls share the module-level fallback).
     """
+    if warned is None:
+        warned = _MAX_K_WARNED
     alive_unl = g.alive & (g.labels == UNLABELED)
     unl_ids = np.flatnonzero(alive_unl)
     u = len(unl_ids)
@@ -242,9 +282,9 @@ def build_host_problem(
             # a persistent hub would repeat this every Δ_t: warn once per
             # (cap, natural-K rung) per process, then demote to debug
             warn_key = (max_k, bucket_k(nat_k))
-            level = (logging.DEBUG if warn_key in _MAX_K_WARNED
+            level = (logging.DEBUG if warn_key in warned
                      else logging.WARNING)
-            _MAX_K_WARNED.add(warn_key)
+            warned.add(warn_key)
             logger.log(
                 level,
                 "snapshot: max_k=%d truncating %d/%d rows (natural max "
@@ -298,10 +338,11 @@ def build_problem(
     pad_to: int | None = None,
     auto_bucket: bool = False,
     max_k: int | None = None,
+    warned: set | None = None,
 ) -> Snapshot:
     host = build_host_problem(
         g, max_degree=max_degree, pad_to=pad_to, auto_bucket=auto_bucket,
-        max_k=max_k,
+        max_k=max_k, warned=warned,
     )
     problem = PropagationProblem(
         nbr=jnp.asarray(host.nbr),

@@ -26,9 +26,18 @@ the amortized version:
 
 ``step`` (submit + drain) keeps the exact ``DynLP.step`` semantics and
 numerics — streamed labels are allclose to fresh per-batch DynLP results
-(tests/test_stream.py); the solve itself routes through
-``kernels.ops.run_propagation`` so ref / ell_pallas / bsr backends are
-interchangeable.
+(tests/test_stream.py); the solve itself routes through the backend
+registry of ``kernels.ops``: the engine resolves each ladder rung's
+backend once at rung entry (``backend="auto"`` may pick the ``bsr`` MXU
+path on TPU when the measured post-reorder block fill factor clears the
+registry's threshold), then reuses the decision for every batch in the
+rung.  A ``bsr`` rung stages snapshots in the paper's Step-1 component
+order (``core.components.component_order``) so the adjacency densifies
+into tiles, derives the per-edge tile-slot map per Δ_t
+(``kernels.bsr_spmv.ell_bsr_layout``), and compiles one tile budget per
+rung — a Δ_t whose slot requirement overflows the budget falls back to
+``ell_pallas`` with a once-per-rung warning, mirroring the halo-overflow
+contract.
 
 With ``mesh=`` the same stream spans a device mesh: rows of every bucket
 shard over all mesh axes through the ``core.distributed`` shard_map
@@ -41,9 +50,15 @@ shard's export prefix, with the export budget compiled once per rung
 host — a batch whose exports overflow the rung's budget falls back to
 all-gather for that Δ_t with a logged warning.  ``"auto"`` (default)
 measures the rung's export fraction at rung entry and picks halo when it
-is small enough to pay.  Labels stay bit-identical to the single-device
-engine under every transport (tests/test_stream_sharded.py,
-tests/test_stream_property.py).  See docs/streaming.md §Transports.
+is small enough to pay; ``"auto:measured"`` instead times one real sweep
+per transport at rung entry and caches the winner (two extra probe
+compiles per rung — the cost of measuring reconstruct overhead the
+byte-count heuristic can't see).  Labels stay bit-identical to the
+single-device engine under every transport
+(tests/test_stream_sharded.py, tests/test_stream_property.py); a
+``bsr`` rung stages in the halo row layout under BOTH transports so its
+labels are bit-identical across them too.  See docs/streaming.md
+§Transports and §Backends.
 """
 
 from __future__ import annotations
@@ -59,19 +74,21 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import distributed
-from repro.core.components import compact_labels
+from repro.core.components import compact_labels, component_order
 from repro.core.dynlp import gprime_components
 from repro.core.init_labels import supernode_init
 from repro.core.propagate import PropagationProblem
 from repro.core.snapshot import (HostSnapshot, LabelView, apply_halo_layout,
-                                 build_host_problem)
+                                 bucket_k, build_host_problem,
+                                 reorder_host_snapshot)
 from repro.graph import partition
 from repro.graph.dynamic import UNLABELED, BatchUpdate, DynamicGraph
 from repro.kernels import ops
+from repro.kernels.bsr_spmv import ell_bsr_layout
 
 logger = logging.getLogger(__name__)
 
-TRANSPORTS = ("allgather", "halo", "auto")
+TRANSPORTS = ("allgather", "halo", "auto", "auto:measured")
 
 # auto picks halo for a rung iff its compiled export budget would move
 # at most this fraction of the full all-gather bytes per sweep.
@@ -92,6 +109,9 @@ class StreamStats:
     recompiled: bool  # True iff this Δ_t triggered any XLA compile
     transport: str = "single"  # collective this Δ_t rode: "single" (no
     # mesh), "allgather", "halo", or "none" (no-op Δ_t, nothing solved)
+    backend: str = "none"  # registry backend that solved this Δ_t
+    # ("ref"/"ell_pallas"/"bsr"; "none" for a no-op Δ_t) — a bsr rung's
+    # slot-budget overflow shows up here as an "ell_pallas" batch
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))
@@ -117,9 +137,24 @@ class _Pending:
     view_alive: np.ndarray
     view_f: np.ndarray
     transport: str = "single"
-    # halo layout inverse: solved row for original row i is rows[i]
-    # (None when rows were staged unpermuted)
+    backend: str = "none"
+    # row-layout inverse (halo export-prefix or BSR component order):
+    # solved row for original row i is rows[i] (None = staged unpermuted)
     rows: np.ndarray | None = None
+
+
+@dataclasses.dataclass
+class _Staging:
+    """One Δ_t's resolved staging decision (plan, layout, backend)."""
+
+    staged: HostSnapshot  # possibly row-permuted
+    backend: str  # registry backend solving this Δ_t
+    transport: str  # "single" | "allgather" | "halo"
+    plan: object | None = None  # StreamShardPlan/StreamHaloPlan (mesh only)
+    rows: np.ndarray | None = None  # old row -> staged row (fold-back)
+    perm: np.ndarray | None = None  # staged row -> old row (f0/frontier)
+    slot: np.ndarray | None = None  # bsr per-edge tile-slot map
+    num_slots: int = 0  # bsr compiled tile budget (0 otherwise)
 
 
 class StreamEngine:
@@ -181,8 +216,31 @@ class StreamEngine:
                 f"max_k={max_k!r} invalid; want an int, None (uncapped), "
                 "or 'auto' (4x the graph's kNN k)")
         self.max_k = 4 * graph.k if max_k == "auto" else max_k
-        self._row_multiple = int(mesh.devices.size) if mesh is not None else None
-        self._plans: dict[tuple[int, int], distributed.StreamShardPlan] = {}
+        # Pin the backend knob at construction: the fleet-wide
+        # REPRO_BACKEND hint is read ONCE here — row padding and the
+        # candidate set below depend on it, so a mid-stream env flip must
+        # not hand a later rung a backend the engine never prepared for
+        # (rung resolution passes use_env=False).  A hint with no
+        # sharded form degrades to auto, mirroring select_backend.
+        knob = backend
+        if knob in (None, "auto"):
+            env = os.environ.get("REPRO_BACKEND", "auto")
+            knob = (env if env != "auto" and (
+                mesh is None or ops.backend_spec(env).sharded) else "auto")
+        self._backend_knob = knob
+        # The registry tells us up front which backends the pinned knob
+        # could ever resolve to; only when bsr is among them do we pay
+        # block-size row padding and per-rung fill measurement.
+        self._backend_candidates = (
+            ops.backend_candidates(None, sharded=mesh is not None)
+            if knob == "auto" else (ops.backend_spec(knob).name,))
+        self._bsr_block = ops.BSR_BLOCK_SIZE
+        row_multiple = int(mesh.devices.size) if mesh is not None else 1
+        if "bsr" in self._backend_candidates:
+            # every shard's row block must tile evenly into BSR block rows
+            row_multiple *= self._bsr_block
+        self._row_multiple = row_multiple if row_multiple > 1 else None
+        self._plans: dict[tuple, distributed.StreamShardPlan] = {}
         self._halo_plans: dict[tuple, distributed.StreamHaloPlan] = {}
         self.plan_builds = 0  # partition plans built — ≤ rungs touched
         # per-rung transport state: mode fixed at rung entry ("halo" or
@@ -192,6 +250,17 @@ class StreamEngine:
         self._overflow_warned: set[tuple[int, int]] = set()
         self.halo_batches = 0  # batches solved on the halo transport
         self.transport_overflows = 0  # halo batches forced onto all-gather
+        # per-rung backend state (registry decision fixed at rung entry)
+        # and the bsr tile-slot budget compiled into the rung's runner
+        self._backend_modes: dict[tuple[int, int], str] = {}
+        self._slot_budgets: dict[tuple[int, int], int] = {}
+        self._slot_overflow_warned: set[tuple[int, int]] = set()
+        self.bsr_batches = 0  # batches solved on the bsr backend
+        self.backend_overflows = 0  # bsr batches forced onto ell_pallas
+        self._measured: dict[tuple[int, int], dict] = {}  # auto:measured
+        # per-engine max_k truncation-warning dedup (a fresh engine warns
+        # again instead of inheriting another engine's state)
+        self._max_k_warned: set[tuple[int, int]] = set()
         # bucket_key -> two generations of device problem buffers; the
         # generation toggles per commit so the in-flight solve never shares
         # storage with the snapshot being staged.
@@ -208,97 +277,296 @@ class StreamEngine:
         self._view = LabelView.from_graph(graph, commit_id=0)
 
     # ------------------------------------------------------------------ #
-    def _plan_for(self, key: tuple[int, int]) -> distributed.StreamShardPlan:
+    def _plan_for(self, key: tuple[int, int], backend: str,
+                  num_slots: int = 0) -> distributed.StreamShardPlan:
         """Partition plan for one ladder rung — built once, then reused
-        for every batch whose padded snapshot lands in that rung."""
-        plan = self._plans.get(key)
+        for every batch whose padded snapshot lands in that rung.  A bsr
+        rung's slot-budget overflow additionally builds the rung's
+        ell_pallas twin (+1 plan per recorded overflow, like halo)."""
+        pkey = (key, backend, num_slots)
+        plan = self._plans.get(pkey)
         if plan is None:
             plan = distributed.build_stream_plan(
-                self.mesh, key,
-                backend=ops.select_backend(self.backend, num_rows=key[0],
-                                           sharded=True),
+                self.mesh, key, backend=backend,
                 delta=self.delta, max_iters=self.max_iters,
                 block_rows=self.block_rows, interpret=self.interpret,
-                donate=True)
-            self._plans[key] = plan
+                donate=True,
+                block_size=self._bsr_block if backend == "bsr" else 0,
+                num_slots=num_slots if backend == "bsr" else 0)
+            self._plans[pkey] = plan
             self.plan_builds += 1
         return plan
 
     # ------------------------------------------------------------------ #
-    def _halo_plan_for(self, key: tuple[int, int],
-                       export_max: int) -> distributed.StreamHaloPlan:
+    def _halo_plan_for(self, key: tuple[int, int], export_max: int,
+                       backend: str,
+                       num_slots: int = 0) -> distributed.StreamHaloPlan:
         """Halo partition plan for one ladder rung — the export budget is
         fixed at rung entry, so like the all-gather plan it is built once
         and reused for every same-rung batch."""
-        hkey = (key, export_max)
+        hkey = (key, export_max, backend, num_slots)
         plan = self._halo_plans.get(hkey)
         if plan is None:
             plan = distributed.build_stream_halo_plan(
-                self.mesh, key, export_max,
-                backend=ops.select_backend(self.backend, num_rows=key[0],
-                                           sharded=True),
+                self.mesh, key, export_max, backend=backend,
                 delta=self.delta, max_iters=self.max_iters,
                 block_rows=self.block_rows, interpret=self.interpret,
-                donate=True)
+                donate=True,
+                block_size=self._bsr_block if backend == "bsr" else 0,
+                num_slots=num_slots if backend == "bsr" else 0)
             self._halo_plans[hkey] = plan
             self.plan_builds += 1
         return plan
 
     # ------------------------------------------------------------------ #
-    def _mesh_plan(self, host: HostSnapshot):
-        """Resolve this batch's (plan, halo layout) on the mesh.
+    def _resolve_rung_backend(self, key: tuple[int, int],
+                              nbr_staged: np.ndarray, n_valid: int):
+        """Fix the rung's backend at rung entry through the registry.
 
-        The rung's transport mode and export budget are decided once, at
-        rung entry: ``"auto"`` partitions the first snapshot that lands
-        in the rung and takes halo iff the budgeted export fraction is at
-        most ``AUTO_EXPORT_FRACTION`` (a single-device mesh has nothing
-        to save and always takes all-gather).  Within a halo rung the
-        export *layout* is re-derived from every batch's topology (the
-        budget tolerates stale/extra prefix rows — they ship committed
-        labels); a batch whose export counts overflow the budget runs on
-        the rung's all-gather twin instead (warned once per rung).
-        Returns ``(plan, halo_layout)`` with ``halo_layout=None`` for
-        all-gather batches.
+        When bsr is among the candidates the post-reorder block fill
+        factor is measured from this first snapshot (already permuted
+        into the order bsr would stage) and fed to the registry's
+        ``auto_eligible`` predicates; an explicit/env ``"bsr"`` skips the
+        eligibility question but still derives the layout, whose slot
+        requirement — scaled by the rung's remaining fill factor
+        ``key[0] / n_valid`` (same reasoning as
+        ``graph.partition.export_budget``: a rung entered at ``n_valid``
+        rows grows to its padded row count, and block rows densify with
+        it) and padded up the ``bucket_k`` ladder — becomes the rung's
+        compiled tile budget.  Returns (backend, layout-or-None).
+        """
+        bl = None
+        fill = None
+        if "bsr" in self._backend_candidates:
+            bl = ell_bsr_layout(nbr_staged, self._bsr_block)
+            fill = bl.fill
+        backend = ops.select_backend(
+            self._backend_knob, num_rows=key[0],
+            sharded=self.mesh is not None, block_fill=fill,
+            use_env=False)  # the hint was pinned at construction
+        self._backend_modes[key] = backend
+        if backend == "bsr":
+            grow = key[0] / max(1, n_valid)
+            cap = min(key[0] // self._bsr_block,
+                      key[1] * self._bsr_block)  # ≤ BS rows × K edges each
+            self._slot_budgets[key] = min(
+                bucket_k(int(np.ceil(bl.num_slots * grow))), max(cap, 1))
+            logger.info(
+                "stream backend: rung %s -> bsr (block fill %.2f, slot "
+                "budget %d)", key, fill, self._slot_budgets[key])
+        else:
+            logger.info("stream backend: rung %s -> %s", key, backend)
+        return backend, bl
+
+    # ------------------------------------------------------------------ #
+    def _slot_overflow(self, key: tuple[int, int], needed: int) -> None:
+        """Record a bsr tile-budget overflow (warned once per rung)."""
+        if key not in self._slot_overflow_warned:
+            self._slot_overflow_warned.add(key)
+            logger.warning(
+                "stream bsr: rung %s needs %d tile slots but the compiled "
+                "budget is %d — falling back to ell_pallas for this batch "
+                "(warned once per rung)", key, needed,
+                self._slot_budgets[key])
+        self.backend_overflows += 1
+
+    # ------------------------------------------------------------------ #
+    def _stage_single(self, host: HostSnapshot) -> _Staging:
+        """Resolve a mesh-less Δ_t: rung backend via the registry; bsr
+        rungs component-reorder the rows (Step-1 clustering) and derive
+        the per-edge tile-slot map, falling back to ell_pallas when a
+        batch's slot requirement overflows the rung's compiled budget."""
+        key = host.bucket_key
+        backend = self._backend_modes.get(key)
+        order = bl = staged = inv = None
+        if backend is None:
+            if "bsr" in self._backend_candidates:
+                order = component_order(host.nbr)
+                staged, inv = reorder_host_snapshot(host, order)
+                backend, bl = self._resolve_rung_backend(
+                    key, staged.nbr, len(host.unl_ids))
+            else:
+                backend, bl = self._resolve_rung_backend(
+                    key, host.nbr, len(host.unl_ids))
+        if backend != "bsr":
+            return _Staging(staged=host, backend=backend, transport="single")
+        if order is None:
+            order = component_order(host.nbr)
+            staged, inv = reorder_host_snapshot(host, order)
+        if bl is None:
+            bl = ell_bsr_layout(staged.nbr, self._bsr_block)
+        if bl.num_slots > self._slot_budgets[key]:
+            self._slot_overflow(key, bl.num_slots)
+            return _Staging(staged=host, backend="ell_pallas",
+                            transport="single")
+        self.bsr_batches += 1
+        return _Staging(staged=staged, backend="bsr", transport="single",
+                        rows=inv[: len(host.unl_ids)], perm=order,
+                        slot=bl.slot, num_slots=self._slot_budgets[key])
+
+    # ------------------------------------------------------------------ #
+    def _stage_mesh(self, host: HostSnapshot) -> _Staging:
+        """Resolve a mesh Δ_t: rung backend + transport mode + plan.
+
+        The rung's backend, transport mode and budgets are decided once,
+        at rung entry: ``"auto"`` partitions the first snapshot that
+        lands in the rung and takes halo iff the budgeted export fraction
+        is at most ``AUTO_EXPORT_FRACTION`` (``"auto:measured"`` times
+        one real sweep per transport instead; a single-device mesh always
+        takes all-gather).  Within a halo rung the export *layout* is
+        re-derived from every batch's topology (the budget tolerates
+        stale/extra prefix rows — they ship committed labels); a batch
+        whose export counts overflow the budget runs on the rung's
+        all-gather twin instead (warned once per rung).  A bsr rung
+        stages in the halo row layout under BOTH transports — the tile
+        layout is then identical in both programs, which is what makes
+        bsr labels bit-identical across transports — and a batch whose
+        tile-slot requirement overflows the rung's compiled budget runs
+        on the rung's ell_pallas twin under the same transport routing
+        (warned once per rung; ell_pallas is itself bit-identical across
+        transports, so the cross-transport contract survives fallback).
         """
         key = host.bucket_key
         n_dev = self.mesh.devices.size
+        backend = self._backend_modes.get(key)
         mode = self._transport_modes.get(key)
-        if mode is None and (
-                self.transport == "allgather"
-                or (self.transport == "auto" and n_dev == 1)):
-            mode = self._transport_modes[key] = "allgather"
-        if mode == "allgather":
-            return self._plan_for(key), None
-        layout = partition.build_halo_plan(host.nbr, n_dev)
-        if mode is None:  # rung entry: fix budget + mode for the rung
-            budget = partition.export_budget(layout, len(host.unl_ids))
-            frac = budget * n_dev / key[0]
-            mode = ("halo" if self.transport == "halo"
-                    or frac <= AUTO_EXPORT_FRACTION else "allgather")
+        allgather_only = (self.transport == "allgather"
+                          or (self.transport in ("auto", "auto:measured")
+                              and n_dev == 1))
+        bsr_possible = (backend == "bsr" or (
+            backend is None and "bsr" in self._backend_candidates))
+        # the halo layout doubles as the bsr row order, so derive it
+        # whenever the rung needs halo bytes OR bsr tiles
+        need_layout = (bsr_possible or mode == "halo"
+                       or (mode is None and not allgather_only))
+        layout = (partition.build_halo_plan(host.nbr, n_dev)
+                  if need_layout else None)
+        bl = None
+        if backend is None:
+            backend, bl = self._resolve_rung_backend(
+                key, layout.nbr if layout is not None else host.nbr,
+                len(host.unl_ids))
+        if mode is None:
+            # need_layout guarantees a layout whenever this branch can
+            # pick halo, so only the allgather-only case lacks one
+            if allgather_only:
+                mode = "allgather"
+            else:
+                budget = partition.export_budget(layout, len(host.unl_ids))
+                if self.transport == "auto:measured":
+                    mode = self._measure_rung_transport(key, host, layout,
+                                                        budget, backend)
+                else:
+                    frac = budget * n_dev / key[0]
+                    mode = ("halo" if self.transport == "halo"
+                            or frac <= AUTO_EXPORT_FRACTION else "allgather")
+                    if mode == "allgather":
+                        logger.info(
+                            "stream transport: rung %s export fraction "
+                            "%.2f > %.2f — auto takes all-gather", key,
+                            frac, AUTO_EXPORT_FRACTION)
+                if mode == "halo":
+                    self._export_budgets[key] = budget
             self._transport_modes[key] = mode
-            if mode == "allgather":
-                logger.info(
-                    "stream transport: rung %s export fraction %.2f > %.2f"
-                    " — auto takes all-gather", key, frac,
-                    AUTO_EXPORT_FRACTION)
-                return self._plan_for(key), None
-            self._export_budgets[key] = budget
-        budget = self._export_budgets[key]
-        if int(layout.export_counts.max()) > budget:
-            # overflow: this Δ_t's cross-shard rows exceed the rung's
-            # compiled export prefix — correctness falls back to the
-            # all-gather twin for this batch only
-            if key not in self._overflow_warned:
-                self._overflow_warned.add(key)
-                logger.warning(
-                    "stream halo: rung %s export count %d overflows the "
-                    "compiled budget %d — falling back to all-gather for "
-                    "this batch (warned once per rung)", key,
-                    int(layout.export_counts.max()), budget)
-            self.transport_overflows += 1
-            return self._plan_for(key), None
-        self.halo_batches += 1
-        return self._halo_plan_for(key, budget), layout
+
+        # ---- per-Δ_t staging: permute when halo bytes or bsr tiles need
+        # the export-prefix row layout ----
+        staged, rows, perm = host, None, None
+        if backend == "bsr" or mode == "halo":
+            if layout is None:
+                layout = partition.build_halo_plan(host.nbr, n_dev)
+            staged = apply_halo_layout(host, layout)
+            rows = layout.inv_perm[: len(host.unl_ids)]
+            perm = layout.perm
+        slot, num_slots = None, 0
+        backend_this = backend
+        if backend == "bsr":
+            if bl is None:
+                bl = ell_bsr_layout(staged.nbr, self._bsr_block)
+            if bl.num_slots > self._slot_budgets[key]:
+                # slot-budget overflow: this Δ_t rides the rung's
+                # ell_pallas twin but keeps the rung's TRANSPORT routing
+                # below, so halo accounting (halo_batches + overflows)
+                # stays exact
+                self._slot_overflow(key, bl.num_slots)
+                backend_this = "ell_pallas"
+            else:
+                slot, num_slots = bl.slot, self._slot_budgets[key]
+                self.bsr_batches += 1
+
+        if mode == "halo":
+            budget = self._export_budgets[key]
+            if int(layout.export_counts.max()) > budget:
+                # overflow: this Δ_t's cross-shard rows exceed the rung's
+                # compiled export prefix — correctness falls back to the
+                # all-gather twin for this batch only
+                if key not in self._overflow_warned:
+                    self._overflow_warned.add(key)
+                    logger.warning(
+                        "stream halo: rung %s export count %d overflows "
+                        "the compiled budget %d — falling back to "
+                        "all-gather for this batch (warned once per rung)",
+                        key, int(layout.export_counts.max()), budget)
+                self.transport_overflows += 1
+            else:
+                self.halo_batches += 1
+                return _Staging(
+                    staged=staged, backend=backend_this, transport="halo",
+                    plan=self._halo_plan_for(key, budget, backend_this,
+                                             num_slots),
+                    rows=rows, perm=perm, slot=slot, num_slots=num_slots)
+        return _Staging(
+            staged=staged, backend=backend_this, transport="allgather",
+            plan=self._plan_for(key, backend_this, num_slots),
+            rows=rows, perm=perm, slot=slot, num_slots=num_slots)
+
+    # ------------------------------------------------------------------ #
+    def _measure_rung_transport(self, key, host, layout, budget,
+                                backend) -> str:
+        """``auto:measured``: time one real sweep per transport on the
+        rung's first snapshot and cache the winner.
+
+        Costs two probe runners (``max_iters=1``, compiled once per rung
+        and counted by ``compile_cache_size``) plus two timed sweeps each
+        — the price of capturing reconstruct-overhead effects the
+        byte-count heuristic cannot see.  The probes never touch the
+        engine's donated buffers (``donate=False``, throwaway staging).
+        """
+        m = key[0] // self.mesh.devices.size
+        if budget >= m:
+            return "allgather"  # halo ships no fewer bytes: skip the probe
+        staged = apply_halo_layout(host, layout)
+        slot = None
+        bsr_kw = {}
+        if backend == "bsr":
+            bl = ell_bsr_layout(staged.nbr, self._bsr_block)
+            slot = bl.slot
+            bsr_kw = dict(block_size=self._bsr_block,
+                          num_slots=self._slot_budgets[key])
+        times = {}
+        for tr in ("allgather", "halo"):
+            build = (distributed.build_stream_plan if tr == "allgather"
+                     else functools.partial(distributed.build_stream_halo_plan,
+                                            export_max=budget))
+            plan = build(self.mesh, key, backend=backend, delta=self.delta,
+                         max_iters=1, block_rows=self.block_rows,
+                         interpret=self.interpret, donate=False, **bsr_kw)
+            problem = plan.put_problem(staged.nbr, staged.wgt, staged.wl0,
+                                       staged.wl1, staged.valid)
+            f0 = plan.put_row(np.full(key[0], 0.5, np.float32))
+            fr = plan.put_row(staged.valid)
+            kw = ({"slot": plan.put_row2(slot)} if slot is not None else {})
+            jax.block_until_ready(plan(problem, f0, fr, **kw).f)  # compile
+            t0 = time.perf_counter()
+            jax.block_until_ready(plan(problem, f0, fr, **kw).f)
+            times[tr] = time.perf_counter() - t0
+        mode = "halo" if times["halo"] <= times["allgather"] else "allgather"
+        self._measured[key] = {t: round(v * 1e3, 4) for t, v in times.items()}
+        logger.info(
+            "stream transport: rung %s measured halo %.2f ms vs all-gather "
+            "%.2f ms per sweep — taking %s", key, times["halo"] * 1e3,
+            times["allgather"] * 1e3, mode)
+        return mode
 
     # ------------------------------------------------------------------ #
     def _commit(
@@ -360,7 +628,7 @@ class StreamEngine:
                 res=None, unl_ids=unl_ids, t0=t0,
                 num_components=0, frontier_size=0,
                 bucket=(0, 0),  # nothing staged this Δ_t
-                recompiled=False, transport="none",
+                recompiled=False, transport="none", backend="none",
                 view_labels=g.labels.copy(), view_alive=g.alive.copy(),
                 view_f=g.f.copy(),
             )
@@ -370,28 +638,25 @@ class StreamEngine:
         host = build_host_problem(g, max_degree=self.max_degree,
                                   auto_bucket=True,
                                   row_multiple=self._row_multiple,
-                                  max_k=self.max_k)
+                                  max_k=self.max_k,
+                                  warned=self._max_k_warned)
         u = len(host.unl_ids)
         u_pad = len(host.valid)
         frontier = np.zeros(u_pad, bool)
         aff_rows = host.remap[effect.affected]
         frontier[aff_rows[aff_rows >= 0]] = True
 
-        # mesh: resolve this batch's transport; halo batches permute the
-        # snapshot into the export-prefix row layout before staging (row
-        # order is invisible to the fixpoint, so labels stay bit-equal —
+        # resolve this batch's backend/transport/plan through the per-rung
+        # registry state; bsr and halo batches permute the snapshot (into
+        # component order or the export-prefix layout) before staging —
+        # row order is invisible to the fixpoint, so labels stay bit-equal.
         # ``host`` itself stays in original row order for the supernode
-        # init and f0 builds below, which fold back via halo.inv_perm)
-        halo = None
-        staged = host
-        if self.mesh is not None:
-            plan, halo = self._mesh_plan(host)
-            if halo is not None:
-                staged = apply_halo_layout(host, halo)
-        else:
-            plan = None
-        problem = self._commit(staged, plan)
-        frontier_staged = frontier if halo is None else frontier[halo.perm]
+        # init and f0 builds below, which fold back via ``st.rows``.
+        st = (self._stage_mesh(host) if self.mesh is not None
+              else self._stage_single(host))
+        plan = st.plan
+        problem = self._commit(st.staged, plan)
+        frontier_staged = frontier if st.perm is None else frontier[st.perm]
         frontier_dev = (plan.put_row(frontier_staged) if plan is not None
                         else jnp.asarray(frontier_staged))
 
@@ -416,17 +681,23 @@ class StreamEngine:
         # ---- Step 3: launch this batch's solve (async) ----
         f0 = np.full(u_pad, 0.5, np.float32)
         f0[:u] = g.f[host.unl_ids]
-        if halo is not None:
-            f0 = f0[halo.perm]
+        if st.perm is not None:
+            f0 = f0[st.perm]
         # f0 is donated into the solve in both modes; in mesh mode it is
         # staged row-sharded first so each device recycles its own block.
         f0_dev = plan.put_row(f0) if plan is not None else jnp.asarray(f0)
+        slot_dev = None
+        if st.slot is not None:
+            slot_dev = (plan.put_row2(st.slot) if plan is not None
+                        else jnp.asarray(st.slot))
         before = ops.compile_cache_size()
         res = ops.run_propagation(
             problem, f0_dev, frontier_dev,
             delta=self.delta, max_iters=self.max_iters,
-            backend=self.backend, block_rows=self.block_rows,
+            backend=st.backend, block_rows=self.block_rows,
             interpret=self.interpret, donate=True, shard_plan=plan,
+            slot=slot_dev, num_slots=st.num_slots or None,
+            block_size=self._bsr_block if st.backend == "bsr" else None,
         )
         recompiled = ops.compile_cache_size() > before
         self.recompile_count += recompiled
@@ -435,8 +706,8 @@ class StreamEngine:
             res=res, unl_ids=host.unl_ids, t0=t0,
             num_components=n_components, frontier_size=int(frontier.sum()),
             bucket=host.bucket_key, recompiled=recompiled,
-            transport=(plan.transport if plan is not None else "single"),
-            rows=None if halo is None else halo.inv_perm[:u],
+            transport=st.transport, backend=st.backend,
+            rows=st.rows,
             # Batch-t host state (labels/alive fixed by apply_batch above;
             # f now holds batch t-1's committed labels plus this batch's
             # supernode inits).  drain() folds the solved rows over view_f
@@ -462,7 +733,7 @@ class StreamEngine:
             iterations, converged, resid = 0, True, 0.0
         else:
             f = np.asarray(p.res.f)  # synchronizes
-            # halo batches solved in export-prefix row order: gather the
+            # halo/bsr batches solved in a permuted row order: gather the
             # original rows back through the layout's inverse permutation
             solved = f[p.rows] if p.rows is not None else f[: len(p.unl_ids)]
             self.graph.f[p.unl_ids] = solved
@@ -484,6 +755,7 @@ class StreamEngine:
             bucket=p.bucket,
             recompiled=p.recompiled,
             transport=p.transport,
+            backend=p.backend,
         )
 
     # ------------------------------------------------------------------ #
@@ -522,20 +794,28 @@ class StreamEngine:
 
     # ------------------------------------------------------------------ #
     def transport_summary(self) -> dict:
-        """JSON-friendly account of the sharded transport: the requested
-        knob, the per-rung mode/budget decisions, and how many batches
-        actually rode halo vs overflowed back to all-gather.  Surfaced by
+        """JSON-friendly account of the sharded transport AND the per-rung
+        backend registry decisions: the requested knobs, each rung's
+        mode/backend/budgets, and how many batches actually rode
+        halo/bsr vs overflowed back to their fallbacks.  Surfaced by
         ``LPService.stats()`` and the streaming benchmarks."""
+        def by_rung(d):
+            return {f"{u}x{k}": v for (u, k), v in sorted(d.items())}
+
         return {
             "requested": self.transport,
             "mesh_devices": (int(self.mesh.devices.size)
                              if self.mesh is not None else 0),
-            "rung_modes": {f"{u}x{k}": m for (u, k), m
-                           in sorted(self._transport_modes.items())},
-            "export_budgets": {f"{u}x{k}": b for (u, k), b
-                               in sorted(self._export_budgets.items())},
+            "rung_modes": by_rung(self._transport_modes),
+            "export_budgets": by_rung(self._export_budgets),
             "halo_batches": self.halo_batches,
             "overflows": self.transport_overflows,
+            "requested_backend": self.backend or "auto",
+            "rung_backends": by_rung(self._backend_modes),
+            "slot_budgets": by_rung(self._slot_budgets),
+            "bsr_batches": self.bsr_batches,
+            "backend_overflows": self.backend_overflows,
+            "measured_sweep_ms": by_rung(self._measured),
         }
 
     # ------------------------------------------------------------------ #

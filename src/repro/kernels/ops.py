@@ -1,7 +1,22 @@
-"""Kernel dispatch layer — one entry point for every propagation backend.
+"""Kernel dispatch layer — a capability-declaring backend registry.
 
-``run_propagation(problem, f0, frontier0, ...)`` routes a DynLP Step-3
-solve to one of three interchangeable implementations:
+Every propagation backend registers a ``BackendSpec`` describing what it
+can do; ``run_propagation``, ``select_backend`` and
+``compile_cache_size`` iterate the registry instead of hard-coding
+backend names, so adding a backend is one ``register_backend`` call:
+
+  * ``sharded`` / ``transports`` — whether the backend has a mesh form
+    (``core.distributed`` wraps its per-shard update body) and which
+    per-sweep collectives that form supports;
+  * ``auto_eligible(info, hw)`` — when ``backend="auto"`` may pick it,
+    from the problem shape and the measured properties in
+    ``ProblemInfo`` (the streaming engine measures the post-reorder BSR
+    block fill factor at rung entry and feeds it back in here);
+  * ``run`` / ``cache_entry_points`` — the (donate-capable) single-device
+    entry point and the jitted functions whose cache sizes make up the
+    compile-once accounting.
+
+Registered backends:
 
   * ``"ref"``        — the XLA reference engine (``core.propagate``), the
                        right answer on CPU and the allclose oracle
@@ -9,96 +24,199 @@ solve to one of three interchangeable implementations:
   * ``"ell_pallas"`` — the fused ELL Pallas kernel loop
                        (``propagate_pallas``): VPU path on TPU, interpret
                        mode off-TPU.
-  * ``"bsr"``        — block-sparse MXU path: the neighbor aggregation runs
-                       as ``bsr_spmv`` over a component-reordered
-                       block-dense matrix.  Opt-in (never chosen by
-                       ``"auto"``) because densification is O(U²) on the
-                       host.
+  * ``"bsr"``        — block-sparse MXU path: the neighbor aggregation
+                       runs as ``bsr_spmv`` over component-reordered
+                       block-dense tiles built DIRECTLY from the ELL
+                       tensor (``kernels.bsr_spmv.ell_bsr_layout`` +
+                       device-side ``fill_bsr_blocks`` — O(nnz), no
+                       dense (U, U) intermediate).  Sharded under both
+                       transports; auto-eligible on TPU when the
+                       post-reorder block fill factor clears
+                       ``BSR_AUTO_FILL_MIN``.
 
-``backend="auto"`` picks by hardware + problem shape: ``ell_pallas`` on
-TPU (``ref`` for tiny problems where kernel-launch overhead dominates),
-``ref`` otherwise; the ``REPRO_BACKEND`` environment variable replaces
-the *auto* default for fleet-wide flips without code changes (an
-explicitly passed backend still wins).  ``interpret`` defaults to True
+``backend="auto"`` scans the registry by priority and takes the first
+backend whose ``auto_eligible`` accepts the problem; the
+``REPRO_BACKEND`` environment variable replaces the *auto* default for
+fleet-wide flips (an explicitly passed backend still wins, and an env
+hint that names a backend unusable in the current mode degrades back to
+the auto scan instead of failing).  ``interpret`` defaults to True
 off-TPU, so Pallas backends *degrade to the interpreter instead of
 crashing* in TPU-less environments (CI, laptops).
 
-``donate=True`` routes through jit wrappers that donate the ``f0`` /
-``frontier0`` buffers — the streaming engine feeds freshly staged device
-arrays every Δ_t and lets XLA recycle them in place rather than allocate
-per batch.  ``compile_cache_size()`` exposes the summed jit-cache entry
-count of every propagation entry point: the streaming tests assert it
-stays ≤ the shape-bucket ladder size (compile-once contract).
+``donate=True`` routes through jit wrappers that donate the ``f0``
+buffer — the streaming engine feeds freshly staged device arrays every
+Δ_t and lets XLA recycle them in place rather than allocate per batch.
+``compile_cache_size()`` sums the jit-cache entry count of every
+registered backend's entry points (plus the sharded runners): the
+streaming tests assert it stays ≤ the shape-bucket ladder size.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 import os
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.propagate import PropagateResult, PropagationProblem, propagate
-from repro.kernels.bsr_spmv import bsr_spmv, dense_to_bsr  # noqa: F401
+from repro.core.propagate import (PropagateResult, PropagationProblem,
+                                  bsr_update_island, propagate)
+from repro.kernels.bsr_spmv import (bsr_spmv, dense_to_bsr,  # noqa: F401
+                                    ell_bsr_layout, fill_bsr_blocks)
 from repro.kernels.cc_hook import cc_hook_step, connected_components_pallas  # noqa: F401
 from repro.kernels.ell_propagate import ell_propagate_step
-
-BACKENDS = ("ref", "ell_pallas", "bsr")
-
-# BSR densifies (U, U) on the host — refuse silly sizes.
-_BSR_MAX_ROWS = 8192
 
 
 def on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-# Below this row count the fused kernel's launch overhead beats the work
+# Below this row count the fused kernels' launch overhead beats the work
 # saved; auto selection keeps such problems on the XLA reference path.
 # Must exceed the 256-row bucket floor (core.snapshot.bucket): the count
 # seen here is the padded one, so a smaller threshold would never fire.
 _PALLAS_MIN_ROWS = 512
+
+# BSR tile edge. 8 keeps interpret-mode CI cheap while mapping onto the
+# MXU's (8, 128) native lane tiling; the engine pads row buckets to a
+# multiple of it whenever bsr is selectable.
+BSR_BLOCK_SIZE = 8
+
+# auto may pick bsr only when at least this fraction of the touched
+# tiles' entries carry a real edge — below it the MXU multiplies mostly
+# zeros and the VPU ELL kernel wins.
+BSR_AUTO_FILL_MIN = 0.25
+
+
+# --------------------------------------------------------------------- #
+# Backend registry
+# --------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class ProblemInfo:
+    """What auto-selection may know about a solve.
+
+    ``block_fill`` is the post-component-reorder BSR fill factor — only
+    the streaming engine measures it (at rung entry); plain callers leave
+    it ``None``, which keeps ``bsr`` out of their auto scan.
+    """
+
+    num_rows: int | None = None
+    block_fill: float | None = None
+    sharded: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class BackendSpec:
+    """One propagation backend's declared capabilities."""
+
+    name: str
+    sharded: bool  # has a core.distributed per-shard update body
+    transports: tuple[str, ...]  # collectives the sharded form supports
+    auto_priority: int  # auto scans high → low
+    auto_eligible: Callable[[ProblemInfo, str], bool]  # (info, hw) -> bool
+    run: Callable  # single-device entry point
+    cache_entry_points: tuple[Callable[[], object], ...]
+
+
+_REGISTRY: dict[str, BackendSpec] = {}
+
+
+def register_backend(spec: BackendSpec) -> BackendSpec:
+    """Add a backend to the dispatch registry (last registration wins)."""
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def backend_names() -> tuple[str, ...]:
+    return tuple(_REGISTRY)
+
+
+def backend_spec(name: str) -> BackendSpec:
+    spec = _REGISTRY.get(name)
+    if spec is None:
+        raise ValueError(
+            f"unknown backend {name!r}; want one of {backend_names()}")
+    return spec
+
+
+def _auto_select(info: ProblemInfo, hw: str) -> str:
+    for spec in sorted(_REGISTRY.values(), key=lambda s: -s.auto_priority):
+        if info.sharded and not spec.sharded:
+            continue
+        if spec.auto_eligible(info, hw):
+            return spec.name
+    raise RuntimeError("no auto-eligible backend registered")  # pragma: no cover
 
 
 def select_backend(backend: str | None = None,
                    problem: PropagationProblem | None = None,
                    *,
                    num_rows: int | None = None,
-                   sharded: bool = False) -> str:
-    """Resolve ``backend`` (None/"auto" → hardware + shape, env override).
+                   sharded: bool = False,
+                   block_fill: float | None = None,
+                   use_env: bool = True) -> str:
+    """Resolve ``backend`` (None/"auto" → registry scan, env override).
 
-    Selection rules: an explicit backend wins; the ``REPRO_BACKEND`` env
-    var replaces the "auto" default; auto gives TPU the fused ELL kernel
-    (unless the problem — sized via ``problem`` or a bare ``num_rows`` —
-    is too small to amortize a kernel launch) and everything else the XLA
-    reference.  ``bsr`` pays an O(U²) host densification and has no
-    sharded form, so the fleet-wide env hint degrades to ``ref`` whenever
-    it is unusable (rows over the BSR cap, or ``sharded``); only an
-    *explicitly passed* ``backend="bsr"`` reaches the caller's error
-    path in those cases.
+    An explicit backend wins; the ``REPRO_BACKEND`` env var replaces the
+    "auto" default; auto walks the registry by priority and takes the
+    first backend whose ``auto_eligible`` accepts a ``ProblemInfo`` built
+    from ``problem``/``num_rows``/``block_fill``.  An env *hint* naming a
+    backend with no sharded form degrades to the auto scan when
+    ``sharded`` (fleet-wide hints must not kill a stream); an explicitly
+    passed backend reaches the caller's error path instead.
+
+    ``use_env=False`` skips the env read — the streaming engine pins the
+    hint once at construction (its row padding and candidate set depend
+    on it), so a mid-stream env flip must not change later rungs.
     """
     if num_rows is None and problem is not None:
         num_rows = problem.num_unlabeled
     from_env = False
     if backend in (None, "auto"):
-        env = os.environ.get("REPRO_BACKEND", "auto")
+        env = (os.environ.get("REPRO_BACKEND", "auto") if use_env
+               else "auto")
         from_env = env != "auto"
         backend = env
+    info = ProblemInfo(num_rows=num_rows, block_fill=block_fill,
+                       sharded=sharded)
+    hw = jax.default_backend()
     if backend == "auto":
-        backend = "ell_pallas" if on_tpu() else "ref"
-        if (backend == "ell_pallas" and num_rows is not None
-                and num_rows < _PALLAS_MIN_ROWS):
-            backend = "ref"
-    if from_env and backend == "bsr" and (
-            sharded or (num_rows is not None and num_rows > _BSR_MAX_ROWS)):
-        backend = "ref"
-    if backend not in BACKENDS:
-        raise ValueError(f"unknown backend {backend!r}; want one of {BACKENDS}")
+        return _auto_select(info, hw)
+    spec = backend_spec(backend)
+    if from_env and sharded and not spec.sharded:
+        return _auto_select(info, hw)
     return backend
 
 
+def backend_candidates(backend: str | None = None, *,
+                       sharded: bool = False) -> tuple[str, ...]:
+    """Every backend the given knob could resolve to, env included.
+
+    The streaming engine asks this once at construction to decide
+    whether BSR could ever be selected — and only then pays the
+    block-size row padding and per-rung fill measurement.
+    """
+    if backend not in (None, "auto"):
+        return (backend_spec(backend).name,)
+    env = os.environ.get("REPRO_BACKEND", "auto")
+    if env != "auto":
+        spec = backend_spec(env)
+        if not (sharded and not spec.sharded):
+            return (env,)
+    hw = jax.default_backend()
+    optimistic = ProblemInfo(num_rows=None, block_fill=1.0, sharded=sharded)
+    return tuple(
+        s.name for s in sorted(_REGISTRY.values(),
+                               key=lambda s: -s.auto_priority)
+        if (not sharded or s.sharded) and s.auto_eligible(optimistic, hw))
+
+
+# --------------------------------------------------------------------- #
+# ell_pallas backend
+# --------------------------------------------------------------------- #
 def _pad_rows(problem: PropagationProblem, block_rows: int):
     n = problem.num_unlabeled
     pad = (-n) % block_rows
@@ -160,14 +278,23 @@ def propagate_pallas(
 
 
 # --------------------------------------------------------------------- #
-# BSR / MXU path
+# BSR / MXU backend — tiles built directly from the ELL tensor
 # --------------------------------------------------------------------- #
-@functools.partial(jax.jit, static_argnames=("max_iters", "interpret"))
-def _bsr_loop(blocks, block_cols, nbr, wl1, wall, valid, f0, frontier0,
-              delta, max_iters, interpret):
+def _bsr_fixpoint(problem, slot, f0, frontier0, delta, max_iters, interpret,
+                  block_size, num_slots):
+    """Frontier fixpoint with the aggregation as a BSR SpMV.  The tile
+    tensor is scatter-built from the staged ELL arrays *inside* the jit
+    (``fill_bsr_blocks``), so it never exists on the host."""
+    nbr = problem.nbr
+    blocks, bcols = fill_bsr_blocks(nbr, problem.wgt, slot,
+                                    block_size=block_size,
+                                    num_slots=num_slots)
     mask = nbr >= 0
     idx = jnp.where(mask, nbr, 0)
-    delta = jnp.asarray(delta, jnp.float32)
+    delta_ = jnp.asarray(delta, jnp.float32)
+    wall = problem.wall()
+    valid = problem.valid
+    n = nbr.shape[0]
 
     def cond(state):
         _, frontier, it, _ = state
@@ -177,19 +304,37 @@ def _bsr_loop(blocks, block_cols, nbr, wl1, wall, valid, f0, frontier0,
         f, frontier, it, _ = state
         # F'_u = (Σ_v w(u,v)·F_v + wl1_u) / Wall_u — §5's weighted average,
         # with the neighbor sum as a block-sparse matvec on the MXU.
-        y = bsr_spmv(blocks, block_cols, f, interpret=interpret)[: f.shape[0]]
-        f_all = jnp.where(wall > 0, (y + wl1) / jnp.maximum(wall, 1e-30), f)
+        y = bsr_spmv(blocks, bcols, f, interpret=interpret)[:n]
+        f_all = bsr_update_island(y, problem.wl1, wall, f)
         f_new = jnp.where(frontier & valid, f_all, f)
         resid = jnp.abs(f_new - f)
-        changed = (resid > delta) & valid
+        changed = (resid > delta_) & valid
         nbr_changed = jnp.any(changed[idx] & mask, axis=1)
         new_frontier = (changed | nbr_changed) & valid
         return f_new, new_frontier, it + 1, jnp.max(resid, initial=0.0)
 
     f, frontier, iters, resid = jax.lax.while_loop(
-        cond, body, (f0, frontier0 & valid, jnp.int32(0), jnp.float32(0)))
+        cond, body, (f0.astype(jnp.float32), frontier0 & valid,
+                     jnp.int32(0), jnp.float32(0)))
     return PropagateResult(
         f=f, iterations=iters, converged=~frontier.any(), max_residual=resid)
+
+
+@functools.partial(jax.jit, static_argnames=("max_iters", "interpret",
+                                             "block_size", "num_slots"))
+def _bsr_solve(problem, slot, f0, frontier0, delta, max_iters, interpret,
+               block_size, num_slots):
+    return _bsr_fixpoint(problem, slot, f0, frontier0, delta, max_iters,
+                         interpret, block_size, num_slots)
+
+
+@functools.partial(jax.jit, static_argnames=("max_iters", "interpret",
+                                             "block_size", "num_slots"),
+                   donate_argnums=(2,))
+def _bsr_donating(problem, slot, f0, frontier0, delta, max_iters, interpret,
+                  block_size, num_slots):
+    return _bsr_fixpoint(problem, slot, f0, frontier0, delta, max_iters,
+                         interpret, block_size, num_slots)
 
 
 def propagate_bsr(
@@ -198,46 +343,82 @@ def propagate_bsr(
     frontier0: jax.Array,
     delta: float = 1e-4,
     max_iters: int = 100_000,
-    block_size: int = 8,
+    block_size: int | None = None,
     interpret: bool | None = None,
+    slot=None,
+    num_slots: int | None = None,
+    donate: bool = False,
 ) -> PropagateResult:
     """Frontier propagation with the aggregation as a BSR SpMV (MXU path).
 
-    Builds the row-padded BSR form of the unlabeled↔unlabeled weight matrix
-    on the host (O(U²) densification — callers reorder by connected
-    component first so the tiles are dense).  Only sensible when chosen
-    explicitly; see ``select_backend``.
+    Streaming callers (``core.stream.StreamEngine``) pass a pre-ordered
+    problem plus the per-edge ``slot`` map and the rung's compiled
+    ``num_slots`` budget (``kernels.bsr_spmv.ell_bsr_layout``).  One-shot
+    callers pass neither: this entry point then component-reorders the
+    rows on the host (the paper's Step-1 clustering order), derives the
+    layout in O(nnz), solves in the reordered space, and folds the labels
+    back — no dense (U, U) intermediate at any size.
     """
     if interpret is None:
         interpret = not on_tpu()
-    n = problem.num_unlabeled
-    if n > _BSR_MAX_ROWS:
-        raise ValueError(
-            f"bsr backend densifies (U, U): U={n} > {_BSR_MAX_ROWS}; "
-            "use backend='ref' or 'ell_pallas'")
-    pad = (-n) % block_size
-    nbr = np.asarray(problem.nbr)
-    wgt = np.asarray(problem.wgt)
-    m = n + pad
-    dense = np.zeros((m, m), np.float32)
-    rows = np.repeat(np.arange(n), nbr.shape[1])
-    cols = nbr.reshape(-1)
-    keep = cols >= 0
-    dense[rows[keep], cols[keep]] = wgt.reshape(-1)[keep]
-    blocks, block_cols = dense_to_bsr(jnp.asarray(dense), block_size)
+    if block_size is None:
+        block_size = BSR_BLOCK_SIZE
+    if slot is not None:
+        if num_slots is None:
+            raise ValueError("propagate_bsr with slot= needs num_slots= "
+                             "(the compiled tile-slot budget)")
+        if isinstance(slot, np.ndarray) and slot.size \
+                and int(slot.max()) >= num_slots:
+            # a slot beyond the budget would scatter into a neighboring
+            # block row's tile — refuse loudly instead (device-array
+            # callers rely on fill_bsr_blocks dropping such lanes; the
+            # streaming engine checks its budget before dispatch)
+            raise ValueError(
+                f"slot map needs {int(slot.max()) + 1} tile slots but "
+                f"num_slots={num_slots}; pass the layout's num_slots "
+                "(padded up is fine)")
+        fn = _bsr_donating if donate else _bsr_solve
+        return fn(problem, jnp.asarray(slot), f0, frontier0, delta,
+                  max_iters=max_iters, interpret=interpret,
+                  block_size=block_size, num_slots=num_slots)
 
-    zpad = lambda x, v=0: jnp.pad(x, (0, pad), constant_values=v)
-    wall = problem.wall()  # wl0 only enters through the wall normalizer
-    res = _bsr_loop(
-        blocks, block_cols,
-        jnp.pad(problem.nbr, ((0, pad), (0, 0)), constant_values=-1),
-        zpad(problem.wl1), zpad(wall),
-        zpad(problem.valid, False),
-        zpad(f0.astype(jnp.float32)), zpad(frontier0, False),
-        delta, max_iters=max_iters, interpret=interpret)
+    # one-shot path: reorder + layout on the host, O(nnz).  Deferred
+    # imports: repro.core's package init reaches back into this module
+    # (dynlp), so core submodules beyond `propagate` can't load at import
+    # time here.
+    from repro.core.components import component_order, permute_ell_rows
+    from repro.core.snapshot import bucket_k
+
+    n = problem.num_unlabeled
+    pad = (-n) % block_size
+    nbr_h = np.asarray(problem.nbr)
+    if pad:
+        nbr_h = np.concatenate(
+            [nbr_h, np.full((pad, nbr_h.shape[1]), -1, np.int32)])
+    order = component_order(nbr_h)
+    nbr_p, inv = permute_ell_rows(nbr_h, order)
+    layout = ell_bsr_layout(nbr_p, block_size)
+
+    def rpad(x, fill=0):
+        x = np.asarray(x)
+        if not pad:
+            return x[order]
+        widths = ((0, pad),) + ((0, 0),) * (x.ndim - 1)
+        return np.pad(x, widths, constant_values=fill)[order]
+
+    pp = PropagationProblem(
+        nbr=jnp.asarray(nbr_p), wgt=jnp.asarray(rpad(problem.wgt)),
+        wl0=jnp.asarray(rpad(problem.wl0)), wl1=jnp.asarray(rpad(problem.wl1)),
+        valid=jnp.asarray(rpad(problem.valid, False)))
+    res = _bsr_solve(
+        pp, jnp.asarray(layout.slot),
+        jnp.asarray(rpad(np.asarray(f0, np.float32))),
+        jnp.asarray(rpad(np.asarray(frontier0), False)),
+        delta, max_iters=max_iters, interpret=interpret,
+        block_size=block_size, num_slots=bucket_k(layout.num_slots))
     return PropagateResult(
-        f=res.f[:n], iterations=res.iterations, converged=res.converged,
-        max_residual=res.max_residual)
+        f=res.f[jnp.asarray(inv[:n])], iterations=res.iterations,
+        converged=res.converged, max_residual=res.max_residual)
 
 
 # --------------------------------------------------------------------- #
@@ -261,6 +442,74 @@ def _pallas_donating(problem, f0, frontier0, delta, max_iters, block_rows,
                             interpret=interpret)
 
 
+# --------------------------------------------------------------------- #
+# Registry entries (scan order for auto = priority, high first)
+# --------------------------------------------------------------------- #
+def _run_ref(problem, f0, frontier0, *, delta, max_iters, donate, **_):
+    if donate:
+        return _ref_donating(problem, f0, frontier0, delta, max_iters)
+    return propagate(problem, f0, frontier0, delta=delta,
+                     max_iters=max_iters)
+
+
+def _run_ell_pallas(problem, f0, frontier0, *, delta, max_iters, block_rows,
+                    interpret, donate, **_):
+    if interpret is None:
+        interpret = not on_tpu()
+    block_rows = min(block_rows, problem.num_unlabeled)
+    if donate:
+        return _pallas_donating(problem, f0, frontier0, delta, max_iters,
+                                block_rows, interpret)
+    return propagate_pallas(problem, f0, frontier0, delta=delta,
+                            max_iters=max_iters, block_rows=block_rows,
+                            interpret=interpret)
+
+
+def _run_bsr(problem, f0, frontier0, *, delta, max_iters, interpret, donate,
+             slot=None, num_slots=None, block_size=None, **_):
+    return propagate_bsr(problem, f0, frontier0, delta=delta,
+                         max_iters=max_iters, block_size=block_size,
+                         interpret=interpret, slot=slot, num_slots=num_slots,
+                         donate=donate)
+
+
+register_backend(BackendSpec(
+    name="ref",
+    sharded=True,
+    transports=("allgather", "halo"),
+    auto_priority=10,  # the always-eligible floor of the scan
+    auto_eligible=lambda info, hw: True,
+    run=_run_ref,
+    cache_entry_points=(lambda: propagate, lambda: _ref_donating),
+))
+
+register_backend(BackendSpec(
+    name="ell_pallas",
+    sharded=True,
+    transports=("allgather", "halo"),
+    auto_priority=20,
+    auto_eligible=lambda info, hw: hw == "tpu" and (
+        info.num_rows is None or info.num_rows >= _PALLAS_MIN_ROWS),
+    run=_run_ell_pallas,
+    cache_entry_points=(lambda: propagate_pallas, lambda: _pallas_donating),
+))
+
+register_backend(BackendSpec(
+    name="bsr",
+    sharded=True,
+    transports=("allgather", "halo"),
+    auto_priority=30,  # MXU path outranks the VPU kernel when eligible
+    auto_eligible=lambda info, hw: hw == "tpu"
+    and info.block_fill is not None
+    and info.block_fill >= BSR_AUTO_FILL_MIN
+    and (info.num_rows is None or info.num_rows >= _PALLAS_MIN_ROWS),
+    run=_run_bsr,
+    cache_entry_points=(lambda: _bsr_solve, lambda: _bsr_donating),
+))
+
+BACKENDS = backend_names()
+
+
 def run_propagation(
     problem: PropagationProblem,
     f0: jax.Array,
@@ -276,6 +525,9 @@ def run_propagation(
     shard_plan=None,
     transport: str | None = None,
     export_max: int | None = None,
+    slot=None,
+    num_slots: int | None = None,
+    block_size: int | None = None,
 ) -> PropagateResult:
     """Single propagation entry point — see module docstring for routing.
 
@@ -293,8 +545,10 @@ def run_propagation(
     prebuilt ``shard_plan`` (one per bucket rung; ``StreamShardPlan`` or
     ``StreamHaloPlan``, which then fixes the transport) so partition
     planning isn't redone per Δ_t; otherwise the plan is resolved (and
-    memoized) from ``mesh`` + the problem shape.  ``bsr`` is single-device
-    only — its host-side densification has no sharded form.
+    memoized) from ``mesh`` + the problem shape.  The ``bsr`` backend
+    additionally needs the per-edge ``slot`` map and (sharded) the
+    compiled ``num_slots`` budget — ``StreamEngine`` derives both per
+    Δ_t from ``kernels.bsr_spmv.ell_bsr_layout``.
     """
     sharded = mesh is not None or shard_plan is not None
     if transport not in (None, "allgather", "halo"):
@@ -304,15 +558,32 @@ def run_propagation(
         raise ValueError("transport='halo' needs mesh= or a shard_plan "
                          "(single-device solves have no collective)")
     backend = select_backend(backend, problem, sharded=sharded)
+    spec = backend_spec(backend)
     if sharded:
         from repro.core import distributed
 
-        if backend == "bsr":
+        if not spec.sharded:
             raise ValueError(
-                "bsr backend is single-device only; use 'ref' or "
-                "'ell_pallas' with mesh=")
+                f"backend {backend!r} is single-device only; registry "
+                f"sharded backends: "
+                f"{tuple(s.name for s in _REGISTRY.values() if s.sharded)}")
+        if transport is not None and transport not in spec.transports:
+            raise ValueError(
+                f"backend {backend!r} does not support transport "
+                f"{transport!r}; declared transports: {spec.transports}")
         plan = shard_plan
         if plan is None:
+            bsr_kw = {}
+            if backend == "bsr":
+                if slot is None or num_slots is None:
+                    raise ValueError(
+                        "sharded backend='bsr' needs slot= and num_slots= "
+                        "(the per-edge BSR slot map + compiled tile budget "
+                        "from kernels.bsr_spmv.ell_bsr_layout)")
+                bsr_kw = dict(
+                    block_size=(block_size if block_size is not None
+                                else BSR_BLOCK_SIZE),
+                    num_slots=num_slots)
             if transport == "halo":
                 if export_max is None:
                     raise ValueError(
@@ -322,13 +593,13 @@ def run_propagation(
                     mesh, tuple(problem.nbr.shape), export_max,
                     backend=backend, delta=float(delta),
                     max_iters=max_iters, block_rows=block_rows,
-                    interpret=interpret, donate=donate)
+                    interpret=interpret, donate=donate, **bsr_kw)
             else:
                 plan = distributed.build_stream_plan(
                     mesh, tuple(problem.nbr.shape), backend=backend,
                     delta=float(delta), max_iters=max_iters,
                     block_rows=block_rows, interpret=interpret,
-                    donate=donate)
+                    donate=donate, **bsr_kw)
         else:
             # the plan's baked-in hyperparameters drive the solve — refuse
             # kwargs that silently disagree with them
@@ -341,49 +612,47 @@ def run_propagation(
                     f"shard_plan mismatch: called with (backend, delta, "
                     f"max_iters, block_rows, interpret, transport)={want} "
                     f"but plan was built with {have}")
+            if backend == "bsr" and num_slots is not None \
+                    and num_slots != plan.num_slots:
+                raise ValueError(
+                    f"shard_plan mismatch: num_slots={num_slots} but plan "
+                    f"compiled {plan.num_slots}")
+        if plan.backend == "bsr":
+            if slot is None:
+                raise ValueError("a bsr shard plan needs the per-edge "
+                                 "slot map (slot=)")
+            if isinstance(slot, np.ndarray) and slot.size \
+                    and int(slot.max()) >= plan.num_slots:
+                raise ValueError(
+                    f"slot map needs {int(slot.max()) + 1} tile slots "
+                    f"but the plan compiled num_slots={plan.num_slots}")
+            return plan(problem, f0, frontier0, slot=jnp.asarray(slot))
         return plan(problem, f0, frontier0)
-    if backend == "ref":
-        if donate:
-            return _ref_donating(problem, f0, frontier0, delta, max_iters)
-        return propagate(problem, f0, frontier0, delta=delta,
-                         max_iters=max_iters)
-    if backend == "ell_pallas":
-        if interpret is None:
-            interpret = not on_tpu()
-        block_rows = min(block_rows, problem.num_unlabeled)
-        if donate:
-            return _pallas_donating(problem, f0, frontier0, delta, max_iters,
-                                    block_rows, interpret)
-        return propagate_pallas(problem, f0, frontier0, delta=delta,
-                                max_iters=max_iters, block_rows=block_rows,
-                                interpret=interpret)
-    return propagate_bsr(problem, f0, frontier0, delta=delta,
-                         max_iters=max_iters, interpret=interpret)
-
-
-_CACHED_ENTRY_POINTS = (
-    lambda: propagate,
-    lambda: propagate_pallas,
-    lambda: _ref_donating,
-    lambda: _pallas_donating,
-    lambda: _bsr_loop,
-)
+    return spec.run(problem, f0, frontier0, delta=delta, max_iters=max_iters,
+                    block_rows=block_rows, interpret=interpret, donate=donate,
+                    slot=slot, num_slots=num_slots, block_size=block_size)
 
 
 def compile_cache_size() -> int:
-    """Total jit-cache entries across every propagation entry point.
+    """Total jit-cache entries across every registered backend's entry
+    points (plus the sharded shard_map runners).
 
     Each entry is one (shapes, statics) specialization, i.e. one compile.
     Sampled before/after a stream, the delta is the stream's recompile
     count — the number the bucket ladder is designed to bound.
     """
     total = 0
-    for get in _CACHED_ENTRY_POINTS:
-        fn = get()
-        try:
-            total += fn._cache_size()
-        except AttributeError:  # pragma: no cover — future jax rename
-            pass
+    seen: set[int] = set()
+    for spec in _REGISTRY.values():
+        for get in spec.cache_entry_points:
+            fn = get()
+            if id(fn) in seen:
+                continue
+            seen.add(id(fn))
+            try:
+                total += fn._cache_size()
+            except AttributeError:  # pragma: no cover — future jax rename
+                pass
     from repro.core import distributed
 
     return total + distributed.sharded_cache_size()

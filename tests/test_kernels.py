@@ -8,7 +8,8 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core.propagate import propagate
 from repro.kernels import ref
-from repro.kernels.bsr_spmv import bsr_spmv, dense_to_bsr
+from repro.kernels.bsr_spmv import (bsr_spmv, dense_to_bsr, ell_bsr_layout,
+                                    fill_bsr_blocks)
 from repro.kernels.cc_hook import cc_hook_step, connected_components_pallas
 from repro.kernels.ell_propagate import ell_propagate_step
 from repro.kernels.ops import propagate_pallas
@@ -124,3 +125,56 @@ def test_bsr_spmv_matches_dense(n, bs, density, dtype):
         a.astype(np.float32) @ x if dtype == jnp.float32
         else (a.astype(np.float32) @ x),
         rtol=tol * 10, atol=tol * 10)
+
+
+def _random_ell(rng, n, k):
+    """Random ELL adjacency with per-row-distinct neighbors (the shape
+    snapshot builds guarantee)."""
+    nbr = np.full((n, k), -1, np.int32)
+    wgt = np.zeros((n, k), np.float32)
+    for i in range(n):
+        deg = int(rng.integers(0, k + 1))
+        cols = rng.choice(n, size=deg, replace=False)
+        nbr[i, :deg] = cols
+        wgt[i, :deg] = rng.uniform(0.1, 1.0, deg)
+    return nbr, wgt
+
+
+@pytest.mark.parametrize("n,k,bs", [(64, 4, 8), (128, 7, 16), (96, 3, 8)])
+def test_ell_to_bsr_matches_dense_oracle(n, k, bs):
+    """The direct ELL→BSR build (host slot layout + device scatter fill)
+    describes the same matrix as the deprecated dense_to_bsr oracle:
+    identical SpMV output, identical per-row block-column sets."""
+    rng = np.random.default_rng(n + k + bs)
+    nbr, wgt = _random_ell(rng, n, k)
+    layout = ell_bsr_layout(nbr, bs)
+    assert layout.nnz == int((nbr >= 0).sum())
+    assert 0.0 < layout.fill <= 1.0
+    blocks, cols = fill_bsr_blocks(
+        jnp.asarray(nbr), jnp.asarray(wgt), jnp.asarray(layout.slot),
+        block_size=bs, num_slots=layout.num_slots + 2)  # padded budget ok
+    dense = np.zeros((n, n), np.float32)
+    rows = np.repeat(np.arange(n), k)
+    c = nbr.reshape(-1)
+    keep = c >= 0
+    dense[rows[keep], c[keep]] = wgt.reshape(-1)[keep]
+    blocks_o, cols_o = dense_to_bsr(jnp.asarray(dense), bs)
+    for i in range(n // bs):
+        got = {int(c) for c in np.asarray(cols[i]) if c >= 0}
+        want = {int(c) for c in np.asarray(cols_o[i]) if c >= 0}
+        assert got == want, i
+    x = rng.normal(0, 1, n).astype(np.float32)
+    got = bsr_spmv(blocks, cols, jnp.asarray(x))
+    want = bsr_spmv(blocks_o, cols_o, jnp.asarray(x))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(got), dense @ x,
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_ell_bsr_layout_validates_and_handles_empty():
+    with pytest.raises(ValueError, match="multiple of block_size"):
+        ell_bsr_layout(np.full((10, 2), -1, np.int32), 8)
+    lay = ell_bsr_layout(np.full((16, 2), -1, np.int32), 8)
+    assert lay.nnz == 0 and lay.num_slots == 1 and lay.fill == 0.0
+    assert (lay.slot == -1).all()

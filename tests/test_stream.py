@@ -221,6 +221,32 @@ def test_max_k_defaults_to_4x_knn_k():
     assert max(k for _, k in eng.bucket_keys) <= 16  # bucket_k(12)
 
 
+def test_max_k_warning_scoped_per_engine(caplog):
+    """The truncation-WARNING dedup is per engine: a fresh StreamEngine
+    warns again instead of inheriting another engine's (or test's)
+    module-level state; within one engine repeats still demote to
+    DEBUG."""
+    def run_engine():
+        g = DynamicGraph(emb_dim=8, k=3)
+        eng = StreamEngine(g, delta=1e-4, max_k=8)
+        _hub_stream(eng, np.random.default_rng(0), batches=3)
+        return eng
+
+    with caplog.at_level(logging.WARNING, logger="repro.core.snapshot"):
+        run_engine()
+        first = [r for r in caplog.records if "truncating" in r.getMessage()]
+        assert first, "first engine never warned"
+        caplog.clear()
+        run_engine()  # identical stream, FRESH engine: must warn again
+        second = [r for r in caplog.records
+                  if "truncating" in r.getMessage()]
+        assert second, "fresh engine inherited another engine's dedup state"
+        # ...but within one engine it warns once per (cap, natural-K
+        # rung) — never once per Δ_t — so both runs warn identically
+        assert len(second) == len(first)
+        assert len(second) <= 4  # ≤ one per step of the 4-step hub stream
+
+
 def test_max_k_no_log_when_inactive(caplog):
     """max_k above the natural degree neither truncates nor logs."""
     spec = StreamSpec(total_vertices=200, batch_size=100, seed=4,

@@ -76,30 +76,54 @@ def test_bucket_rows_pad_to_mesh_multiple():
         assert host.bucket_key[0] - plain.bucket_key[0] < 8
 
 
-def test_env_bsr_hint_degrades_to_ref_when_sharded(monkeypatch):
-    """REPRO_BACKEND=bsr is a fleet-wide hint — unusable on a mesh, it
-    falls back to ref instead of killing the stream; an explicit request
-    still reaches the error path."""
+def test_env_backend_hint_resolves_through_registry(monkeypatch):
+    """REPRO_BACKEND is a fleet-wide hint resolved through the backend
+    registry: bsr now HAS a sharded form, so the hint is honored on a
+    mesh too; a hint naming a backend whose spec can't run in the
+    current mode would degrade to the auto scan instead of failing."""
     from repro.kernels import ops
 
     monkeypatch.setenv("REPRO_BACKEND", "bsr")
-    assert ops.select_backend(None, sharded=True) == "ref"
-    assert ops.select_backend(None, num_rows=64) == "bsr"  # hint honored
+    assert ops.select_backend(None, sharded=True) == "bsr"
+    assert ops.select_backend(None, num_rows=64) == "bsr"
     assert ops.select_backend("bsr", sharded=True) == "bsr"  # explicit
+    assert "bsr" in ops.backend_candidates(None, sharded=True)
+    # the registry is the degrade decision-maker: a spec with no sharded
+    # form falls back to the auto scan when the hint arrives sharded
+    spec = ops.backend_spec("bsr")
+    import dataclasses
+    ops.register_backend(dataclasses.replace(spec, sharded=False))
+    try:
+        assert ops.select_backend(None, sharded=True) == "ref"
+        assert ops.select_backend(None, num_rows=64) == "bsr"  # unsharded
+    finally:
+        ops.register_backend(spec)
 
 
-def test_mesh_rejects_bsr_backend():
-    """bsr densifies on the host — there is no sharded form."""
+def test_mesh_accepts_bsr_backend():
+    """bsr is a first-class sharded backend: run_propagation(mesh=...)
+    solves through the shard_map BSR body given the per-edge slot map."""
     import jax.numpy as jnp
 
     from helpers import random_problem
+    from repro.core.propagate import propagate
     from repro.kernels import ops
+    from repro.kernels.bsr_spmv import ell_bsr_layout
 
     rng = np.random.default_rng(0)
     p = random_problem(rng, 64, 2)
-    with pytest.raises(ValueError, match="single-device"):
-        ops.run_propagation(p, jnp.full((64,), 0.5), jnp.ones(64, bool),
-                            backend="bsr", mesh=make_stream_mesh())
+    f0, fr = jnp.full((64,), 0.5), jnp.ones(64, bool)
+    layout = ell_bsr_layout(np.asarray(p.nbr), ops.BSR_BLOCK_SIZE)
+    res = ops.run_propagation(
+        p, f0, fr, backend="bsr", mesh=make_stream_mesh(1),
+        slot=layout.slot, num_slots=layout.num_slots)
+    want = propagate(p, f0, fr)
+    np.testing.assert_allclose(np.asarray(res.f), np.asarray(want.f),
+                               atol=2e-3)
+    # ...but the slot map is mandatory in sharded mode
+    with pytest.raises(ValueError, match="slot"):
+        ops.run_propagation(p, f0, fr, backend="bsr",
+                            mesh=make_stream_mesh(1))
 
 
 

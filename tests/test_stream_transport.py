@@ -152,6 +152,39 @@ def test_auto_single_device_mesh_takes_allgather():
     assert summary["halo_batches"] == 0
 
 
+def test_auto_measured_transport_probes_and_caches(monkeypatch):
+    """transport='auto:measured' (ctor or env): at rung entry one real
+    sweep per transport is timed and the winner cached — every rung ends
+    up with a concrete mode and, on multi-device meshes, a recorded
+    probe; labels match the heuristic-auto engine bit for bit."""
+    spec = StreamSpec(total_vertices=300, batch_size=60, seed=6, emb_dim=2,
+                      class_sep=6.0, noise=0.9)
+    batches = [b for b, _ in locality_stream(spec)]
+    g_m = DynamicGraph(emb_dim=2, k=5)
+    g_a = DynamicGraph(emb_dim=2, k=5)
+    mesh = make_stream_mesh()
+    eng_m = StreamEngine(g_m, delta=1e-4, mesh=mesh,
+                         transport="auto:measured")
+    eng_a = StreamEngine(g_a, delta=1e-4, mesh=mesh, transport="auto")
+    for b in batches:
+        eng_m.step(b)
+        eng_a.step(b)
+    summary = eng_m.transport_summary()
+    assert summary["requested"] == "auto:measured"
+    assert set(summary["rung_modes"].values()) <= {"allgather", "halo"}
+    assert len(summary["rung_modes"]) == len(eng_m.bucket_keys)
+    if mesh.devices.size > 1:
+        # at least one rung was actually probed (both transports timed)
+        assert any(set(p) == {"allgather", "halo"}
+                   for p in summary["measured_sweep_ms"].values()), summary
+    # measuring changes only which collective runs, never the labels
+    np.testing.assert_array_equal(g_m.f, g_a.f)
+    # the env var spells it the same way
+    monkeypatch.setenv("REPRO_STREAM_TRANSPORT", "auto:measured")
+    assert StreamEngine(DynamicGraph(emb_dim=2, k=5),
+                        mesh=mesh).transport == "auto:measured"
+
+
 def test_export_budget_headroom_and_cap():
     from repro.graph.partition import build_halo_plan, export_budget
 
