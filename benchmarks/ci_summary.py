@@ -88,15 +88,26 @@ def serve_rows(bench: dict) -> list[tuple[str, str]]:
         if not r:
             continue
         rows += [
-            (f"{arm}: query calls/sec", _get(r, "query_calls_per_sec")),
-            (f"{arm}: node lookups/sec", _get(r, "node_lookups_per_sec")),
-            (f"{arm}: query p95 ms", _get(r, "query_latency_ms", "p95")),
+            (f"{arm}: saturated node lookups/sec",
+             _get(r, "node_lookups_per_sec")),
+            (f"{arm}: open-loop achieved/offered q/s",
+             f"{_get(r, 'open_loop', 'achieved_qps')} / "
+             f"{_get(r, 'open_loop', 'offered_qps')}"),
+            (f"{arm}: open-loop p50/p99 ms",
+             f"{_get(r, 'open_loop', 'latency_ms', 'p50')} / "
+             f"{_get(r, 'open_loop', 'latency_ms', 'p99')}"),
+            (f"{arm}: read fusion (batches / tickets)",
+             f"{_get(r, 'read_batches')} / {_get(r, 'read_tickets')}"),
+            (f"{arm}: deadline admissions", _get(r, "deadline_admissions")),
             (f"{arm}: commit p50/p95 ms",
              f"{_get(r, 'mutation_commit_latency_ms', 'p50')} / "
              f"{_get(r, 'mutation_commit_latency_ms', 'p95')}"),
             (f"{arm}: queries while in-flight",
              f"{_get(r, 'queries_while_inflight')} / {_get(r, 'queries')}"),
         ]
+    if "sharded_over_single" in bench:
+        rows.append(("sharded/single saturated lookup ratio",
+                     _get(bench, "sharded_over_single")))
     return rows
 
 

@@ -90,6 +90,47 @@ STREAM_BACKENDS = ("ref", "ell_pallas", "bsr")
 TRANSPORTS = ("allgather", "halo")
 
 
+# ---------------------------------------------------------------------- #
+# Serving read placement (device-resident LabelView under a mesh)
+# ---------------------------------------------------------------------- #
+
+def read_replica_device(mesh: jax.sharding.Mesh) -> jax.Device | None:
+    """First visible device NOT in ``mesh`` — the serving read replica.
+
+    A mesh deployment that leaves a device out of the solver mesh gets
+    strictly better read behaviour than single-device serving: the
+    committed ``DeviceLabelView`` is published to the replica, so query
+    gathers never queue behind solve programs or snapshot staging on the
+    solver devices' execution streams (programs on one device
+    serialize).  Returns None when the mesh covers every device — then
+    ``view_sharding`` is the fallback placement.
+    """
+    in_mesh = {d.id for d in mesh.devices.flat}
+    for d in jax.devices():
+        if d.id not in in_mesh:
+            return d
+    return None
+
+
+def view_sharding(mesh: jax.sharding.Mesh) -> jax.sharding.NamedSharding:
+    """Row-sharded placement for the committed view's node axis, over all
+    mesh axes — for deployments whose ``f`` is too big for one device.
+    The jitted query gather then compiles to a sharded lookup (GSPMD
+    inserts the collectives); prefer ``read_replica_device`` when a
+    spare device exists — a replica gather needs no collective at all.
+    """
+    return jax.sharding.NamedSharding(mesh, P(mesh.axis_names))
+
+
+def read_placement(mesh: jax.sharding.Mesh | None):
+    """Default placement for published device views: the committed-view
+    device (None → jax's default) without a mesh; with one, the read
+    replica if a spare device exists, else row-sharded over the mesh."""
+    if mesh is None:
+        return None
+    return read_replica_device(mesh) or view_sharding(mesh)
+
+
 class ShardedProblem(NamedTuple):
     """PropagationProblem padded to a multiple of the device count."""
 

@@ -16,8 +16,10 @@ build on (docs/streaming.md).
 from __future__ import annotations
 
 import dataclasses
+import functools
 import logging
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -112,6 +114,125 @@ class LabelView:
                               (f >= cutoff).astype(np.int8))
         conf[live] = np.where(seeded, 1.0, np.maximum(f, 1.0 - f))
         return pred, conf
+
+
+# ---------------------------------------------------------------------- #
+# Device-resident read path
+# ---------------------------------------------------------------------- #
+
+# Query-axis bucket ladder: fused read batches pad their id vector up a
+# doubling ladder so serving compiles O(log Q_max) gather programs, the
+# same compile-once contract the solve side gets from ``bucket``.
+QUERY_FLOOR = 256
+
+
+def query_bucket(q: int, floor: int = QUERY_FLOOR) -> int:
+    """Round a query batch size up a doubling ladder (compile-once reads)."""
+    b = floor
+    while b < q:
+        b *= 2
+    return b
+
+
+@jax.jit
+def _device_query(f, labels, alive, ids, cutoff):
+    """Batched label lookup on device — the jitted twin of
+    ``LabelView.query``.
+
+    ``ids`` out of ``[0, len(f))`` (including the -1 padding the query
+    ladder appends) and dead rows answer UNLABELED at confidence 0; the
+    node-axis padding rows publish ``alive=False`` so one clamp handles
+    both.  ``cutoff`` is per-element so one fused gather can serve
+    tickets with different thresholds.
+    """
+    n = f.shape[0]
+    safe = jnp.clip(ids, 0, n - 1)
+    known = (ids >= 0) & (ids < n) & alive[safe]
+    lab = labels[safe]
+    fv = f[safe]
+    seeded = lab != UNLABELED
+    pred = jnp.where(
+        known,
+        jnp.where(seeded, lab, (fv >= cutoff).astype(jnp.int8)),
+        UNLABELED)
+    conf = jnp.where(
+        known,
+        jnp.where(seeded, jnp.float32(1.0), jnp.maximum(fv, 1.0 - fv)),
+        jnp.float32(0.0))
+    return pred.astype(jnp.int8), conf.astype(jnp.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceLabelView:
+    """Device twin of ``LabelView``: the committed snapshot staged once
+    per commit so query bursts run as one jitted gather instead of
+    per-call host indexing.
+
+    Arrays are padded up the ``bucket`` node ladder (f→0, labels→
+    UNLABELED, alive→False), so a growing graph recompiles the gather
+    O(log N) times, and placed by ``placement`` — a ``jax.Device`` (a
+    mesh serving deployment passes its read replica,
+    ``core.distributed.read_replica_device``) or a ``Sharding`` (row-
+    sharded ``f`` under a mesh when no spare device exists,
+    ``core.distributed.view_sharding``).  Immutable: a commit publishes
+    a NEW view (``publish_device_view``), so concurrent readers holding
+    this one never observe a torn state.
+    """
+
+    f: jax.Array  # (N_pad,) float32
+    labels: jax.Array  # (N_pad,) int8
+    alive: jax.Array  # (N_pad,) bool
+    num_nodes: int  # live prefix of the padded node axis
+    commit_id: int
+    host: LabelView  # the host twin this view was published from
+
+    def query(self, node_ids, cutoff=0.5) -> tuple[np.ndarray, np.ndarray]:
+        """(pred, conf) for arbitrary global ids — ``LabelView.query``
+        semantics, one fused device gather.  ``cutoff`` may be a scalar
+        or a per-id vector (fused multi-ticket reads)."""
+        ids = np.asarray(node_ids, np.int64).reshape(-1)
+        q = len(ids)
+        qp = query_bucket(max(q, 1))
+        ids_pad = np.full(qp, -1, np.int32)
+        # ids beyond int32 can't index a device view; they are unknown by
+        # construction (num_nodes < 2**31), so map them to the -1 lane
+        in32 = (ids >= np.iinfo(np.int32).min) & (ids <= np.iinfo(np.int32).max)
+        ids_pad[:q][in32] = ids[in32].astype(np.int32)
+        cut_pad = np.zeros(qp, np.float32)
+        cut_pad[:q] = np.broadcast_to(
+            np.asarray(cutoff, np.float32).reshape(-1), (q,)) if q else 0.0
+        pred, conf = _device_query(self.f, self.labels, self.alive,
+                                   ids_pad, cut_pad)
+        return np.asarray(pred[:q]), np.asarray(conf[:q])
+
+
+def publish_device_view(view: LabelView, placement=None) -> DeviceLabelView:
+    """Stage a committed ``LabelView`` onto the device — called at drain
+    by ``StreamEngine`` (commit handoff: the view's own frozen arrays
+    feed ``device_put`` directly, no extra host copies; the transfers
+    dispatch async so publication overlaps the next batch's host work).
+
+    ``placement`` is a ``jax.Device``, a ``Sharding``, or None (default
+    device).  Sharded placements pad the node axis to a multiple of the
+    shard count on top of the bucket ladder.
+    """
+    n = view.num_nodes
+    n_pad = bucket(max(n, 1))
+    mult = getattr(getattr(placement, "mesh", None), "devices", None)
+    if mult is not None:  # NamedSharding: rows must split evenly
+        d = int(mult.size)
+        n_pad = -d * (-n_pad // d)
+    f = np.zeros(n_pad, np.float32)
+    lab = np.full(n_pad, UNLABELED, np.int8)
+    alive = np.zeros(n_pad, bool)
+    f[:n] = view.f
+    lab[:n] = view.labels
+    alive[:n] = view.alive
+    put = (jax.device_put if placement is None
+           else functools.partial(jax.device_put, device=placement))
+    return DeviceLabelView(
+        f=put(f), labels=put(lab), alive=put(alive),
+        num_nodes=n, commit_id=view.commit_id, host=view)
 
 
 @dataclasses.dataclass

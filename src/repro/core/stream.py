@@ -78,8 +78,9 @@ from repro.core.components import compact_labels, component_order
 from repro.core.dynlp import gprime_components
 from repro.core.init_labels import supernode_init
 from repro.core.propagate import PropagationProblem
-from repro.core.snapshot import (HostSnapshot, LabelView, apply_halo_layout,
-                                 bucket_k, build_host_problem,
+from repro.core.snapshot import (DeviceLabelView, HostSnapshot, LabelView,
+                                 apply_halo_layout, bucket_k,
+                                 build_host_problem, publish_device_view,
                                  reorder_host_snapshot)
 from repro.graph import partition
 from repro.graph.dynamic import UNLABELED, BatchUpdate, DynamicGraph
@@ -173,6 +174,7 @@ class StreamEngine:
         mesh: jax.sharding.Mesh | None = None,
         max_k: int | None | str = "auto",
         transport: str | None = None,
+        read_placement: object = "auto",
     ):
         self.graph = graph
         self.delta = delta
@@ -275,6 +277,15 @@ class StreamEngine:
         # every drain, never mutated in place — readers hold a consistent
         # view while the next batch's solve is in flight.
         self._view = LabelView.from_graph(graph, commit_id=0)
+        # Device twin of the committed view: published lazily on the
+        # first ``device_view()`` call, then eagerly at every drain (the
+        # H2D dispatches async, overlapping the next batch's host work).
+        # ``read_placement="auto"`` resolves to the mesh's read replica /
+        # row sharding (core.distributed.read_placement) or the default
+        # device; pass an explicit jax.Device or Sharding to override.
+        self._read_placement = (distributed.read_placement(mesh)
+                                if read_placement == "auto" else read_placement)
+        self._device_view: DeviceLabelView | None = None
 
     # ------------------------------------------------------------------ #
     def _plan_for(self, key: tuple[int, int], backend: str,
@@ -744,6 +755,13 @@ class StreamEngine:
         self.commits += 1
         self._view = LabelView(f=p.view_f, labels=p.view_labels,
                                alive=p.view_alive, commit_id=self.commits)
+        # Commit handoff without host copies: the view's own frozen
+        # arrays feed device_put directly.  Republish eagerly only once
+        # a device reader exists — engines that never serve device reads
+        # pay nothing per commit.
+        if self._device_view is not None:
+            self._device_view = publish_device_view(self._view,
+                                                    self._read_placement)
         return StreamStats(
             iterations=iterations,
             converged=converged,
@@ -784,6 +802,22 @@ class StreamEngine:
         time, so readers never observe a torn half-applied batch.  Before
         any commit it reflects the graph the engine was built around."""
         return self._view
+
+    def device_view(self) -> DeviceLabelView:
+        """The committed snapshot ON DEVICE — query bursts run as one
+        jitted gather (``DeviceLabelView.query``) instead of per-call
+        host indexing.  Published lazily on first call, then refreshed
+        eagerly at every drain; placement (replica device / sharded
+        rows) was fixed at construction via ``read_placement``.  Safe to
+        call concurrently with a drain: views are immutable and both
+        ``_view`` and the cache swap atomically, so a racing reader gets
+        either the previous or the new commit, never a torn mix — the
+        serving read path relies on this to stay off the write lock."""
+        dv = self._device_view
+        if dv is None or dv.commit_id != self._view.commit_id:
+            dv = publish_device_view(self._view, self._read_placement)
+            self._device_view = dv
+        return dv
 
     # ------------------------------------------------------------------ #
     def step(self, batch: BatchUpdate) -> StreamStats:

@@ -1,21 +1,187 @@
-"""Batched serving engine: slot-based continuous batching over decode_step.
+"""Serving engines: the LP service driver + the LM continuous batcher.
 
-A fixed pool of B slots; each slot holds one sequence's cache region.  New
-requests prefill into their slot, then the whole pool decodes one token per
-step — the standard TPU serving shape (decode_32k's ``serve_step`` is
-exactly one such pooled step).  The batch axis of every cache leaf is
-probed once at init by differencing ``cache_shape(b)`` vs
-``cache_shape(b+1)``, so the engine works unchanged for KV caches
-(transformers), recurrent states (xLSTM/Mamba2) and enc-dec caches.
+Two independent serving shapes live here:
+
+  * ``ServiceDriver`` / ``ReadBatcher`` / ``ReadTicket`` — the async
+    machinery behind ``serving.lp_service.LPService``.  A background
+    thread clocks the service (admission-window deadlines fire with zero
+    caller traffic, finished solves commit off every caller's critical
+    path) and fuses the read tickets of concurrent callers into ONE
+    jitted device gather against the committed ``DeviceLabelView``
+    (docs/serving.md §The background driver).
+  * ``ServeEngine`` — slot-based continuous batching over an LM
+    ``decode_step``: a fixed pool of B slots, prefill into a free slot,
+    then the whole pool decodes one token per step.  The batch axis of
+    every cache leaf is probed once at init by differencing
+    ``cache_shape(b)`` vs ``cache_shape(b+1)``, so it works unchanged
+    for KV caches, recurrent states and enc-dec caches.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import threading
+import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+
+# ---------------------------------------------------------------------- #
+# LP serving: read tickets, the fusing batcher, and the service driver
+# ---------------------------------------------------------------------- #
+
+class ReadTicket:
+    """One caller's pending read: ids in, (QueryResult | error) out.
+
+    Handed out by ``LPService.query_async``; the driver fulfils batches
+    of these with one fused device gather.  ``wait`` blocks the caller;
+    ``completed_at`` stamps fulfilment time so open-loop benchmarks can
+    measure latency from the *scheduled* arrival, not the wait call
+    (coordinated-omission-free, see benchmarks/serve_lp.py).
+    """
+
+    __slots__ = ("ids", "cutoff", "enqueued_at", "completed_at",
+                 "result", "error", "_done")
+
+    def __init__(self, ids: np.ndarray, cutoff: float):
+        self.ids = ids
+        self.cutoff = cutoff
+        self.enqueued_at = time.perf_counter()
+        self.completed_at: float | None = None
+        self.result = None
+        self.error: BaseException | None = None
+        self._done = threading.Event()
+
+    def _fulfil(self, result=None, error=None):
+        self.result = result
+        self.error = error
+        self.completed_at = time.perf_counter()
+        self._done.set()
+
+    @property
+    def done(self) -> bool:
+        return self._done.is_set()
+
+    def wait(self, timeout: float | None = None):
+        """Block until fulfilled; returns the ``QueryResult`` (raises the
+        driver-side error, or TimeoutError on timeout)."""
+        if not self._done.wait(timeout):
+            raise TimeoutError("read ticket not fulfilled in time")
+        if self.error is not None:
+            raise self.error
+        return self.result
+
+
+class ReadBatcher:
+    """Thread-safe queue of pending ``ReadTicket``s.
+
+    Callers ``submit``; the driver ``take_all``s and serves the whole
+    batch from ONE committed view in one fused gather — which is also
+    the coherence argument: every ticket in a batch is answered from
+    the same immutable snapshot, so a commit landing mid-burst flips
+    readers atomically between views, never within one.
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._tickets: list[ReadTicket] = []
+        self._wake = threading.Event()
+        self._closed = False
+
+    def submit(self, ids: np.ndarray, cutoff: float) -> ReadTicket:
+        t = ReadTicket(ids, cutoff)
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("read batcher is closed (driver stopped)")
+            self._tickets.append(t)
+        self._wake.set()
+        return t
+
+    def take_all(self) -> list[ReadTicket]:
+        with self._lock:
+            tickets, self._tickets = self._tickets, []
+        return tickets
+
+    @property
+    def pending(self) -> int:
+        with self._lock:
+            return len(self._tickets)
+
+    def close(self) -> list[ReadTicket]:
+        """Refuse new submissions; returns whatever was still queued so
+        the driver can drain it."""
+        with self._lock:
+            self._closed = True
+            tickets, self._tickets = self._tickets, []
+        return tickets
+
+    def wait_for_work(self, timeout: float):
+        self._wake.wait(timeout)
+        self._wake.clear()
+
+
+class ServiceDriver(threading.Thread):
+    """Background clock for an ``LPService`` (docs/serving.md).
+
+    One loop iteration: fulfil every queued read ticket with a single
+    fused gather, then ``pump`` the service under its lock — committing
+    a finished solve and force-admitting the open window once its
+    ``window_ms`` deadline passes, with NO caller traffic required.
+    Between iterations the thread sleeps on the batcher's wake event,
+    capped by the time to the next admission deadline (so deadlines
+    fire promptly) and ``poll_ms`` (so finished solves commit promptly).
+
+    ``stop`` drains: in-flight tickets are fulfilled before the thread
+    exits, and the batcher is closed so late submitters get a clean
+    error instead of hanging.
+    """
+
+    def __init__(self, service, batcher: ReadBatcher, poll_ms: float = 2.0):
+        super().__init__(name="lp-service-driver", daemon=True)
+        self._svc = service
+        self._batcher = batcher
+        self._poll_s = poll_ms / 1e3
+        self._halt = threading.Event()
+        self.read_batches = 0  # fused gathers executed
+        self.read_tickets = 0  # tickets fulfilled by those gathers
+        self.deadline_admissions = 0  # windows admitted by the clock
+
+    def run(self):
+        while True:
+            tickets = self._batcher.take_all()
+            if tickets:
+                self._serve(tickets)
+            admitted = self._svc._driver_pump()
+            self.deadline_admissions += admitted
+            if self._halt.is_set():
+                if self._batcher.pending:
+                    continue  # drain stragglers before exiting
+                break
+            self._batcher.wait_for_work(
+                min(self._poll_s, self._svc._time_to_deadline()))
+
+    def _serve(self, tickets: list[ReadTicket]):
+        try:
+            results = self._svc._serve_reads(tickets)
+        except BaseException as e:  # noqa: BLE001 — tickets must not hang
+            for t in tickets:
+                t._fulfil(error=e)
+            return
+        self.read_batches += 1
+        self.read_tickets += len(tickets)
+        for t, r in zip(tickets, results):
+            t._fulfil(result=r)
+
+    def stop(self, timeout: float = 30.0):
+        """Signal, drain in-flight tickets, join; then fulfil anything
+        that raced past the close with an error so no caller hangs."""
+        self._halt.set()
+        self._batcher._wake.set()
+        self.join(timeout)
+        for t in self._batcher.close():
+            t._fulfil(error=RuntimeError("service driver stopped"))
 
 
 @dataclasses.dataclass

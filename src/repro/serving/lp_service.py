@@ -22,6 +22,17 @@ after ``sync()`` returns, queries see every prior mutation
 commit latency feeds the service stats (``benchmarks/serve_lp.py``
 reports the percentiles).
 
+Async serving: ``start()`` (or ``with service:``) launches a background
+``serving.engine.ServiceDriver`` thread.  The driver clocks admission —
+window deadlines fire with ZERO caller traffic — commits finished
+solves off every caller's critical path, and fuses concurrent readers'
+tickets into one jitted device gather against the engine's committed
+``DeviceLabelView`` (``query_async`` returns the ticket; ``query``
+submits one and waits).  Reads stay never-torn: each fused batch is
+answered from a single immutable snapshot.  Without the driver the
+service is caller-clocked exactly as before, and ``query`` serves a
+single-shot device gather.  See docs/serving.md.
+
 Backpressure: when queued + in-flight operations would exceed
 ``max_pending_ops``, ``mutate`` either blocks draining the backlog
 (default) or raises ``Backpressure`` (``reject_on_overload=True``) so
@@ -40,6 +51,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import threading
 import time
 
 import numpy as np
@@ -47,6 +59,7 @@ import numpy as np
 from repro.core.snapshot import LabelView
 from repro.core.stream import StreamEngine, StreamStats
 from repro.graph.dynamic import UNLABELED, BatchUpdate
+from repro.serving.engine import ReadBatcher, ReadTicket, ServiceDriver
 
 
 class Backpressure(RuntimeError):
@@ -90,6 +103,10 @@ class ServiceStats:
     queries: int
     query_nodes: int
     queries_while_inflight: int  # reads served while a solve was pending
+    driver_running: bool  # background driver alive right now
+    read_batches: int  # fused device gathers the driver executed
+    read_tickets: int  # read tickets those gathers fulfilled
+    deadline_admissions: int  # windows the driver's clock force-admitted
     mutations: int
     ops_accepted: int
     rejected: int  # mutations refused by backpressure
@@ -114,9 +131,13 @@ class _QueuedMutation:
 class LPService:
     """Query/mutation front-end over a ``StreamEngine`` (see module doc).
 
-    The service is clocked by its callers: ``mutate`` and ``pump`` check
-    the admission deadline and harvest finished solves; ``query`` is a
-    pure read and touches neither the device nor the window.
+    Caller-clocked by default: ``mutate`` and ``pump`` check the
+    admission deadline and harvest finished solves; ``query`` is a pure
+    read (one jitted gather against the committed device view).  With
+    the background driver running (``start()`` / ``with service:``),
+    the clock moves off the callers: deadlines fire on their own,
+    commits land as soon as the device finishes, and concurrent reads
+    fuse into one device gather.
     """
 
     def __init__(
@@ -128,6 +149,7 @@ class LPService:
         max_pending_ops: int = 1024,
         reject_on_overload: bool = False,
         cutoff: float = 0.5,
+        driver_poll_ms: float = 2.0,
     ):
         if window_ops < 1:
             raise ValueError("window_ops must be >= 1")
@@ -139,6 +161,7 @@ class LPService:
         self.max_pending_ops = max_pending_ops
         self.reject_on_overload = reject_on_overload
         self.cutoff = cutoff
+        self.driver_poll_ms = driver_poll_ms
 
         self._window: list[_QueuedMutation] = []
         self._window_ops = 0
@@ -150,6 +173,20 @@ class LPService:
         # mutation history (or re-percentile it) without bound.
         self._commit_latency_ms: collections.deque[float] = \
             collections.deque(maxlen=4096)
+        # One reentrant lock guards the engine's WRITE side (window
+        # state, submit/poll/drain) — callers and the driver thread both
+        # clock the service through it.  Reads deliberately take only
+        # ``_stats_lock``: committed views are immutable and swapped
+        # atomically at drain, so the read path never queues behind a
+        # mutation's host staging (which holds ``_lock`` for the whole
+        # ``submit``).
+        self._lock = threading.RLock()
+        self._stats_lock = threading.Lock()
+        self._driver: ServiceDriver | None = None
+        self._batcher: ReadBatcher | None = None
+        # (read_batches, read_tickets, deadline_admissions) accumulated
+        # over stopped drivers — stats survive stop/start cycles
+        self._drained_reads = (0, 0, 0)
 
         self.queries = 0
         self.query_nodes = 0
@@ -161,21 +198,118 @@ class LPService:
         self.batches_committed = 0
 
     # ------------------------------------------------------------------ #
+    # driver lifecycle
+    # ------------------------------------------------------------------ #
+    def start(self) -> "LPService":
+        """Launch the background driver (idempotent).  From here on,
+        admission deadlines fire and solves commit without caller
+        traffic, and reads batch across concurrent callers."""
+        with self._lock:
+            if self._driver is None:
+                self._batcher = ReadBatcher()
+                self._driver = ServiceDriver(self, self._batcher,
+                                             poll_ms=self.driver_poll_ms)
+                self._driver.start()
+        return self
+
+    def stop(self):
+        """Stop the driver: in-flight read tickets are drained (every
+        ticket is fulfilled), then the service is caller-clocked again.
+        Queued mutations stay queued — ``close``/``sync`` flushes them."""
+        with self._lock:
+            driver, self._driver = self._driver, None
+            self._batcher = None
+        if driver is not None:
+            driver.stop()
+            rb, rt, da = self._drained_reads
+            self._drained_reads = (rb + driver.read_batches,
+                                   rt + driver.read_tickets,
+                                   da + driver.deadline_admissions)
+
+    def close(self):
+        """Stop the driver and flush: every queued mutation is admitted
+        and every admitted batch committed (read-your-writes for any
+        subsequent direct reads)."""
+        self.stop()
+        self.sync()
+
+    def __enter__(self) -> "LPService":
+        return self.start()
+
+    def __exit__(self, *exc):
+        self.close()
+
+    @property
+    def driver_running(self) -> bool:
+        d = self._driver
+        return d is not None and d.is_alive()
+
+    # ------------------------------------------------------------------ #
     # read path
     # ------------------------------------------------------------------ #
     def query(self, node_ids, cutoff: float | None = None) -> QueryResult:
         """Labels + confidences for ``node_ids`` from the last committed
-        snapshot.  Never blocks; ids from a batch that has not committed
-        yet answer ``UNLABELED`` at confidence 0."""
-        view = self.engine.committed_view()
+        snapshot (one jitted device gather; ids from a batch that has
+        not committed yet answer ``UNLABELED`` at confidence 0).  With
+        the driver running this enqueues a ticket and waits — concurrent
+        callers' bursts fuse into one gather; reads never block on an
+        in-flight solve either way."""
+        ticket = self.query_async(node_ids, cutoff)
+        if ticket is not None:
+            return ticket.wait()
         ids = np.asarray(node_ids, np.int64).reshape(-1)
+        # lock-free view fetch: ``_view``/``_device_view`` swap atomically
+        # at drain, so reads never wait on a mutation's staging
+        view = self.engine.device_view()
+        inflight = self.engine.in_flight
         pred, conf = view.query(ids, self.cutoff if cutoff is None else cutoff)
-        self.queries += 1
-        self.query_nodes += len(ids)
-        if self.engine.in_flight:
-            self.queries_while_inflight += 1
+        with self._stats_lock:
+            self.queries += 1
+            self.query_nodes += len(ids)
+            self.queries_while_inflight += inflight
         return QueryResult(ids=ids, pred=pred, confidence=conf,
                            commit_id=view.commit_id)
+
+    def query_async(self, node_ids, cutoff: float | None = None
+                    ) -> ReadTicket | None:
+        """Enqueue a read for the driver's next fused gather; returns the
+        ticket (``.wait()`` for the ``QueryResult``), or None when the
+        driver is not running — use ``query`` for the synchronous path."""
+        batcher = self._batcher
+        if batcher is None:
+            return None
+        ids = np.asarray(node_ids, np.int64).reshape(-1)
+        try:
+            return batcher.submit(
+                ids, self.cutoff if cutoff is None else cutoff)
+        except RuntimeError:
+            return None  # raced a stop(): caller falls back to sync path
+
+    def _serve_reads(self, tickets) -> list[QueryResult]:
+        """Driver-side: answer a batch of tickets with ONE fused gather
+        from ONE committed view — the never-torn guarantee: a commit
+        landing mid-burst flips whole batches between immutable views,
+        never individual lanes."""
+        view = self.engine.device_view()
+        inflight = self.engine.in_flight
+        ids_cat = np.concatenate([t.ids for t in tickets]) \
+            if tickets else np.zeros(0, np.int64)
+        cut_cat = np.concatenate(
+            [np.full(len(t.ids), t.cutoff, np.float32) for t in tickets]) \
+            if tickets else np.zeros(0, np.float32)
+        pred, conf = view.query(ids_cat, cut_cat)
+        out, off = [], 0
+        for t in tickets:
+            q = len(t.ids)
+            out.append(QueryResult(
+                ids=t.ids, pred=pred[off:off + q],
+                confidence=conf[off:off + q], commit_id=view.commit_id))
+            off += q
+        with self._stats_lock:
+            self.queries += len(tickets)
+            self.query_nodes += len(ids_cat)
+            self.queries_while_inflight += inflight * len(tickets)
+        return out
 
     def committed_view(self) -> LabelView:
         return self.engine.committed_view()
@@ -210,60 +344,96 @@ class LPService:
         if ops == 0:
             raise ValueError("empty mutation: no inserts and no deletes")
 
-        self.pump()  # harvest a finished solve / deadline-flush first
-        if self._pending_ops() + ops > self.max_pending_ops:
-            if self.reject_on_overload:
-                self.rejected += 1
-                raise Backpressure(
-                    f"mutation of {ops} ops over bound: "
-                    f"{self._pending_ops()} pending, "
-                    f"max_pending_ops={self.max_pending_ops}")
-            self._relieve(ops)
+        with self._lock:
+            self.pump()  # harvest a finished solve / deadline-flush first
+            if self._pending_ops() + ops > self.max_pending_ops:
+                if self.reject_on_overload:
+                    self.rejected += 1
+                    raise Backpressure(
+                        f"mutation of {ops} ops over bound: "
+                        f"{self._pending_ops()} pending, "
+                        f"max_pending_ops={self.max_pending_ops}")
+                self._relieve(ops)
 
-        ticket = MutationTicket(ticket=self._next_ticket, ops=ops,
-                                enqueued_at=time.perf_counter())
-        self._next_ticket += 1
-        self._window.append(_QueuedMutation(ticket, emb, labels, dels))
-        self._window_ops += ops
-        if self._window_t0 is None:
-            self._window_t0 = time.perf_counter()
-        self.mutations += 1
-        self.ops_accepted += ops
-        if self._window_ops >= self.window_ops:
-            self._admit()
-        return ticket
+            ticket = MutationTicket(ticket=self._next_ticket, ops=ops,
+                                    enqueued_at=time.perf_counter())
+            self._next_ticket += 1
+            self._window.append(_QueuedMutation(ticket, emb, labels, dels))
+            self._window_ops += ops
+            if self._window_t0 is None:
+                self._window_t0 = time.perf_counter()
+            self.mutations += 1
+            self.ops_accepted += ops
+            if self._window_ops >= self.window_ops:
+                self._admit()
+            return ticket
 
     def pump(self) -> StreamStats | None:
         """Advance the service without blocking: commit the in-flight
         batch if its solve finished, then admit the open window if it hit
-        the size or deadline bound.  Returns commit stats if one landed."""
-        st = self.engine.poll()
-        if st is not None:
-            self._resolve(st)
-        if self._window and (
-                self._window_ops >= self.window_ops
-                or (time.perf_counter() - self._window_t0) * 1e3
-                >= self.window_ms):
-            self._admit()
-        return st
+        the size or deadline bound.  Returns commit stats if one landed.
+        With the driver running this happens continuously on its own."""
+        with self._lock:
+            st = self.engine.poll()
+            if st is not None:
+                self._resolve(st)
+            if self._window and (
+                    self._window_ops >= self.window_ops
+                    or (time.perf_counter() - self._window_t0) * 1e3
+                    >= self.window_ms):
+                self._admit()
+            return st
+
+    def _driver_pump(self) -> int:
+        """One driver clock tick; returns 1 iff the deadline (not size)
+        force-admitted the window — the driver's admission counter.
+
+        Non-blocking on the write lock: a mutation mid-staging holds it
+        for tens of milliseconds, and stalling the driver there would
+        queue every fused read behind the write path — the exact
+        coordinated delay the async model exists to remove.  A skipped
+        tick costs nothing: the mutating caller's own ``pump`` runs on
+        lock release, and the driver retries within ``poll_ms``."""
+        if not self._lock.acquire(blocking=False):
+            return 0
+        try:
+            was_open = self._window_t0 is not None
+            under = self._window_ops < self.window_ops
+            self.pump()
+            return int(was_open and under and self._window_t0 is None)
+        finally:
+            self._lock.release()
+
+    def _time_to_deadline(self) -> float:
+        """Seconds until the open window's ``window_ms`` deadline (driver
+        sleep bound); 1s when no window is open.  Lock-free: ``_window_t0``
+        is read once (atomic), and a stale value only mistimes one tick."""
+        t0 = self._window_t0
+        if t0 is None:
+            return 1.0
+        return max(0.0, t0 + self.window_ms / 1e3 - time.perf_counter())
 
     def flush(self) -> BatchUpdate | None:
         """Force-admit the open window regardless of size/deadline;
         returns the coalesced ``BatchUpdate`` (None if nothing queued)."""
-        st = self.engine.poll()
-        if st is not None:
-            self._resolve(st)
-        return self._admit()
+        with self._lock:
+            st = self.engine.poll()
+            if st is not None:
+                self._resolve(st)
+            return self._admit()
 
     def sync(self) -> StreamStats | None:
         """Flush + block until every admitted batch has committed.  After
         ``sync()`` returns, queries observe all prior mutations
-        (read-your-writes).  Returns the last commit's stats."""
-        self._admit()
-        st = self.engine.drain()
-        if st is not None:
-            self._resolve(st)
-        return st
+        (read-your-writes) — including reads fused by the driver, which
+        are answered from the view this drain publishes.  Returns the
+        last commit's stats."""
+        with self._lock:
+            self._admit()
+            st = self.engine.drain()
+            if st is not None:
+                self._resolve(st)
+            return st
 
     # ------------------------------------------------------------------ #
     def _pending_ops(self) -> int:
@@ -332,10 +502,20 @@ class LPService:
                 "max": round(float(arr.max()), 3),
                 "count": len(lat),
             }
+        d = self._driver
+        rb, rt, da = self._drained_reads
+        if d is not None:
+            rb += d.read_batches
+            rt += d.read_tickets
+            da += d.deadline_admissions
         return ServiceStats(
             queries=self.queries,
             query_nodes=self.query_nodes,
             queries_while_inflight=self.queries_while_inflight,
+            driver_running=self.driver_running,
+            read_batches=rb,
+            read_tickets=rt,
+            deadline_admissions=da,
             mutations=self.mutations,
             ops_accepted=self.ops_accepted,
             rejected=self.rejected,

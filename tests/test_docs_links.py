@@ -1,0 +1,40 @@
+"""The docs front door stays navigable: every relative link and
+``path:line`` code reference in README.md + docs/*.md resolves
+(tools/check_docs_links.py — CI runs the same check as a tier-1 step)."""
+
+import pathlib
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(REPO / "tools"))
+
+import check_docs_links  # noqa: E402
+
+
+def test_readme_and_docs_exist():
+    assert (REPO / "README.md").exists()
+    for doc in ("serving.md", "streaming.md", "benchmarks.md"):
+        assert (REPO / "docs" / doc).exists(), f"docs/{doc} missing"
+
+
+def test_all_docs_references_resolve():
+    errors = []
+    for md in check_docs_links.md_files(REPO):
+        errors += check_docs_links.check_file(md, REPO)
+    assert not errors, "\n".join(errors)
+
+
+def test_checker_catches_broken_references(tmp_path):
+    (tmp_path / "docs").mkdir()
+    (tmp_path / "README.md").write_text(
+        "[gone](docs/missing.md) and `src/nope/mod.py` and "
+        "[ok](docs/real.md) and `docs/real.md:99` and "
+        "`docs/real.md::NoSuchSymbol`\n")
+    (tmp_path / "docs" / "real.md").write_text("hi\n")
+    errors = check_docs_links.check_file(tmp_path / "README.md", tmp_path)
+    msgs = "\n".join(errors)
+    assert "docs/missing.md" in msgs
+    assert "src/nope/mod.py" in msgs
+    assert "docs/real.md:99" in msgs  # line past end of file
+    assert "NoSuchSymbol" in msgs  # ::symbol absent from the file
+    assert "[ok](docs/real.md)" not in msgs

@@ -1,0 +1,105 @@
+"""Docs link checker: every relative markdown link and every
+``path:line`` code reference in README.md + docs/*.md must resolve.
+
+Checked, per markdown file:
+
+* relative links ``[text](target)`` — ``target`` must exist on disk,
+  resolved against the file's own directory (external ``http(s)://`` /
+  ``mailto:`` targets and pure ``#anchor`` self-links are skipped; a
+  ``path#anchor`` link is checked for the path part);
+* inline-code file references — a backtick span that looks like a repo
+  path (``benchmarks/serve_lp.py``, ``docs/serving.md``, optionally
+  ``::qualifier`` or ``:line``) must exist relative to the repo root
+  or to ``src/repro/`` (the docs' module-path shorthand:
+  ``core/stream.py`` means ``src/repro/core/stream.py``); a ``:line``
+  suffix must not exceed the file's length, and a ``::symbol``
+  qualifier must occur in the file.
+
+Exit 0 when everything resolves, 1 with one line per broken reference
+otherwise.  CI runs this in the tier-1 workflow (docs-link-check step);
+``tests/test_docs_links.py`` runs the same check under pytest so the
+contract also holds locally.
+
+Usage: ``python tools/check_docs_links.py [repo_root]``
+"""
+
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+CODE_SPAN = re.compile(r"`([^`\n]+)`")
+# a code span counts as a file reference when it looks like a relative
+# repo path: directory components, a filename with a known source-ish
+# extension, optionally ::qualified.name or :line
+PATHLIKE = re.compile(
+    r"^(?P<path>[\w./-]+\.(?:py|md|json|yml|yaml|toml|txt))"
+    r"(?:::?(?P<rest>[\w.:\[\]-]+))?$")
+EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def md_files(root: pathlib.Path) -> list[pathlib.Path]:
+    files = [root / "README.md"]
+    files += sorted((root / "docs").glob("*.md"))
+    return [f for f in files if f.exists()]
+
+
+def check_file(md: pathlib.Path, root: pathlib.Path) -> list[str]:
+    errors = []
+    text = md.read_text()
+    rel = md.relative_to(root)
+    for m in MD_LINK.finditer(text):
+        target = m.group(1)
+        if target.startswith(EXTERNAL) or target.startswith("#"):
+            continue
+        path = target.split("#", 1)[0]
+        if not path:
+            continue
+        if not (md.parent / path).exists():
+            errors.append(f"{rel}: broken link ({target})")
+    for m in CODE_SPAN.finditer(text):
+        span = m.group(1)
+        pm = PATHLIKE.match(span)
+        if not pm or "/" not in pm.group("path"):
+            continue  # not a repo path — an expression or a bare name
+        path = root / pm.group("path")
+        if not path.exists():  # docs shorthand: paths relative to the pkg
+            path = root / "src" / "repro" / pm.group("path")
+        if not path.exists():
+            errors.append(f"{rel}: code reference to missing file "
+                          f"(`{span}`)")
+            continue
+        rest = pm.group("rest")
+        if not rest:
+            continue
+        if rest.isdigit():  # path:line — line must exist
+            n_lines = len(path.read_text().splitlines())
+            if int(rest) > n_lines:
+                errors.append(f"{rel}: `{span}` points past end of file "
+                              f"({n_lines} lines)")
+        elif "::" in span:  # path::symbol — symbol must occur in file
+            symbol = rest.split(".")[0].split("::")[0]
+            if symbol not in path.read_text():
+                errors.append(f"{rel}: `{span}` — symbol '{symbol}' "
+                              f"not found in {pm.group('path')}")
+    return errors
+
+
+def main(root: str = ".") -> int:
+    rootp = pathlib.Path(root).resolve()
+    errors = []
+    checked = 0
+    for md in md_files(rootp):
+        errors += check_file(md, rootp)
+        checked += 1
+    for e in errors:
+        print(e)
+    print(f"checked {checked} markdown files: "
+          f"{'OK' if not errors else f'{len(errors)} broken references'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(*sys.argv[1:2]))
