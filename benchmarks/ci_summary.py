@@ -1,5 +1,5 @@
-"""Render BENCH_stream.json / BENCH_serve.json headline numbers as a
-GitHub job-summary markdown table.
+"""Render BENCH_stream.json / BENCH_serve.json / BENCH_ingest.json
+headline numbers as a GitHub job-summary markdown table.
 
 The bench-smoke CI job appends this script's stdout to
 ``$GITHUB_STEP_SUMMARY`` so perf regressions are visible on the PR
@@ -7,7 +7,8 @@ checks page without downloading artifacts.  Missing files or keys render
 as ``—`` rather than failing: the summary is reporting, the gating lives
 in the benchmarks' ``--check``.
 
-Usage: ``python benchmarks/ci_summary.py [BENCH_stream.json] [BENCH_serve.json]``
+Usage: ``python benchmarks/ci_summary.py [BENCH_stream.json]
+[BENCH_serve.json] [BENCH_ingest.json]``
 """
 
 from __future__ import annotations
@@ -111,11 +112,41 @@ def serve_rows(bench: dict) -> list[tuple[str, str]]:
     return rows
 
 
+def ingest_rows(bench: dict) -> list[tuple[str, str]]:
+    rows = []
+    for arm in ("host", "device"):
+        r = bench.get(arm)
+        if not r:
+            continue
+        rows += [
+            (f"{arm}: steady mutation ops/sec", _get(r, "ops_per_sec")),
+            (f"{arm}: recompiles (≤ ladder)",
+             f"{_get(r, 'recompiles')} / {_get(r, 'ladder_bound')}"),
+        ]
+    if bench:
+        rows += [
+            ("device vs recorded host-staging reference",
+             f"{_get(bench, 'device_over_reference')}x "
+             f"(floor {_get(bench, 'floors', 'device_over_reference')}x of "
+             f"{_get(bench, 'floors', 'host_staging_ops_per_sec')} ops/s)"),
+            ("device vs live host arm",
+             f"{_get(bench, 'device_over_host_live')}x"),
+            ("kernel-vs-oracle agreement (bit-identical graphs)",
+             _get(bench, "agreement")),
+            ("ingest jit entries (≤ ladder)",
+             f"{_get(bench, 'device', 'ingest_cache_entries')} / "
+             f"{_get(bench, 'device', 'ingest_cache_bound')}"),
+        ]
+    return rows
+
+
 def main(stream_path: str = "BENCH_stream.json",
-         serve_path: str = "BENCH_serve.json") -> str:
+         serve_path: str = "BENCH_serve.json",
+         ingest_path: str = "BENCH_ingest.json") -> str:
     lines = ["## Benchmark smoke headlines", ""]
     for title, rows in (("stream throughput", stream_rows(_load(stream_path))),
-                        ("LP serving", serve_rows(_load(serve_path)))):
+                        ("LP serving", serve_rows(_load(serve_path))),
+                        ("device ingestion", ingest_rows(_load(ingest_path)))):
         lines += [f"### {title}", "", "| metric | value |", "|---|---|"]
         if not rows:
             rows = [("(no data)", "—")]
@@ -126,4 +157,4 @@ def main(stream_path: str = "BENCH_stream.json",
 
 if __name__ == "__main__":
     args = sys.argv[1:]
-    print(main(*args[:2]))
+    print(main(*args[:3]))

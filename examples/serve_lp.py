@@ -2,9 +2,15 @@
 
     PYTHONPATH=src python examples/serve_lp.py
 
+0. Quickstart: the sklearn-style ``DynLabelPropagation`` estimator —
+   ``fit`` / ``partial_fit`` / ``predict`` over raw embeddings; the
+   whole graph/engine/service stack is derived for you (the recommended
+   front door; everything below peels a layer off it).
 1. Stands up an ``LPService`` over a ``StreamEngine`` and feeds it mixed
-   traffic: mutations (vertex inserts/deletes) coalesced per admission
-   window, query bursts answered from the last committed snapshot.
+   traffic: mutations via the typed embedding-first entry points
+   (``add_points`` / ``remove_points`` — callers never build edge
+   lists) coalesced per admission window, query bursts answered from
+   the last committed snapshot.
 2. Shows the consistency contract: while a batch's solve is in flight
    the service keeps answering from the previous commit (its new
    vertices "don't exist yet"); after ``sync()`` the same query sees
@@ -22,7 +28,31 @@ import numpy as np
 from repro.core.stream import StreamEngine
 from repro.data.synth import StreamSpec, gaussian_mixture_stream
 from repro.graph.dynamic import UNLABELED, DynamicGraph
+from repro.serving.estimator import DynLabelPropagation
 from repro.serving.lp_service import Backpressure, LPService
+
+
+def estimator_quickstart():
+    """Two moons of gaussians, three labeled points per class, the rest
+    inferred — then stream more points in with ``partial_fit``."""
+    rng = np.random.default_rng(0)
+    n = 200
+    X = np.concatenate([rng.normal(-2, 0.7, (n // 2, 8)),
+                        rng.normal(+2, 0.7, (n // 2, 8))]).astype(np.float32)
+    truth = np.repeat([0, 1], n // 2).astype(np.int8)
+    y = np.full(n, UNLABELED, np.int8)
+    y[[0, 1, 2, n - 3, n - 2, n - 1]] = truth[[0, 1, 2, n - 3, n - 2, n - 1]]
+
+    clf = DynLabelPropagation(k=5).fit(X, y)
+    acc = (clf.transduction_ == truth).mean()
+    Xq = np.concatenate([rng.normal(-2, 0.7, (20, 8)),
+                         rng.normal(+2, 0.7, (20, 8))]).astype(np.float32)
+    pred = clf.predict(Xq)  # inductive: unseen embeddings
+    clf.partial_fit(Xq, np.full(len(Xq), UNLABELED, np.int8))  # stream in
+    print(f"estimator quickstart: transductive acc {acc:.3f} with "
+          f"{int((y != UNLABELED).sum())}/{n} seeds; predict() labeled "
+          f"{len(pred)} unseen points; graph now {clf.graph_.num_alive} "
+          f"vertices after partial_fit\n")
 
 
 def serving_demo():
@@ -35,13 +65,13 @@ def serving_demo():
     rng = np.random.default_rng(1)
     for batch, _ in gaussian_mixture_stream(spec):
         base = g.num_nodes
-        # each stream batch arrives as three mutations in one window
+        # each stream batch arrives as a few typed mutations in one
+        # window — embedding-first: the service derives the graph delta
         n = len(batch.ins_emb)
-        svc.mutate(ins_emb=batch.ins_emb[:n // 2],
-                   ins_labels=batch.ins_labels[:n // 2],
-                   del_ids=batch.del_ids)
-        svc.mutate(ins_emb=batch.ins_emb[n // 2:],
-                   ins_labels=batch.ins_labels[n // 2:])
+        svc.add_points(batch.ins_emb[:n // 2], batch.ins_labels[:n // 2])
+        if len(batch.del_ids):
+            svc.remove_points(batch.del_ids)
+        svc.add_points(batch.ins_emb[n // 2:], batch.ins_labels[n // 2:])
         svc.flush()  # admit: the solve is now in flight
 
         # reads never block on the in-flight solve — this batch's
@@ -72,10 +102,10 @@ def backpressure_demo():
                     reject_on_overload=True)
     accepted = 0
     for _ in range(8):  # normal traffic fits the queue bound
-        svc.mutate(ins_emb=rng.normal(0, 1, (8, 8)).astype(np.float32))
+        svc.add_points(rng.normal(0, 1, (8, 8)).astype(np.float32))
         accepted += 1
     try:  # a request that can never fit is shed, not queued forever
-        svc.mutate(ins_emb=rng.normal(0, 1, (100, 8)).astype(np.float32))
+        svc.add_points(rng.normal(0, 1, (100, 8)).astype(np.float32))
         raise AssertionError("oversized mutation was not shed")
     except Backpressure as e:
         shed = str(e)
@@ -93,8 +123,8 @@ def async_driver_demo():
     svc = LPService(StreamEngine(g, delta=1e-4),
                     window_ops=1000, window_ms=20.0)
     with svc:  # start() the driver; close() on exit drains everything
-        t = svc.mutate(ins_emb=rng.normal(0, 1, (12, 8)).astype(np.float32),
-                       ins_labels=(np.arange(12) % 2).astype(np.int8))
+        t = svc.add_points(rng.normal(0, 1, (12, 8)).astype(np.float32),
+                           (np.arange(12) % 2).astype(np.int8))
         # far below window_ops and we never call pump(): only the
         # driver's deadline clock can admit this window
         while not t.committed:
@@ -111,6 +141,7 @@ def async_driver_demo():
 
 
 if __name__ == "__main__":
+    estimator_quickstart()
     serving_demo()
     backpressure_demo()
     async_driver_demo()

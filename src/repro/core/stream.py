@@ -175,8 +175,29 @@ class StreamEngine:
         max_k: int | None | str = "auto",
         transport: str | None = None,
         read_placement: object = "auto",
+        ingest: object = None,
     ):
         self.graph = graph
+        # ingest: who nominates kNN candidates for arriving batches.
+        # None/"host" = the blockwise host staging path (graph default);
+        # "device" = a DeviceIngestor running the Pallas/XLA argkmin
+        # kernel over the device-resident embedding store
+        # (docs/ingestion.md), adopting any rows already in the graph;
+        # or pass a pre-built selector instance.  Either way the labels
+        # and topology are bit-identical — only where the candidate
+        # search runs changes.
+        if ingest in (None, "host"):
+            self.ingestor = None
+        elif ingest == "device":
+            from repro.ingest import DeviceIngestor
+            self.ingestor = DeviceIngestor(graph.emb_dim)
+            if graph.num_nodes:
+                self.ingestor.attach(graph)
+        elif isinstance(ingest, str):
+            raise ValueError(f"unknown ingest mode {ingest!r}; want "
+                             "'host', 'device', or a selector instance")
+        else:
+            self.ingestor = ingest
         self.delta = delta
         self.tau = tau
         self.max_iters = max_iters
@@ -619,7 +640,7 @@ class StreamEngine:
         g = self.graph
 
         # ---- Step 1: change adjustment & sparsification (host) ----
-        effect = g.apply_batch(batch, tau=self.tau)
+        effect = g.apply_batch(batch, tau=self.tau, selector=self.ingestor)
         m = len(effect.new_ids)
 
         # ``effect.affected`` is already alive-filtered, so the frontier

@@ -83,7 +83,7 @@ def unapply_plan(plan: HaloPlan, arr: np.ndarray, n_orig: int) -> np.ndarray:
     return arr[plan.inv_perm[:n_orig]]
 
 
-def export_budget(plan: HaloPlan, n_valid: int, headroom: float = 2.0) -> int:
+def export_budget(plan: HaloPlan, n_valid: int, headroom: float = 3.0) -> int:
     """Per-shard export-prefix length a ladder rung should COMPILE for.
 
     The streaming halo transport fixes one ``export_max`` per bucket rung
@@ -91,7 +91,10 @@ def export_budget(plan: HaloPlan, n_valid: int, headroom: float = 2.0) -> int:
     budget must absorb in-rung growth: the observed max export count is
     scaled by the rung's remaining fill factor (a rung entered at
     ``n_valid`` rows can grow to its full padded row count, and export
-    sets grow roughly with it) times ``headroom`` for topology drift,
+    sets grow roughly with it) times ``headroom`` for topology drift —
+    sized for the incremental kNN graph, where displacement merges churn
+    existing rows' neighbor lists (and so cross-shard edges) in place,
+    not just append new ones —
     then rounded up for lane alignment and capped at the shard size.  A
     batch that still exceeds it falls back to all-gather for that Δ_t
     (logged by the engine), so the budget is a perf knob, never a

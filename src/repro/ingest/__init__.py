@@ -1,0 +1,18 @@
+"""Device-resident streaming kNN ingestion (see ``docs/ingestion.md``).
+
+Turns raw embedding batches into incremental graph updates on device:
+``EmbeddingStore`` keeps every vertex's normalized embedding resident in
+a bucket-ladder array, and ``DeviceIngestor`` plugs into
+``graph.dynamic.apply_batch`` as the candidate selector, running the
+``kernels.argkmin`` distance+top-k pass instead of host-staged BLAS.
+"""
+
+from .embedding_store import EmbeddingStore
+from .incremental_knn import DeviceIngestor, ingest_cache_size, ingest_ladder_bound
+
+__all__ = [
+    "EmbeddingStore",
+    "DeviceIngestor",
+    "ingest_cache_size",
+    "ingest_ladder_bound",
+]

@@ -1,0 +1,178 @@
+"""Bucket-ladder device-resident embedding store (ingest tentpole).
+
+Holds every vertex's row-normalized embedding on device, row-indexed by
+*global vertex id* — the store never compacts, deletions just clear the
+``valid`` flag — plus the per-row current k-th neighbor weight the
+argkmin kernel prunes displacement candidates against.
+
+Compile-once contract: capacity grows on a doubling ladder from a floor
+that is a multiple of the argkmin row tile (so the kernel grid always
+divides evenly), batches pad on their own doubling ladder, and every
+mutation (append / kill / set_kth / grow) is a jitted donated update —
+so the jit cache is bounded by the ladder cross-product, not the stream
+length, and steady-state batches re-use buffers in place on TPU.
+``store_cache_size``/``ingest_ladder_bound`` (``ingest.incremental_knn``
+re-exports) make the bound checkable by the bench ``--check`` gate.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+CAP_FLOOR = 1024  # multiple of the argkmin kernel's 256-row tile
+BATCH_FLOOR = 8
+
+
+def cap_bucket(n: int, floor: int = CAP_FLOOR) -> int:
+    """Store capacity ladder: doubling, floor a multiple of the row tile."""
+    b = floor
+    while b < n:
+        b *= 2
+    return b
+
+
+def batch_bucket(m: int, floor: int = BATCH_FLOOR) -> int:
+    """Batch/scatter row-count ladder (doubling)."""
+    b = floor
+    while b < m:
+        b *= 2
+    return b
+
+
+def dim_pad(d: int) -> int:
+    """Pad the feature axis to a lane-friendly multiple of 8 (zeros are
+    inert under dot products)."""
+    return max(8, -8 * (-d // 8))
+
+
+def _donate(*argnums):
+    """Donation works on TPU and CPU (in-place aliasing keeps appends
+    O(batch) instead of O(capacity)); GPU XLA can't alias these shapes
+    and would warn on every call."""
+    return () if jax.default_backend() == "gpu" else argnums
+
+
+@functools.partial(jax.jit, donate_argnums=_donate(0, 1, 2))
+def _append(emb, valid, kth, block, bvalid, offset):
+    emb = jax.lax.dynamic_update_slice(emb, block, (offset, 0))
+    valid = jax.lax.dynamic_update_slice(valid, bvalid, (offset,))
+    kth = jax.lax.dynamic_update_slice(
+        kth, jnp.full(bvalid.shape, -jnp.inf, jnp.float32), (offset,))
+    return emb, valid, kth
+
+
+@functools.partial(jax.jit, static_argnames=("new_cap",))
+def _grow(emb, valid, kth, new_cap):  # output outgrows input: can't alias
+    pad = new_cap - emb.shape[0]
+    emb = jnp.concatenate([emb, jnp.zeros((pad, emb.shape[1]), jnp.float32)])
+    valid = jnp.concatenate([valid, jnp.zeros((pad,), bool)])
+    kth = jnp.concatenate([kth, jnp.full((pad,), -jnp.inf, jnp.float32)])
+    return emb, valid, kth
+
+
+@functools.partial(jax.jit, donate_argnums=_donate(0))
+def _kill(valid, ids):
+    # ids are padded with an out-of-range value; mode="drop" discards them
+    return valid.at[ids].set(False, mode="drop")
+
+
+@functools.partial(jax.jit, donate_argnums=_donate(0))
+def _set_kth(kth, rows, vals):
+    return kth.at[rows].set(vals, mode="drop")
+
+
+def store_cache_size() -> int:
+    """Live jit cache entries across the store's update kernels."""
+    return int(sum(f._cache_size() for f in (_append, _grow, _kill, _set_kth)))
+
+
+class EmbeddingStore:
+    """Device-resident (capacity, dim_pad) normalized embedding array."""
+
+    def __init__(self, emb_dim: int, capacity_floor: int = CAP_FLOOR):
+        self.emb_dim = emb_dim
+        self.dp = dim_pad(emb_dim)
+        self.count = 0  # rows ever assigned (== graph num_nodes when synced)
+        self.grows = 0
+        self.appends = 0
+        cap = cap_bucket(max(1, capacity_floor))
+        self.emb = jnp.zeros((cap, self.dp), jnp.float32)
+        self.valid = jnp.zeros((cap,), bool)
+        self.kth = jnp.full((cap,), -jnp.inf, jnp.float32)
+
+    @property
+    def capacity(self) -> int:
+        return self.emb.shape[0]
+
+    # ------------------------------------------------------------------ #
+    def ensure(self, rows: int) -> None:
+        """Grow the ladder until ``rows`` fit (donated device-side pad)."""
+        if rows > self.capacity:
+            new_cap = cap_bucket(rows)
+            self.emb, self.valid, self.kth = _grow(
+                self.emb, self.valid, self.kth, new_cap)
+            self.grows += 1
+
+    def backfill(self, embn: np.ndarray, alive: np.ndarray,
+                 kth: np.ndarray) -> None:
+        """One-shot adoption of an existing graph's rows (host → device);
+        used when an ingestor attaches to a non-empty graph."""
+        n = len(embn)
+        cap = max(self.capacity, cap_bucket(max(n, 1)))
+        emb_h = np.zeros((cap, self.dp), np.float32)
+        emb_h[:n, : self.emb_dim] = embn
+        valid_h = np.zeros(cap, bool)
+        valid_h[:n] = alive
+        kth_h = np.full(cap, -np.inf, np.float32)
+        kth_h[:n] = kth
+        self.emb = jnp.asarray(emb_h)
+        self.valid = jnp.asarray(valid_h)
+        self.kth = jnp.asarray(kth_h)
+        self.count = n
+
+    def append(self, embn: np.ndarray) -> tuple[jax.Array, jax.Array, int]:
+        """Append a normalized batch at the next free rows.
+
+        Returns ``(batch (Mp, dp) device, batch_valid (Mp,) device,
+        base_id)`` ready for ``kernels.argkmin`` — padding rows are
+        zeroed and flagged invalid; the next append overwrites them.
+        """
+        m = len(embn)
+        mp = batch_bucket(max(m, 1))
+        base_id = self.count
+        self.ensure(base_id + mp)
+        block = np.zeros((mp, self.dp), np.float32)
+        block[:m, : self.emb_dim] = embn
+        bvalid = np.arange(mp) < m
+        batch_dev = jnp.asarray(block)
+        bvalid_dev = jnp.asarray(bvalid)
+        self.emb, self.valid, self.kth = _append(
+            self.emb, self.valid, self.kth, batch_dev, bvalid_dev,
+            np.int32(base_id))
+        self.count += m
+        self.appends += 1
+        return batch_dev, bvalid_dev, base_id
+
+    def kill(self, ids: np.ndarray) -> None:
+        """Mark rows dead (deletions) — they stop matching immediately."""
+        if not len(ids):
+            return
+        rp = batch_bucket(len(ids))
+        padded = np.full(rp, self.capacity, np.int32)  # OOB pad → dropped
+        padded[: len(ids)] = ids
+        self.valid = _kill(self.valid, jnp.asarray(padded))
+
+    def set_kth(self, rows: np.ndarray, vals: np.ndarray) -> None:
+        """Refresh the pruning thresholds of rows whose lists changed."""
+        if not len(rows):
+            return
+        rp = batch_bucket(len(rows))
+        rows_p = np.full(rp, self.capacity, np.int32)
+        rows_p[: len(rows)] = rows
+        vals_p = np.zeros(rp, np.float32)
+        vals_p[: len(rows)] = vals
+        self.kth = _set_kth(self.kth, jnp.asarray(rows_p), jnp.asarray(vals_p))

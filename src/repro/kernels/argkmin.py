@@ -1,0 +1,192 @@
+"""Pallas TPU kernel: tiled cosine argkmin over the device embedding store.
+
+One pass over the store answers both questions an arriving batch poses
+(the DynLP "necessary updates only" discipline applied to construction):
+
+  1. **New-row candidates** — for every batch row, the top-(k + margin)
+     store rows by fast similarity.  These are *candidate supersets*: the
+     final top-k is re-selected canonically on the host (``graph.knn``
+     module docstring), so the kernel's matmul rounding can never leak
+     into edge weights.
+  2. **Displaced-row pruning** — the mask of existing store rows whose
+     current k-th weight at least one batch point beats (within
+     ``selection_slack``).  Only these rows pay a list merge on the host;
+     everything else is untouched.
+
+Layout: the store is row-indexed by *global vertex id* (it never
+compacts; dead rows are masked out of ``valid``), and the batch is
+appended to the store **before** the call, so batch rows are ordinary
+columns for each other — within-batch neighbors fall out for free and
+self-matches are excluded by the ``store_row == base_id + query_row``
+diagonal.
+
+Grid: (C // R,) over store row tiles.  The batch block and the running
+(M, TK) best-candidate accumulator use constant index maps (VMEM
+resident across grid steps, ``@pl.when`` init at step 0 — the standard
+cross-step accumulation pattern); the displacement mask is written per
+tile.  Ties select the lowest store row, matching both ``lax.top_k``
+and the host oracle's canonical order, so mass-duplicate inputs keep
+identical candidate coverage on every path.
+
+The ``xla`` twin (one fused jit: matmul + ``lax.top_k`` + mask) serves
+non-TPU hardware; ``backend="auto"`` picks Pallas on TPU, XLA elsewhere.
+Interpret-mode Pallas is only used to *verify* agreement in tests and
+``benchmarks/ingest_lp.py --check``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.graph.knn import SELECT_MARGIN
+
+_INT_MAX = 2**31 - 1  # python literal: a jnp scalar here would be a captured tracer in the kernel
+
+
+def _on_tpu() -> bool:
+    # mirrors kernels.ops.on_tpu; inlined because ops pulls in
+    # core.propagate, which imports this package — circular either way
+    return jax.default_backend() == "tpu"
+
+
+def _kernel(store_ref, valid_ref, kth_ref, batch_ref, bvalid_ref,
+            base_ref, slack_ref, val_ref, idx_ref, disp_ref, *, topk):
+    i = pl.program_id(0)
+    tile = store_ref[...]  # (R, D)
+    batch = batch_ref[...]  # (M, D) — VMEM resident across tiles
+    r = tile.shape[0]
+    m = batch.shape[0]
+    base_id = base_ref[0]
+    rows_g = i * r + jax.lax.iota(jnp.int32, r)
+
+    s = jnp.dot(batch, tile.T, preferred_element_type=jnp.float32)  # (M, R)
+    w = (s + 1.0) * 0.5
+    self_mask = rows_g[None, :] == (base_id + jax.lax.iota(jnp.int32, m)[:, None])
+    col_ok = valid_ref[...][None, :] & ~self_mask
+    wm = jnp.where(col_ok, w, -jnp.inf)
+
+    # displacement pruning: old valid rows some batch point beats
+    old = valid_ref[...] & (rows_g < base_id)
+    wq = jnp.where(bvalid_ref[...][:, None], w, -jnp.inf)
+    colmax = jnp.max(wq, axis=0)  # (R,)
+    disp_ref[...] = old & (colmax > kth_ref[...] - slack_ref[0])
+
+    # fold this tile into the running top-TK (ties -> lowest store row)
+    @pl.when(i == 0)
+    def _init():
+        val_ref[...] = jnp.full(val_ref.shape, -jnp.inf, jnp.float32)
+        idx_ref[...] = jnp.zeros(idx_ref.shape, jnp.int32)
+
+    cand_val = jnp.concatenate([val_ref[...], wm], axis=1)  # (M, TK+R)
+    cand_idx = jnp.concatenate(
+        [idx_ref[...], jnp.broadcast_to(rows_g[None, :], (m, r))], axis=1)
+    vals, idxs = [], []
+    for _ in range(topk):
+        mx = jnp.max(cand_val, axis=1)
+        tie = cand_val == mx[:, None]
+        sel = jnp.min(jnp.where(tie, cand_idx, _INT_MAX), axis=1)
+        vals.append(mx)
+        idxs.append(sel)
+        cand_val = jnp.where(tie & (cand_idx == sel[:, None]), -jnp.inf, cand_val)
+    val_ref[...] = jnp.stack(vals, axis=1)
+    idx_ref[...] = jnp.stack(idxs, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("topk", "block_rows", "interpret"))
+def _argkmin_pallas(store, valid, kth, batch, batch_valid, base_id, slack,
+                    topk, block_rows, interpret):
+    c, d = store.shape
+    m = batch.shape[0]
+    r = min(block_rows, c)
+    assert c % r == 0, (c, r)
+    row_spec = lambda width=None: pl.BlockSpec(
+        (r,) if width is None else (r, width),
+        (lambda i: (i,)) if width is None else (lambda i: (i, 0)))
+    const_spec = lambda *shape: pl.BlockSpec(shape, lambda i: (0,) * len(shape))
+    val, idx, disp = pl.pallas_call(
+        functools.partial(_kernel, topk=topk),
+        grid=(c // r,),
+        in_specs=[
+            row_spec(d),          # store tile
+            row_spec(),           # valid
+            row_spec(),           # kth
+            const_spec(m, d),     # batch
+            const_spec(m),        # batch_valid
+            const_spec(1),        # base_id
+            const_spec(1),        # slack
+        ],
+        out_specs=[const_spec(m, topk), const_spec(m, topk), row_spec()],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, topk), jnp.float32),
+            jax.ShapeDtypeStruct((m, topk), jnp.int32),
+            jax.ShapeDtypeStruct((c,), jnp.bool_),
+        ],
+        interpret=interpret,
+    )(store, valid, kth.astype(jnp.float32), batch, batch_valid,
+      jnp.full((1,), base_id, jnp.int32), jnp.full((1,), slack, jnp.float32))
+    return val, idx, disp
+
+
+@functools.partial(jax.jit, static_argnames=("topk",))
+def _argkmin_xla(store, valid, kth, batch, batch_valid, base_id, slack, topk):
+    c = store.shape[0]
+    m = batch.shape[0]
+    rows_g = jnp.arange(c, dtype=jnp.int32)
+    # store-major orientation: on CPU XLA, (C, D) @ (D, M) with the big
+    # operand on the left runs ~4x faster than batch @ store.T, and the
+    # barrier stops XLA from folding the later transpose back into the
+    # dot (which would silently restore the slow orientation)
+    s = jax.lax.optimization_barrier(
+        jnp.dot(store, batch.T, preferred_element_type=jnp.float32))  # (C, M)
+    w = (s + 1.0) * 0.5
+    old = valid & (rows_g < base_id)
+    colmax = jnp.max(jnp.where(batch_valid[None, :], w, -jnp.inf), axis=1)
+    disp = old & (colmax > kth - slack)
+    self_mask = rows_g[None, :] == base_id + jnp.arange(m, dtype=jnp.int32)[:, None]
+    wm = jnp.where(valid[None, :] & ~self_mask, w.T, -jnp.inf)
+    val, idx = jax.lax.top_k(wm, topk)  # ties keep the lower index
+    return val, idx.astype(jnp.int32), disp
+
+
+def argkmin_candidates(
+    store: jax.Array,        # (C, D) f32 normalized embeddings, row == global id
+    valid: jax.Array,        # (C,) bool — initialized & alive (incl. the batch)
+    kth: jax.Array,          # (C,) f32 — current k-th weight, -inf under-full
+    batch: jax.Array,        # (M, D) f32 normalized new rows (already in store)
+    batch_valid: jax.Array,  # (M,) bool — first m rows real, rest padding
+    base_id: int,            # global id of batch row 0
+    slack: float,            # selection_slack(D): pruning tolerance
+    *,
+    k: int,
+    backend: str = "auto",
+    block_rows: int = 256,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Fast-path candidates + displacement mask for one embedding batch.
+
+    Returns ``(val (M, k+SELECT_MARGIN) f32, idx (M, k+SELECT_MARGIN)
+    int32, disp (C,) bool)``; ``val == -inf`` marks empty candidate slots
+    (callers must drop them before canonical re-selection).
+    """
+    topk = min(k + SELECT_MARGIN, store.shape[0])
+    if backend == "auto":
+        backend = "pallas" if _on_tpu() else "xla"
+    if backend == "pallas":
+        if interpret is None:
+            interpret = not _on_tpu()
+        return _argkmin_pallas(store, valid, kth, batch, batch_valid,
+                               base_id, slack, topk, block_rows, interpret)
+    if backend == "xla":
+        return _argkmin_xla(store, valid, kth, batch, batch_valid,
+                            jnp.int32(base_id), jnp.float32(slack), topk)
+    raise ValueError(f"unknown argkmin backend {backend!r}")
+
+
+def argkmin_cache_size() -> int:
+    """Live jit cache entries across both argkmin backends (compile-once
+    telemetry for the ingest ladder gate)."""
+    return int(_argkmin_pallas._cache_size() + _argkmin_xla._cache_size())

@@ -7,8 +7,11 @@ a front-end for the two request kinds a label service sees:
     Served entirely from the engine's last *committed* ``LabelView``
     (the read side of the double buffer), so reads never block on an
     in-flight propagation and never observe a torn half-applied batch.
-  * **mutations** — vertex inserts (embeddings + optional ground-truth
-    labels) and vertex deletes.  Mutations are coalesced into one
+  * **mutations** — the typed embedding-first entry points
+    ``add_points(embeddings, labels=...)`` / ``remove_points(ids)`` /
+    ``relabel(ids, labels)`` (callers never construct edge lists; with
+    ``StreamEngine(ingest="device")`` the kNN delta is derived on
+    device — docs/ingestion.md).  Mutations are coalesced into one
     ``BatchUpdate`` per *admission window* — the window closes when it
     reaches ``window_ops`` operations or ``window_ms`` milliseconds,
     whichever first — and admitted through ``StreamEngine.submit`` so
@@ -126,6 +129,8 @@ class _QueuedMutation:
     ins_emb: np.ndarray
     ins_labels: np.ndarray
     del_ids: np.ndarray
+    rel_ids: np.ndarray
+    rel_labels: np.ndarray
 
 
 class LPService:
@@ -317,17 +322,53 @@ class LPService:
     # ------------------------------------------------------------------ #
     # write path
     # ------------------------------------------------------------------ #
+    def add_points(
+        self,
+        embeddings: np.ndarray,
+        labels: np.ndarray | None = None,
+    ) -> MutationTicket:
+        """Insert points by embedding — the embedding-first front door.
+
+        ``embeddings`` is (M, D); ``labels`` is (M,) ground truth (0/1,
+        or ``UNLABELED``/None for points the propagation should label).
+        The service derives the graph delta itself — on device when the
+        engine was built with ``ingest="device"`` (docs/ingestion.md) —
+        so callers never construct edge lists.  Returns the mutation's
+        ticket; ``sync()`` for read-your-writes."""
+        return self.mutate(ins_emb=embeddings, ins_labels=labels)
+
+    def remove_points(self, ids) -> MutationTicket:
+        """Delete points by global id (their edges vanish with them)."""
+        return self.mutate(del_ids=ids)
+
+    def relabel(self, ids, labels) -> MutationTicket:
+        """Change the ground-truth labels of existing points (0/1, or
+        ``UNLABELED`` to demote a seed back to propagated)."""
+        ids = np.asarray(ids, np.int64).reshape(-1)
+        labels = np.asarray(labels, np.int8).reshape(-1)
+        if len(ids) != len(labels):
+            raise ValueError(
+                f"relabel ids length {len(ids)} != labels {len(labels)}")
+        return self.mutate(rel_ids=ids, rel_labels=labels)
+
     def mutate(
         self,
         ins_emb: np.ndarray | None = None,
         ins_labels: np.ndarray | None = None,
         del_ids: np.ndarray | None = None,
+        rel_ids: np.ndarray | None = None,
+        rel_labels: np.ndarray | None = None,
     ) -> MutationTicket:
-        """Enqueue one mutation (inserts and/or deletes) for the current
-        admission window; returns its ticket.  May admit a batch (window
-        full or deadline passed) and, under backpressure, may block until
-        the backlog drains — or raise ``Backpressure`` if configured to
-        reject."""
+        """Enqueue one mutation (inserts, deletes and/or relabels) for
+        the current admission window; returns its ticket.  May admit a
+        batch (window full or deadline passed) and, under backpressure,
+        may block until the backlog drains — or raise ``Backpressure``
+        if configured to reject.
+
+        Prefer the typed ``add_points`` / ``remove_points`` / ``relabel``
+        wrappers; constructing raw ``BatchUpdate`` deltas and calling
+        ``engine.submit`` directly is deprecated for service callers —
+        it bypasses admission windows, backpressure and tickets."""
         dim = self.engine.graph.emb_dim
         emb = (np.zeros((0, dim), np.float32) if ins_emb is None
                else np.asarray(ins_emb, np.float32).reshape(-1, dim))
@@ -340,9 +381,17 @@ class LPService:
                 f"ins_labels length {len(labels)} != ins_emb rows {len(emb)}")
         dels = (np.zeros(0, np.int64) if del_ids is None
                 else np.asarray(del_ids, np.int64).reshape(-1))
-        ops = len(emb) + len(dels)
+        rels = (np.zeros(0, np.int64) if rel_ids is None
+                else np.asarray(rel_ids, np.int64).reshape(-1))
+        rlabs = (np.zeros(0, np.int8) if rel_labels is None
+                 else np.asarray(rel_labels, np.int8).reshape(-1))
+        if len(rels) != len(rlabs):
+            raise ValueError(
+                f"rel_labels length {len(rlabs)} != rel_ids {len(rels)}")
+        ops = len(emb) + len(dels) + len(rels)
         if ops == 0:
-            raise ValueError("empty mutation: no inserts and no deletes")
+            raise ValueError(
+                "empty mutation: no inserts, deletes or relabels")
 
         with self._lock:
             self.pump()  # harvest a finished solve / deadline-flush first
@@ -358,7 +407,8 @@ class LPService:
             ticket = MutationTicket(ticket=self._next_ticket, ops=ops,
                                     enqueued_at=time.perf_counter())
             self._next_ticket += 1
-            self._window.append(_QueuedMutation(ticket, emb, labels, dels))
+            self._window.append(
+                _QueuedMutation(ticket, emb, labels, dels, rels, rlabs))
             self._window_ops += ops
             if self._window_t0 is None:
                 self._window_t0 = time.perf_counter()
@@ -467,6 +517,8 @@ class LPService:
             ins_emb=np.concatenate([q.ins_emb for q in window]),
             ins_labels=np.concatenate([q.ins_labels for q in window]),
             del_ids=np.concatenate([q.del_ids for q in window]),
+            rel_ids=np.concatenate([q.rel_ids for q in window]),
+            rel_labels=np.concatenate([q.rel_labels for q in window]),
         )
         # submit internally drains the previous batch — those are the
         # current in-flight tickets, resolved below if that drain ran.

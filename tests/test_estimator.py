@@ -1,0 +1,110 @@
+"""``DynLabelPropagation``: the sklearn-style estimator front door.
+
+Duck-typed protocol checks (params round-trip, re-instantiation from
+``get_params`` — what sklearn's ``clone`` does), fitted-attribute
+conventions, transductive/inductive accuracy on separable gaussians,
+and the streaming verbs (``partial_fit`` / ``forget`` / ``relabel``).
+No sklearn import anywhere — the estimator must work standalone.
+"""
+
+import numpy as np
+import pytest
+
+from repro.serving.estimator import UNLABELED, DynLabelPropagation
+
+
+def _blobs(rng, n, d=8, sep=2.5, noise=0.7):
+    X = np.concatenate([
+        rng.normal(-sep, noise, (n // 2, d)),
+        rng.normal(+sep, noise, (n - n // 2, d)),
+    ]).astype(np.float32)
+    truth = np.repeat([0, 1], [n // 2, n - n // 2]).astype(np.int8)
+    return X, truth
+
+
+def _seeded(truth, n_seeds, rng):
+    y = np.full(len(truth), UNLABELED, np.int8)
+    for c in (0, 1):
+        ids = rng.choice(np.flatnonzero(truth == c), n_seeds, replace=False)
+        y[ids] = c
+    return y
+
+
+def test_params_roundtrip_and_clone():
+    clf = DynLabelPropagation(k=7, delta=1e-3, ingest="host")
+    p = clf.get_params()
+    assert p["k"] == 7 and p["delta"] == 1e-3 and p["ingest"] == "host"
+    clone = DynLabelPropagation(**p)  # what sklearn.clone does
+    assert clone.get_params() == p
+    clone.set_params(k=3)
+    assert clone.k == 3 and clf.k == 7
+    with pytest.raises(ValueError, match="invalid parameter"):
+        clone.set_params(nope=1)
+
+
+def test_fit_transductive_accuracy():
+    rng = np.random.default_rng(0)
+    X, truth = _blobs(rng, 240)
+    y = _seeded(truth, 4, rng)
+    clf = DynLabelPropagation(k=5).fit(X, y)
+    assert clf.n_features_in_ == 8
+    assert np.array_equal(clf.classes_, [0, 1])
+    assert len(clf.transduction_) == len(X)
+    assert (clf.transduction_ != UNLABELED).all()
+    assert (clf.transduction_ == truth).mean() > 0.95
+    # seeds are reproduced exactly
+    seeds = y != UNLABELED
+    np.testing.assert_array_equal(clf.transduction_[seeds], y[seeds])
+
+
+def test_predict_inductive_without_growing_the_graph():
+    rng = np.random.default_rng(1)
+    X, truth = _blobs(rng, 200)
+    clf = DynLabelPropagation(k=5).fit(X, _seeded(truth, 4, rng))
+    n0 = clf.graph_.num_alive
+    Xq, tq = _blobs(rng, 40)
+    pred = clf.predict(Xq)
+    assert clf.graph_.num_alive == n0  # probe points removed again
+    assert (pred == tq).mean() > 0.9
+    assert clf.score(Xq, tq) > 0.9
+
+
+def test_partial_fit_streams_and_first_call_fits():
+    rng = np.random.default_rng(2)
+    X, truth = _blobs(rng, 160)
+    y = _seeded(truth, 4, rng)
+    clf = DynLabelPropagation(k=5)
+    clf.partial_fit(X[:80], y[:80])  # first call behaves like fit
+    assert clf.graph_.num_alive == 80
+    clf.partial_fit(X[80:], y[80:])
+    assert clf.graph_.num_alive == 160
+    assert (clf.transduction_ == truth).mean() > 0.95
+
+
+def test_forget_and_relabel():
+    rng = np.random.default_rng(3)
+    X, truth = _blobs(rng, 120)
+    y = _seeded(truth, 3, rng)
+    clf = DynLabelPropagation(k=4).fit(X, y)
+    clf.forget(np.arange(5))
+    assert clf.graph_.num_alive == 115
+    assert clf.transduction_[0] == UNLABELED  # dead ids read UNLABELED
+    sid = int(np.flatnonzero(y == 0)[-1])
+    clf.relabel([sid], [1])
+    assert clf.transduction_[sid] == 1  # seed flipped, committed
+
+
+def test_host_and_device_ingest_bit_identical():
+    rng = np.random.default_rng(4)
+    X, truth = _blobs(rng, 150)
+    y = _seeded(truth, 4, rng)
+    a = DynLabelPropagation(k=5, ingest="device").fit(X, y)
+    b = DynLabelPropagation(k=5, ingest="host").fit(X, y)
+    np.testing.assert_array_equal(a.transduction_, b.transduction_)
+    np.testing.assert_array_equal(a.graph_.f, b.graph_.f)
+
+
+def test_input_validation():
+    clf = DynLabelPropagation()
+    with pytest.raises(ValueError, match="2-D"):
+        clf.fit(np.zeros(8, np.float32))

@@ -154,8 +154,11 @@ def test_stream_deletion_only_batch():
 
 
 def _hub_stream(eng, rng, batches=4, per_batch=25):
-    """Insert tight clusters around one hub vertex so its degree — and
-    the natural ELL K — grows with every batch."""
+    """Insert points on a cone around one hub vertex (cos 0.9 to the hub,
+    pairwise cos ≈ 0.81 to each other, high dim keeps random directions
+    near-orthogonal) so the hub stays every point's nearest neighbor:
+    its true-kNN in-degree — and the natural ELL K — grows with every
+    batch even though each point keeps only k list slots."""
     dim = eng.graph.emb_dim
     hub = np.zeros((1, dim), np.float32)
     hub[0, 0] = 1.0
@@ -166,8 +169,11 @@ def _hub_stream(eng, rng, batches=4, per_batch=25):
         ins_labels=np.array([1, 0, UNLABELED], np.int8),
         del_ids=np.zeros(0, np.int64)))
     for _ in range(batches):
-        pts = np.tile(hub, (per_batch, 1)) + rng.normal(
-            0, 0.01, (per_batch, dim)).astype(np.float32)
+        u = rng.normal(0, 1, (per_batch, dim)).astype(np.float32)
+        u[:, 0] = 0.0  # orthogonal complement of the hub direction
+        u /= np.linalg.norm(u, axis=1, keepdims=True)
+        pts = (0.9 * hub + np.float32(np.sqrt(1.0 - 0.81)) * u
+               ).astype(np.float32)
         eng.step(BatchUpdate(ins_emb=pts,
                              ins_labels=np.full(per_batch, UNLABELED, np.int8),
                              del_ids=np.zeros(0, np.int64)))
@@ -182,12 +188,12 @@ def test_max_k_caps_hub_ladder(caplog, monkeypatch):
     # so this test is order/rerun independent
     monkeypatch.setattr(snapshot, "_MAX_K_WARNED", set())
     rng = np.random.default_rng(0)
-    g_free = DynamicGraph(emb_dim=8, k=3)
+    g_free = DynamicGraph(emb_dim=64, k=3)
     free = StreamEngine(g_free, delta=1e-4, max_k=None)  # escape hatch
     _hub_stream(free, np.random.default_rng(0))
     assert max(k for _, k in free.bucket_keys) >= 32  # the uncapped creep
 
-    g_cap = DynamicGraph(emb_dim=8, k=3)
+    g_cap = DynamicGraph(emb_dim=64, k=3)
     capped = StreamEngine(g_cap, delta=1e-4, max_k=8)
     with caplog.at_level(logging.WARNING, logger="repro.core.snapshot"):
         _hub_stream(capped, rng)
@@ -215,7 +221,7 @@ def test_max_k_defaults_to_4x_knn_k():
     assert StreamEngine(g, max_k=7).max_k == 7
     # the default cap actually bounds the hub ladder (same stream as the
     # explicit-cap test, no max_k argument at all)
-    g_def = DynamicGraph(emb_dim=8, k=3)
+    g_def = DynamicGraph(emb_dim=64, k=3)
     eng = StreamEngine(g_def, delta=1e-4)
     _hub_stream(eng, np.random.default_rng(0))
     assert max(k for _, k in eng.bucket_keys) <= 16  # bucket_k(12)
@@ -227,7 +233,7 @@ def test_max_k_warning_scoped_per_engine(caplog):
     module-level state; within one engine repeats still demote to
     DEBUG."""
     def run_engine():
-        g = DynamicGraph(emb_dim=8, k=3)
+        g = DynamicGraph(emb_dim=64, k=3)
         eng = StreamEngine(g, delta=1e-4, max_k=8)
         _hub_stream(eng, np.random.default_rng(0), batches=3)
         return eng
