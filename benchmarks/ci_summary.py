@@ -1,5 +1,6 @@
-"""Render BENCH_stream.json / BENCH_serve.json / BENCH_ingest.json
-headline numbers as a GitHub job-summary markdown table.
+"""Render BENCH_stream.json / BENCH_serve.json / BENCH_ingest.json /
+BENCH_checkpoint.json headline numbers as a GitHub job-summary markdown
+table.
 
 The bench-smoke CI job appends this script's stdout to
 ``$GITHUB_STEP_SUMMARY`` so perf regressions are visible on the PR
@@ -8,7 +9,7 @@ as ``—`` rather than failing: the summary is reporting, the gating lives
 in the benchmarks' ``--check``.
 
 Usage: ``python benchmarks/ci_summary.py [BENCH_stream.json]
-[BENCH_serve.json] [BENCH_ingest.json]``
+[BENCH_serve.json] [BENCH_ingest.json] [BENCH_checkpoint.json]``
 """
 
 from __future__ import annotations
@@ -140,13 +141,40 @@ def ingest_rows(bench: dict) -> list[tuple[str, str]]:
     return rows
 
 
+def checkpoint_rows(bench: dict) -> list[tuple[str, str]]:
+    rows = []
+    for arm in ("plain", "checkpoint"):
+        if arm in bench:
+            rows.append((f"{arm}: steady mutation ops/sec",
+                         _get(bench, arm, "ops_per_sec")))
+    if bench:
+        rows += [
+            ("checkpoint/plain overhead ratio",
+             f"{_get(bench, 'checkpoint_overhead_ratio')} "
+             f"(floor {_get(bench, 'floors', 'checkpoint_overhead_ratio')})"),
+            ("arms bit-identical graphs", _get(bench, "arms_identical")),
+            ("restore latency ms (load / to first commit)",
+             f"{_get(bench, 'restore_ms')} / "
+             f"{_get(bench, 'restore_to_first_commit_ms')}"),
+        ]
+        replay = bench.get("restore_replay_identical")
+        if isinstance(replay, dict):
+            ok = sum(1 for v in replay.values() if v)
+            rows.append(("kill points replayed bit-identical",
+                         f"{ok} / {len(replay)}"))
+    return rows
+
+
 def main(stream_path: str = "BENCH_stream.json",
          serve_path: str = "BENCH_serve.json",
-         ingest_path: str = "BENCH_ingest.json") -> str:
+         ingest_path: str = "BENCH_ingest.json",
+         checkpoint_path: str = "BENCH_checkpoint.json") -> str:
     lines = ["## Benchmark smoke headlines", ""]
     for title, rows in (("stream throughput", stream_rows(_load(stream_path))),
                         ("LP serving", serve_rows(_load(serve_path))),
-                        ("device ingestion", ingest_rows(_load(ingest_path)))):
+                        ("device ingestion", ingest_rows(_load(ingest_path))),
+                        ("checkpoint / restore",
+                         checkpoint_rows(_load(checkpoint_path)))):
         lines += [f"### {title}", "", "| metric | value |", "|---|---|"]
         if not rows:
             rows = [("(no data)", "—")]
@@ -157,4 +185,4 @@ def main(stream_path: str = "BENCH_stream.json",
 
 if __name__ == "__main__":
     args = sys.argv[1:]
-    print(main(*args[:3]))
+    print(main(*args[:4]))

@@ -20,11 +20,25 @@ from __future__ import annotations
 
 import json
 import os
+import re
 import shutil
 import threading
 
 import jax
 import numpy as np
+
+# canonical step-entry name: ``step_<8+ digits>`` (``save`` zero-pads to 8).
+# Anything else under the checkpoint directory — a stray ``step_x`` file, a
+# half-written ``step_*.tmp`` from a crashed writer — is NOT a checkpoint
+# and must never crash ``latest_step``/``_gc`` (they used to ValueError on
+# ``int(name.split("_")[1])``).
+_STEP_RE = re.compile(r"step_(\d+)$")
+
+
+def _step_of(name: str) -> int | None:
+    """Step number of a well-formed ``step_<N>`` entry name, else None."""
+    m = _STEP_RE.fullmatch(name)
+    return int(m.group(1)) if m else None
 
 
 def _leaves_with_paths(tree):
@@ -55,8 +69,13 @@ def _load_leaf(path: str, shape, dtype_name: str) -> np.ndarray:
     return raw.view(dt).reshape(shape)
 
 
-def save(directory: str, step: int, tree, wait: bool = True) -> str:
-    """Atomic checkpoint of an arbitrary pytree of arrays."""
+def save(directory: str, step: int, tree) -> str:
+    """Atomic checkpoint of an arbitrary pytree of arrays.
+
+    Always synchronous — it returns only once the renamed ``step_<N>``
+    directory is on disk.  (A historical ``wait=`` parameter was accepted
+    but never read; async writes live in ``CheckpointManager.save_async``.)
+    """
     final = os.path.join(directory, f"step_{step:08d}")
     tmp = final + ".tmp"
     if os.path.exists(tmp):
@@ -82,14 +101,45 @@ def save(directory: str, step: int, tree, wait: bool = True) -> str:
 
 
 def latest_step(directory: str) -> int | None:
+    """Largest step with a committed (``.complete``-marked) directory.
+
+    Malformed ``step_*`` entries and in-flight ``.tmp`` staging dirs are
+    ignored — a crashed writer or stray file must never make the survivor
+    unreadable.
+    """
     if not os.path.isdir(directory):
         return None
     steps = []
     for name in os.listdir(directory):
-        if name.startswith("step_") and not name.endswith(".tmp"):
-            if os.path.exists(os.path.join(directory, name, ".complete")):
-                steps.append(int(name.split("_")[1]))
+        step = _step_of(name)
+        if step is not None and os.path.exists(
+                os.path.join(directory, name, ".complete")):
+            steps.append(step)
     return max(steps) if steps else None
+
+
+def load_flat(directory: str, step: int) -> dict[str, np.ndarray]:
+    """Load a checkpoint that was saved from a FLAT ``{name: array}`` dict,
+    reconstructing the dict purely from the manifest.
+
+    Unlike ``restore`` this needs no like-tree: shapes and dtypes come from
+    the manifest, so a fresh process can restore state whose geometry it
+    does not know in advance (the engine-persistence path).  Raises
+    ``FileNotFoundError`` if the step directory or its commit marker is
+    missing.
+    """
+    src = os.path.join(directory, f"step_{step:08d}")
+    if not os.path.exists(os.path.join(src, ".complete")):
+        raise FileNotFoundError(f"no committed checkpoint at {src}")
+    with open(os.path.join(src, "manifest.json")) as f:
+        manifest = json.load(f)
+    out: dict[str, np.ndarray] = {}
+    for i, meta in enumerate(manifest["leaves"]):
+        m = re.fullmatch(r"\['([^']+)'\]", meta["path"])
+        name = m.group(1) if m else meta["path"]
+        out[name] = _load_leaf(os.path.join(src, f"arr_{i}.npy"),
+                               meta["shape"], meta["dtype"])
+    return out
 
 
 def restore(directory: str, step: int, like_tree, shardings=None):
@@ -124,28 +174,48 @@ def restore(directory: str, step: int, like_tree, shardings=None):
 
 
 class CheckpointManager:
-    """Rolling checkpoints with async save and resume."""
+    """Rolling checkpoints with async save and resume.
+
+    Worker-thread failures are never silent: an exception raised during an
+    async write is captured and re-raised at the next ``wait()`` /
+    ``save_async()`` / ``save_sync()`` call, so a caller that keeps
+    submitting checkpoints finds out its state is not durable instead of
+    running on indefinitely.
+    """
 
     def __init__(self, directory: str, keep: int = 3):
         self.directory = directory
         self.keep = keep
         self._thread: threading.Thread | None = None
+        self._error: BaseException | None = None
         os.makedirs(directory, exist_ok=True)
 
     def wait(self):
+        """Block until the in-flight async save (if any) finishes.
+
+        Re-raises any exception the worker thread hit — once: the error is
+        cleared after raising so the manager stays usable for a retry.
+        """
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
 
     def save_async(self, step: int, tree):
         """Snapshot to host, then write on a worker thread (overlaps the
-        next train step's device work)."""
+        next train step's device work).  Raises here if the PREVIOUS async
+        save failed."""
         self.wait()
         host_tree = jax.tree.map(lambda a: np.asarray(jax.device_get(a)), tree)
 
         def work():
-            save(self.directory, step, host_tree)
-            self._gc()
+            try:
+                save(self.directory, step, host_tree)
+                self._gc()
+            except BaseException as e:  # surfaced at the next wait()
+                self._error = e
 
         self._thread = threading.Thread(target=work, daemon=True)
         self._thread.start()
@@ -165,10 +235,21 @@ class CheckpointManager:
         return restore(self.directory, step, like_tree, shardings=shardings)
 
     def _gc(self):
-        steps = sorted(
-            int(n.split("_")[1]) for n in os.listdir(self.directory)
-            if n.startswith("step_") and not n.endswith(".tmp")
-            and os.path.exists(os.path.join(self.directory, n, ".complete")))
-        for s in steps[: -self.keep]:
+        stale_tmp = []
+        steps = []
+        for n in os.listdir(self.directory):
+            if n.endswith(".tmp") and _step_of(n[: -len(".tmp")]) is not None:
+                stale_tmp.append(n)
+                continue
+            s = _step_of(n)
+            if s is not None and os.path.exists(
+                    os.path.join(self.directory, n, ".complete")):
+                steps.append(s)
+        # a crashed writer leaves a marker-less step_<N>.tmp behind; it is
+        # invisible to latest_step but would leak disk forever — reap any
+        # that aren't the write we just completed.
+        for n in stale_tmp:
+            shutil.rmtree(os.path.join(self.directory, n), ignore_errors=True)
+        for s in sorted(steps)[: -self.keep]:
             shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
                           ignore_errors=True)

@@ -1,0 +1,271 @@
+"""Durable engine state: crash-safe checkpoint/restore for the stream.
+
+A process restart used to throw away the engine's entire incremental
+state — host graph, committed labels, embedding store, measured-transport
+picks — and force exactly the full recomputation DynLP exists to avoid.
+This module snapshots ALL of it through the atomic ``checkpoint.manager``
+format (``step_<N>/`` + manifest + ``.complete`` marker, mesh-independent
+full arrays) so a restarted engine resumes bit-identically:
+
+  * the ``DynamicGraph`` buffers (embeddings, labels, alive, fractional
+    labels ``f``, kNN lists, undirected edge arrays),
+  * the ``EmbeddingStore`` contents + per-row k-th weights (device
+    ingest), so the restored selector prunes displacements exactly,
+  * the commit/batch counters and bucket-ladder rung metadata (per-rung
+    transport modes, export budgets, backend decisions, bsr slot
+    budgets), and
+  * the per-(rung, transport) ``auto:measured`` sweep timings — the
+    persistent probe cache: a restored engine re-enters measured rungs
+    without re-timing (``StreamEngine.probe_cache_hits``).
+
+What is deliberately NOT saved: compiled plans, donated device staging
+buffers, and device read views.  Those are rebuild-on-demand caches keyed
+by rung, which is exactly what makes restore ELASTIC — a checkpoint from
+an 8-device mesh restores onto a single device (or any other mesh) and
+serves bit-identical query results, because labels are mesh-independent
+by the engine's cross-transport contract.  Rung metadata whose validity
+is mesh- or hardware-scoped only reinstalls when the restoring context
+matches (see ``restore_engine``).
+
+Checkpoints are commit-boundary snapshots: capturing state with a batch
+in flight would mix batch t's host mutations with batch t-1's committed
+labels, so ``engine_state`` refuses while ``engine.in_flight``.  The
+serving-policy layer (``LPService(checkpoint_every=..., ...)``) only
+snapshots at quiescent commits for the same reason.  See
+docs/persistence.md.
+"""
+
+from __future__ import annotations
+
+import json
+import logging
+
+import jax
+import numpy as np
+
+from repro.checkpoint import manager
+from repro.core.snapshot import LabelView
+from repro.core.stream import StreamEngine
+from repro.graph.dynamic import DynamicGraph
+
+logger = logging.getLogger(__name__)
+
+STATE_VERSION = 1
+
+_UNSET = object()  # "use the checkpointed value" ctor-override sentinel
+
+
+def _ingest_mode(engine: StreamEngine) -> str:
+    if engine.ingestor is None:
+        return "host"
+    return "device" if hasattr(engine.ingestor, "store") else "custom"
+
+
+def engine_state(engine: StreamEngine) -> dict:
+    """Flat ``{name: array}`` snapshot of the engine's full incremental
+    state, ready for ``checkpoint.manager.save``/``save_async``.
+
+    Mutable host arrays are copied here (the async writer's
+    ``np.asarray(device_get(...))`` does NOT copy numpy inputs, and the
+    stream mutates the graph in place while the worker writes); the
+    store's jax arrays are immutable handles and pass through as-is.
+    """
+    if engine.in_flight:
+        raise RuntimeError(
+            "cannot snapshot with a batch in flight — drain() first "
+            "(checkpoints are commit-boundary snapshots)")
+    g = engine.graph
+    state = {f"graph_{k}": v for k, v in g.state_arrays().items()}
+    meta = {
+        "version": STATE_VERSION,
+        "platform": jax.default_backend(),
+        # graph hyperparameters (reconstruct the DynamicGraph)
+        "emb_dim": g.emb_dim,
+        "k": g.k,
+        "knn_block": g.knn_block,
+        # engine hyperparameters (reconstruct the StreamEngine)
+        "delta": float(engine.delta),
+        "tau": None if engine.tau is None else float(engine.tau),
+        "max_iters": int(engine.max_iters),
+        "max_degree": engine.max_degree,
+        "backend": engine.backend,
+        "block_rows": int(engine.block_rows),
+        "interpret": engine.interpret,
+        "max_k": engine.max_k,  # resolved: int or None
+        "transport": engine.transport,
+        "mesh_devices": (int(engine.mesh.devices.size)
+                         if engine.mesh is not None else 0),
+        "backend_knob": engine._backend_knob,
+        "backend_candidates": list(engine._backend_candidates),
+        "ingest": _ingest_mode(engine),
+        # stream position + ladder history
+        "commits": int(engine.commits),
+        "batches": int(engine.batches),
+        "bucket_keys": sorted([int(u), int(k)]
+                              for u, k in engine.bucket_keys),
+        # per-rung metadata, keyed "UxK" (validity-scoped on restore)
+        "transport_modes": {f"{u}x{k}": v for (u, k), v
+                            in engine._transport_modes.items()},
+        "export_budgets": {f"{u}x{k}": int(v) for (u, k), v
+                           in engine._export_budgets.items()},
+        "backend_modes": {f"{u}x{k}": v for (u, k), v
+                          in engine._backend_modes.items()},
+        "slot_budgets": {f"{u}x{k}": int(v) for (u, k), v
+                         in engine._slot_budgets.items()},
+        # the persistent auto:measured probe cache
+        "measured": {f"{u}x{k}": v for (u, k), v
+                     in engine._measured.items()},
+        "halo_batches": int(engine.halo_batches),
+        "transport_overflows": int(engine.transport_overflows),
+        "bsr_batches": int(engine.bsr_batches),
+        "backend_overflows": int(engine.backend_overflows),
+    }
+    store = getattr(engine.ingestor, "store", None)
+    if store is not None:
+        for k, v in store.state_arrays().items():
+            state[f"store_{k}"] = v
+        meta["store_count"] = int(store.count)
+    state["meta"] = np.frombuffer(
+        json.dumps(meta).encode(), np.uint8).copy()
+    return state
+
+
+def save_engine(engine: StreamEngine, directory: str,
+                step: int | None = None) -> str:
+    """Write one atomic engine checkpoint; step defaults to the commit
+    counter (one checkpoint per commit id, latest wins on restore)."""
+    step = engine.commits if step is None else step
+    return manager.save(directory, step, engine_state(engine))
+
+
+def _rungs(d: dict, cast=lambda v: v) -> dict:
+    return {tuple(int(x) for x in key.split("x")): cast(v)
+            for key, v in d.items()}
+
+
+def restore_engine(
+    directory: str,
+    step: int | None = None,
+    *,
+    mesh: jax.sharding.Mesh | None = None,
+    transport: object = _UNSET,
+    backend: object = _UNSET,
+    block_rows: object = _UNSET,
+    interpret: object = _UNSET,
+    max_k: object = _UNSET,
+    read_placement: object = "auto",
+    ingest: object = _UNSET,
+) -> StreamEngine:
+    """Rebuild a ``StreamEngine`` from the latest (or given) checkpoint.
+
+    Elastic by construction: the checkpoint holds mesh-independent full
+    arrays, so ``mesh=`` is whatever mesh is active NOW — none (default),
+    the original, or a different one; device buffers and plans re-stage
+    on demand onto it.  Keyword overrides replace the checkpointed
+    engine knobs; unset knobs restore as saved (a saved ``"halo"``
+    transport degrades to the auto default when restoring mesh-less).
+
+    Rung metadata reinstalls only where it stays valid:
+
+      * backend decisions + bsr slot budgets — same mesh size AND same
+        resolved backend knob/candidates (a bsr rung must stay a bsr
+        rung for replayed labels to stay bit-identical);
+      * transport modes + export budgets — same mesh size AND same
+        transport knob (except ``auto:measured``, which re-derives modes
+        from the probe cache below so cache hits are observable);
+      * the ``auto:measured`` probe cache — same mesh size AND same
+        platform (the timings are hardware-scoped).
+
+    Anything dropped is simply re-derived at rung entry, exactly as on a
+    fresh stream — labels are unaffected either way.
+    """
+    if step is None:
+        step = manager.latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(
+                f"no committed checkpoint under {directory}")
+    state = manager.load_flat(directory, step)
+    meta = json.loads(bytes(state["meta"]))
+    if meta.get("version") != STATE_VERSION:
+        raise ValueError(
+            f"checkpoint state version {meta.get('version')} != "
+            f"supported {STATE_VERSION}")
+
+    g = DynamicGraph(meta["emb_dim"], k=meta["k"],
+                     knn_block=meta["knn_block"])
+    g.load_state_arrays(
+        {k[len("graph_"):]: v for k, v in state.items()
+         if k.startswith("graph_")})
+
+    if ingest is _UNSET:
+        ingest = meta["ingest"]
+        if ingest == "custom":
+            raise ValueError(
+                "checkpoint was taken with a custom ingest selector; pass "
+                "ingest=<selector instance> (or 'host'/'device') to "
+                "restore_engine")
+    if ingest == "device" and "store_valid" in state:
+        # pre-load the saved store instead of letting the engine ctor
+        # backfill from the graph: contents are equivalent, but this
+        # keeps the capacity ladder and k-th pruning thresholds exact.
+        from repro.ingest import DeviceIngestor
+
+        ingestor = DeviceIngestor(meta["emb_dim"])
+        ingestor.store.load_state_arrays(
+            {"emb": state["store_emb"], "valid": state["store_valid"],
+             "kth": state["store_kth"]}, count=meta["store_count"])
+        ingest = ingestor
+
+    if transport is _UNSET:
+        transport = meta["transport"]
+        if transport == "halo" and mesh is None:
+            transport = None  # elastic: mesh-less restore degrades to auto
+
+    engine = StreamEngine(
+        g,
+        delta=meta["delta"],
+        tau=meta["tau"],
+        max_iters=meta["max_iters"],
+        max_degree=meta["max_degree"],
+        backend=meta["backend"] if backend is _UNSET else backend,
+        block_rows=(meta["block_rows"] if block_rows is _UNSET
+                    else block_rows),
+        interpret=meta["interpret"] if interpret is _UNSET else interpret,
+        mesh=mesh,
+        max_k=meta["max_k"] if max_k is _UNSET else max_k,
+        transport=transport,
+        read_placement=read_placement,
+        ingest=ingest,
+    )
+
+    engine.commits = int(meta["commits"])
+    engine.batches = int(meta["batches"])
+    engine.bucket_keys = {(int(u), int(k))
+                          for u, k in meta["bucket_keys"]}
+    # the committed read view resumes at the saved commit id, so a
+    # restored DeviceLabelView answers exactly as the original's did
+    engine._view = LabelView.from_graph(g, commit_id=engine.commits)
+
+    n_dev = int(mesh.devices.size) if mesh is not None else 0
+    same_mesh = meta["mesh_devices"] == n_dev
+    if (same_mesh and meta["backend_knob"] == engine._backend_knob
+            and list(meta["backend_candidates"])
+            == list(engine._backend_candidates)):
+        engine._backend_modes = _rungs(meta["backend_modes"])
+        engine._slot_budgets = _rungs(meta["slot_budgets"], int)
+        engine.bsr_batches = int(meta["bsr_batches"])
+        engine.backend_overflows = int(meta["backend_overflows"])
+    if (same_mesh and meta["transport"] == engine.transport
+            and engine.transport != "auto:measured"):
+        engine._transport_modes = _rungs(meta["transport_modes"])
+        engine._export_budgets = _rungs(meta["export_budgets"], int)
+        engine.halo_batches = int(meta["halo_batches"])
+        engine.transport_overflows = int(meta["transport_overflows"])
+    if same_mesh and meta["platform"] == jax.default_backend():
+        engine._measured = _rungs(meta["measured"], dict)
+    logger.info(
+        "restored engine from %s step %d: %d nodes, %d commits, "
+        "mesh %d -> %d devices, %d cached probe rungs",
+        directory, step, g.num_nodes, engine.commits,
+        meta["mesh_devices"], n_dev, len(engine._measured))
+    return engine

@@ -281,6 +281,9 @@ class StreamEngine:
         self.bsr_batches = 0  # batches solved on the bsr backend
         self.backend_overflows = 0  # bsr batches forced onto ell_pallas
         self._measured: dict[tuple[int, int], dict] = {}  # auto:measured
+        # rungs whose auto:measured decision came from a PERSISTED probe
+        # cache (core.persistence) instead of a fresh timed sweep
+        self.probe_cache_hits = 0
         # per-engine max_k truncation-warning dedup (a fresh engine warns
         # again instead of inheriting another engine's state)
         self._max_k_warned: set[tuple[int, int]] = set()
@@ -486,8 +489,10 @@ class StreamEngine:
             else:
                 budget = partition.export_budget(layout, len(host.unl_ids))
                 if self.transport == "auto:measured":
-                    mode = self._measure_rung_transport(key, host, layout,
-                                                        budget, backend)
+                    mode = self._measured_mode(key)
+                    if mode is None:
+                        mode = self._measure_rung_transport(
+                            key, host, layout, budget, backend)
                 else:
                     frac = budget * n_dev / key[0]
                     mode = ("halo" if self.transport == "halo"
@@ -551,6 +556,24 @@ class StreamEngine:
             staged=staged, backend=backend_this, transport="allgather",
             plan=self._plan_for(key, backend_this, num_slots),
             rows=rows, perm=perm, slot=slot, num_slots=num_slots)
+
+    # ------------------------------------------------------------------ #
+    def _measured_mode(self, key) -> str | None:
+        """Consult the persisted ``auto:measured`` probe cache: a restored
+        engine re-entering a rung it (or a predecessor process) already
+        timed picks the winner from the cached per-transport sweep times
+        instead of paying two probe compiles + timed sweeps again
+        (docs/persistence.md §Probe cache).  Returns None on a miss."""
+        cached = self._measured.get(key)
+        if cached is None:
+            return None
+        mode = "halo" if cached["halo"] <= cached["allgather"] else "allgather"
+        self.probe_cache_hits += 1
+        logger.info(
+            "stream transport: rung %s probe-cache hit (halo %.2f ms vs "
+            "all-gather %.2f ms cached) — taking %s without re-probing",
+            key, cached["halo"], cached["allgather"], mode)
+        return mode
 
     # ------------------------------------------------------------------ #
     def _measure_rung_transport(self, key, host, layout, budget,
@@ -871,7 +894,38 @@ class StreamEngine:
             "bsr_batches": self.bsr_batches,
             "backend_overflows": self.backend_overflows,
             "measured_sweep_ms": by_rung(self._measured),
+            "probe_cache_hits": self.probe_cache_hits,
         }
+
+    # ------------------------------------------------------------------ #
+    def checkpoint(self, directory: str, step: int | None = None) -> str:
+        """Write one atomic checkpoint of the full incremental state
+        (graph buffers, embedding store, rung metadata, probe cache,
+        commit counter) under ``directory``; step defaults to the commit
+        counter.  Commit-boundary only: raises while a batch is in
+        flight — ``drain()`` first.  See ``core.persistence``."""
+        from repro.core import persistence
+
+        return persistence.save_engine(self, directory, step)
+
+    def checkpoint_state(self) -> dict:
+        """The flat checkpoint tree (for ``CheckpointManager.save_async``
+        off-path writes — the ``LPService`` policy path); same
+        commit-boundary contract as ``checkpoint``."""
+        from repro.core import persistence
+
+        return persistence.engine_state(self)
+
+    @classmethod
+    def restore(cls, directory: str, step: int | None = None,
+                **overrides) -> "StreamEngine":
+        """Rebuild an engine from the latest (or given) checkpoint,
+        elastically re-sharded onto whatever ``mesh=`` is active now;
+        other keyword overrides replace the checkpointed engine knobs.
+        See ``core.persistence.restore_engine``."""
+        from repro.core import persistence
+
+        return persistence.restore_engine(directory, step, **overrides)
 
     # ------------------------------------------------------------------ #
     def predictions(self, cutoff: float = 0.5) -> tuple[np.ndarray, np.ndarray]:

@@ -236,6 +236,36 @@ class DynamicGraph:
         return self.knn_wgt[rows, self.k - 1]
 
     # ------------------------------------------------------------------ #
+    def state_arrays(self) -> dict[str, np.ndarray]:
+        """Host COPIES of the full mutable state (per-vertex buffers sliced
+        to ``num_nodes`` + the undirected edge arrays) for persistence.
+
+        Copies are load-bearing: the checkpoint writer runs on a worker
+        thread while the stream keeps mutating these arrays in place, so
+        handing out views would tear the snapshot
+        (``core.persistence``/docs/persistence.md).
+        """
+        return {name: getattr(self, name).copy() for name in
+                ("emb", "embn", "labels", "alive", "f", "knn_idx",
+                 "knn_wgt", "src", "dst", "wgt")}
+
+    def load_state_arrays(self, arrays: dict[str, np.ndarray]) -> None:
+        """Adopt a ``state_arrays`` snapshot (restore path).  Capacity
+        regrows on the same doubling ladder, so a restored graph appends
+        with identical amortized economics."""
+        n = len(arrays["labels"])
+        self._ensure_capacity(n)
+        for name, attr in (("emb", "_emb_b"), ("embn", "_embn_b"),
+                           ("labels", "_labels_b"), ("alive", "_alive_b"),
+                           ("f", "_f_b"), ("knn_idx", "_ki_b"),
+                           ("knn_wgt", "_kw_b")):
+            getattr(self, attr)[:n] = arrays[name]
+        self._reslice(n)
+        self.src = np.asarray(arrays["src"], np.int64)
+        self.dst = np.asarray(arrays["dst"], np.int64)
+        self.wgt = np.asarray(arrays["wgt"], np.float32)
+
+    # ------------------------------------------------------------------ #
     def apply_batch(
         self,
         batch: BatchUpdate,

@@ -134,6 +134,26 @@ class EmbeddingStore:
         self.kth = jnp.asarray(kth_h)
         self.count = n
 
+    def state_arrays(self) -> dict[str, jax.Array]:
+        """The store's full device state for persistence.  jax arrays are
+        immutable — mutations REPLACE ``self.emb`` etc. — so these handles
+        stay torn-write-safe even under an async checkpoint writer."""
+        return {"emb": self.emb, "valid": self.valid, "kth": self.kth}
+
+    def load_state_arrays(self, arrays, count: int) -> None:
+        """Adopt a ``state_arrays`` snapshot (restore path).  The saved
+        capacity is already a ladder bucket, so the jit-cache economics of
+        the restored store match the original's."""
+        emb = np.asarray(arrays["emb"], np.float32)
+        if emb.shape[1] != self.dp:
+            raise ValueError(
+                f"store snapshot dim {emb.shape[1]} != padded dim {self.dp} "
+                f"(emb_dim {self.emb_dim})")
+        self.emb = jnp.asarray(emb)
+        self.valid = jnp.asarray(np.asarray(arrays["valid"], bool))
+        self.kth = jnp.asarray(np.asarray(arrays["kth"], np.float32))
+        self.count = int(count)
+
     def append(self, embn: np.ndarray) -> tuple[jax.Array, jax.Array, int]:
         """Append a normalized batch at the next free rows.
 

@@ -174,11 +174,20 @@ class ServiceDriver(threading.Thread):
         for t, r in zip(tickets, results):
             t._fulfil(result=r)
 
+    def halt(self):
+        """Signal the loop to exit WITHOUT joining.  Safe to call from
+        the driver thread itself — the service's preemption handler runs
+        inside ``pump()``, which the driver may be clocking — where
+        ``stop()``'s self-join would deadlock.  The loop still drains
+        queued tickets before exiting; call ``stop()`` from another
+        thread afterwards to join and close the batcher."""
+        self._halt.set()
+        self._batcher._wake.set()
+
     def stop(self, timeout: float = 30.0):
         """Signal, drain in-flight tickets, join; then fulfil anything
         that raced past the close with an error so no caller hangs."""
-        self._halt.set()
-        self._batcher._wake.set()
+        self.halt()
         self.join(timeout)
         for t in self._batcher.close():
             t._fulfil(error=RuntimeError("service driver stopped"))

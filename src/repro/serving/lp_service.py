@@ -41,6 +41,16 @@ Backpressure: when queued + in-flight operations would exceed
 (default) or raises ``Backpressure`` (``reject_on_overload=True``) so
 callers can shed load.  See docs/serving.md.
 
+Durability: ``checkpoint_every``/``checkpoint_dir`` snapshot the FULL
+engine state (``core.persistence``) off the caller path at quiescent
+commit boundaries via ``CheckpointManager.save_async``, and
+``arm_preemption()`` turns SIGTERM/SIGINT into a "drain in-flight,
+checkpoint, exit clean" shutdown; a restarted process resumes
+bit-identically with ``StreamEngine.restore``.  Async write failures
+re-raise at the next ``mutate``/``sync`` — a service whose snapshots
+are failing never pretends its state is durable.  See
+docs/persistence.md.
+
 Engine-level knobs ride along with the engine the service wraps: a
 mesh-sharded engine serves through the ``transport`` it was built with
 ("allgather"/"halo"/"auto" — docs/streaming.md §Transports;
@@ -59,10 +69,12 @@ import time
 
 import numpy as np
 
+from repro.checkpoint.manager import CheckpointManager
 from repro.core.snapshot import LabelView
 from repro.core.stream import StreamEngine, StreamStats
 from repro.graph.dynamic import UNLABELED, BatchUpdate
 from repro.serving.engine import ReadBatcher, ReadTicket, ServiceDriver
+from repro.training.resilience import PreemptionGuard
 
 
 class Backpressure(RuntimeError):
@@ -121,6 +133,9 @@ class ServiceStats:
     commit_latency_ms: dict  # p50/p95/p99/max over the last <=4096 commits
     transport: dict  # StreamEngine.transport_summary(): requested knob,
     # per-rung allgather/halo decisions, halo batch + overflow counts
+    checkpoints_written: int = 0  # policy snapshots taken (async + final)
+    last_checkpoint_commit: int = 0  # engine commit the newest covers
+    preempted: bool = False  # drain-checkpoint-halt shutdown has run
 
 
 @dataclasses.dataclass
@@ -155,11 +170,35 @@ class LPService:
         reject_on_overload: bool = False,
         cutoff: float = 0.5,
         driver_poll_ms: float = 2.0,
+        checkpoint_every: int | None = None,
+        checkpoint_dir: str | None = None,
+        checkpoint_keep: int = 3,
     ):
         if window_ops < 1:
             raise ValueError("window_ops must be >= 1")
         if max_pending_ops < window_ops:
             raise ValueError("max_pending_ops must be >= window_ops")
+        # checkpoint policy: every ``checkpoint_every`` commits the full
+        # engine state snapshots to ``checkpoint_dir`` OFF the caller
+        # path (CheckpointManager.save_async — callers only pay the host
+        # copy), always at a quiescent commit boundary.  A directory
+        # without a cadence still arms the preemption/shutdown final
+        # snapshot.  See docs/persistence.md.
+        if checkpoint_every is not None:
+            if checkpoint_every < 1:
+                raise ValueError("checkpoint_every must be >= 1")
+            if checkpoint_dir is None:
+                raise ValueError(
+                    "checkpoint_every requires checkpoint_dir")
+        self.checkpoint_every = checkpoint_every
+        self._ckpt_mgr = (CheckpointManager(checkpoint_dir,
+                                            keep=checkpoint_keep)
+                          if checkpoint_dir is not None else None)
+        self._last_ckpt_commit = engine.commits
+        self.checkpoints_written = 0
+        self._ckpt_error: BaseException | None = None
+        self._guard: PreemptionGuard | None = None
+        self.preempted = False
         self.engine = engine
         self.window_ops = window_ops
         self.window_ms = window_ms
@@ -248,6 +287,100 @@ class LPService:
     def driver_running(self) -> bool:
         d = self._driver
         return d is not None and d.is_alive()
+
+    # ------------------------------------------------------------------ #
+    # durability: checkpoint policy + preemption-driven shutdown
+    # ------------------------------------------------------------------ #
+    def arm_preemption(self, guard: PreemptionGuard | None = None
+                       ) -> PreemptionGuard:
+        """Install (or adopt) a ``PreemptionGuard``: once SIGTERM/SIGINT
+        is delivered, the next ``pump()`` tick — the driver's, or any
+        caller's — drains in-flight work, writes one final synchronous
+        checkpoint (when a ``checkpoint_dir`` is configured), and halts
+        the driver so the process can exit clean.  Afterwards
+        ``preempted`` is True and new mutations are refused; restart and
+        ``StreamEngine.restore`` to resume.  Returns the guard (use it
+        as a context manager to guarantee handler restoration)."""
+        with self._lock:
+            self._guard = guard if guard is not None else PreemptionGuard()
+            return self._guard
+
+    def shutdown(self) -> int | None:
+        """Graceful "drain in-flight, checkpoint, exit clean": stop the
+        driver, flush + commit every queued mutation, then write one
+        final SYNCHRONOUS checkpoint.  Returns the checkpointed commit
+        id (None when no ``checkpoint_dir`` is configured).  The
+        preemption path does the same dance from inside ``pump()``."""
+        self.stop()
+        self.sync()
+        if self._ckpt_mgr is None:
+            return None
+        with self._lock:
+            return self._checkpoint_sync()
+
+    def _checkpoint_sync(self) -> int:
+        """Final/forced snapshot at the current (quiescent) commit."""
+        step = self.engine.commits
+        self._ckpt_mgr.save_sync(step, self.engine.checkpoint_state())
+        self._last_ckpt_commit = step
+        self.checkpoints_written += 1
+        return step
+
+    def _maybe_checkpoint(self):
+        """Policy snapshot at a commit boundary (called from ``_resolve``
+        with ``_lock`` held).  Only fires when the engine is quiescent —
+        ``_admit`` resolves the PREVIOUS batch's tickets with the next
+        already in flight, and a snapshot there would tear — so a cadence
+        point reached mid-pipeline simply waits for the next quiescent
+        commit.  Write failures never kill the driver thread: they are
+        recorded and re-raised to the next ``mutate``/``sync`` caller."""
+        if (self._ckpt_mgr is None or self.checkpoint_every is None
+                or self.preempted or self.engine.in_flight):
+            return
+        if (self.engine.commits - self._last_ckpt_commit
+                < self.checkpoint_every):
+            return
+        try:
+            self._ckpt_mgr.save_async(self.engine.commits,
+                                      self.engine.checkpoint_state())
+        except Exception as e:  # surfaced at the next mutate()/sync()
+            if self._ckpt_error is None:
+                self._ckpt_error = e
+            return
+        self._last_ckpt_commit = self.engine.commits
+        self.checkpoints_written += 1
+
+    def _raise_ckpt_error(self):
+        """Surface an async checkpoint-write failure to the caller (the
+        durability contract: a service whose snapshots are failing must
+        not keep accepting writes as if its state were durable)."""
+        if self._ckpt_error is not None:
+            err, self._ckpt_error = self._ckpt_error, None
+            raise RuntimeError(
+                "engine checkpointing failed; durable state is stale "
+                f"(last good commit {self._last_ckpt_commit})") from err
+
+    def _handle_preemption(self):
+        """Drain in-flight, checkpoint, halt — with ``_lock`` held.
+
+        Runs on whichever thread's ``pump()`` first observes the guard:
+        possibly the driver's own, so the driver is HALTED (flag only),
+        never joined here — ``stop()``/``shutdown()`` from another
+        thread completes the join."""
+        self.preempted = True
+        self._admit()
+        st = self.engine.drain()
+        if st is not None:
+            self._resolve(st)
+        if self._ckpt_mgr is not None:
+            try:
+                self._checkpoint_sync()
+            except Exception as e:  # the exit path must still halt
+                if self._ckpt_error is None:
+                    self._ckpt_error = e
+        d = self._driver
+        if d is not None:
+            d.halt()
 
     # ------------------------------------------------------------------ #
     # read path
@@ -394,6 +527,11 @@ class LPService:
                 "empty mutation: no inserts, deletes or relabels")
 
         with self._lock:
+            if self.preempted:
+                raise RuntimeError(
+                    "service preempted: state was checkpointed and the "
+                    "driver halted — restart and restore to resume")
+            self._raise_ckpt_error()
             self.pump()  # harvest a finished solve / deadline-flush first
             if self._pending_ops() + ops > self.max_pending_ops:
                 if self.reject_on_overload:
@@ -432,6 +570,9 @@ class LPService:
                     or (time.perf_counter() - self._window_t0) * 1e3
                     >= self.window_ms):
                 self._admit()
+            if (self._guard is not None and self._guard.requested
+                    and not self.preempted):
+                self._handle_preemption()
             return st
 
     def _driver_pump(self) -> int:
@@ -479,6 +620,7 @@ class LPService:
         are answered from the view this drain publishes.  Returns the
         last commit's stats."""
         with self._lock:
+            self._raise_ckpt_error()
             self._admit()
             st = self.engine.drain()
             if st is not None:
@@ -540,6 +682,7 @@ class LPService:
         self._inflight = []
         self._inflight_ops = 0
         self.batches_committed += 1
+        self._maybe_checkpoint()
 
     # ------------------------------------------------------------------ #
     def stats(self) -> ServiceStats:
@@ -578,4 +721,7 @@ class LPService:
             bucket_rungs=len(self.engine.bucket_keys),
             commit_latency_ms=pct,
             transport=self.engine.transport_summary(),
+            checkpoints_written=self.checkpoints_written,
+            last_checkpoint_commit=self._last_ckpt_commit,
+            preempted=self.preempted,
         )

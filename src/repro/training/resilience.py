@@ -18,6 +18,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import logging
 import signal
 import statistics
 import time
@@ -26,20 +27,54 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+logger = logging.getLogger(__name__)
+
 
 class PreemptionGuard:
-    def __init__(self, signals=(signal.SIGTERM,)):
+    """Turn SIGTERM/SIGINT into a "checkpoint now, then exit cleanly" flag.
+
+    Handlers install on construction (both signals by default, matching the
+    module docstring) and are re-armable: ``restore()`` puts the previous
+    handlers back AND resets ``requested``, so the same guard can be
+    installed again with ``install()``.  The context-manager form guarantees
+    handler restoration even if the guarded block raises::
+
+        with PreemptionGuard() as guard:
+            ...
+            if guard.requested:
+                checkpoint_and_exit()
+    """
+
+    def __init__(self, signals=(signal.SIGTERM, signal.SIGINT)):
         self.requested = False
+        self._signals = tuple(signals)
         self._old = {}
-        for sig in signals:
-            self._old[sig] = signal.signal(sig, self._handler)
+        self.install()
+
+    def install(self):
+        """(Re-)register the signal handlers.  Idempotent."""
+        for sig in self._signals:
+            if sig not in self._old:
+                self._old[sig] = signal.signal(sig, self._handler)
+        return self
 
     def _handler(self, signum, frame):
         self.requested = True
 
     def restore(self):
+        """Restore the pre-install handlers and reset ``requested`` so the
+        guard can be re-armed with ``install()``."""
         for sig, old in self._old.items():
             signal.signal(sig, old)
+        self._old = {}
+        self.requested = False
+
+    def __enter__(self):
+        return self.install()
+
+    def __exit__(self, exc_type, exc, tb):
+        self.restore()
+        return False
 
 
 @dataclasses.dataclass
@@ -63,7 +98,15 @@ class StragglerMonitor:
         self._t0 = time.perf_counter()
 
     def end_step(self) -> StragglerEvent | None:
+        if self._t0 is None:
+            # end_step() without a matching start_step() used to TypeError
+            # on ``perf_counter() - None``; an unmatched call carries no
+            # timing signal, so warn and no-op instead of crashing the loop.
+            logger.warning("StragglerMonitor.end_step() without start_step();"
+                           " ignoring this step")
+            return None
         dt = time.perf_counter() - self._t0
+        self._t0 = None
         self._step += 1
         event = None
         if len(self.times) >= 8:

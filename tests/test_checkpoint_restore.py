@@ -1,0 +1,541 @@
+"""Durable engine state: crash-safe checkpoint/restore for StreamEngine
+and LPService (docs/persistence.md).
+
+In-process tests cover the roundtrip contract (restored state bit-
+identical, counters and rung metadata resume, commit-boundary refusal),
+the service checkpoint policy (async cadence writes, final synchronous
+shutdown snapshot, failure surfacing, preemption drain) and the probe
+cache.  The fault-injection arms run a victim SUBPROCESS that kills
+itself with ``os._exit`` mid-drain — the in-flight solve is lost, any
+in-flight async checkpoint write is torn — then restore from the latest
+complete checkpoint and replay the remaining stream: final labels must
+match an uninterrupted oracle bit for bit, on a single device AND on a
+forced 8-virtual-device mesh (same pattern as tests/test_halo_lp.py).
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import manager as ckpt
+from repro.core.stream import StreamEngine
+from repro.data.synth import StreamSpec, gaussian_mixture_stream
+from repro.graph.dynamic import DynamicGraph
+from repro.launch.mesh import make_stream_mesh
+from repro.serving.lp_service import LPService
+from repro.training.resilience import PreemptionGuard
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+
+SPEC = StreamSpec(total_vertices=300, batch_size=60, seed=7,
+                  class_sep=6.0, noise=0.9)
+
+# the fault-injection stream (shared between victim scripts and the
+# in-test oracles — keyword dict so both sides build the same spec)
+KILL_SPEC = dict(total_vertices=320, batch_size=40, seed=9, emb_dim=4,
+                 class_sep=6.0, noise=0.9, frac_deleted=0.12,
+                 frac_unlabeled=0.85, frac_labeled=0.03)
+KILL_AT = 5  # batch whose drain the victim dies in (of 8)
+
+_GRAPH_KEYS = ("f", "labels", "alive", "knn_idx", "knn_wgt", "src", "dst",
+               "wgt")
+
+
+def _batches(spec_kw=None):
+    spec = SPEC if spec_kw is None else StreamSpec(**spec_kw)
+    return [b for b, _ in gaussian_mixture_stream(spec)]
+
+
+def _assert_graphs_equal(g, g_ref):
+    for name in _GRAPH_KEYS:
+        np.testing.assert_array_equal(getattr(g, name), getattr(g_ref, name),
+                                      err_msg=name)
+
+
+def _service(eng, **kw):
+    kw.setdefault("window_ops", 10_000)
+    kw.setdefault("window_ms", 1e9)  # admission only via flush()
+    kw.setdefault("max_pending_ops", 100_000)
+    return LPService(eng, **kw)
+
+
+def _feed(svc, batch):
+    svc.mutate(ins_emb=batch.ins_emb, ins_labels=batch.ins_labels,
+               del_ids=batch.del_ids)
+    svc.flush()
+    svc.sync()
+
+
+# ---------------------------------------------------------------------- #
+# engine roundtrip
+# ---------------------------------------------------------------------- #
+def test_engine_checkpoint_restore_roundtrip(tmp_path):
+    """Checkpoint mid-stream, restore in the same process, replay the
+    rest: every graph array, the counters and the committed view match
+    the uninterrupted engine bit for bit."""
+    batches = _batches()
+    g_ref = DynamicGraph(emb_dim=SPEC.emb_dim, k=5)
+    ref = StreamEngine(g_ref, delta=1e-4)
+    for b in batches:
+        ref.step(b)
+
+    g = DynamicGraph(emb_dim=SPEC.emb_dim, k=5)
+    eng = StreamEngine(g, delta=1e-4)
+    for b in batches[:3]:
+        eng.step(b)
+    eng.checkpoint(str(tmp_path))
+    assert ckpt.latest_step(str(tmp_path)) == eng.commits
+
+    r = StreamEngine.restore(str(tmp_path))
+    assert r.commits == eng.commits and r.batches == eng.batches
+    assert r.bucket_keys == eng.bucket_keys
+    assert r.committed_view().commit_id == eng.commits
+    for b in batches[3:]:
+        r.step(b)
+    _assert_graphs_equal(r.graph, g_ref)
+    # the committed device view answers exactly as the oracle's does
+    ids = np.flatnonzero(g_ref.alive)
+    pred_r, conf_r = r.device_view().query(ids, 0.5)
+    pred_o, conf_o = ref.device_view().query(ids, 0.5)
+    np.testing.assert_array_equal(pred_r, pred_o)
+    np.testing.assert_array_equal(conf_r, conf_o)
+
+
+def test_checkpoint_refuses_in_flight(tmp_path):
+    """Checkpoints are commit-boundary snapshots: with a batch in flight
+    the engine refuses, and succeeds after the drain."""
+    batches = _batches()
+    g = DynamicGraph(emb_dim=SPEC.emb_dim, k=5)
+    eng = StreamEngine(g, delta=1e-4)
+    eng.submit(batches[0])
+    assert eng.in_flight
+    with pytest.raises(RuntimeError, match="in flight"):
+        eng.checkpoint(str(tmp_path))
+    eng.drain()
+    eng.checkpoint(str(tmp_path))
+    assert ckpt.latest_step(str(tmp_path)) == eng.commits
+
+
+def test_restore_device_ingest_preserves_store(tmp_path):
+    """A device-ingest engine restores its EmbeddingStore contents —
+    count, capacity rung and k-th pruning thresholds — and the replayed
+    stream stays bit-identical to the uninterrupted device-ingest run."""
+    batches = _batches()
+    g_ref = DynamicGraph(emb_dim=SPEC.emb_dim, k=5)
+    ref = StreamEngine(g_ref, delta=1e-4, ingest="device")
+    for b in batches:
+        ref.step(b)
+
+    g = DynamicGraph(emb_dim=SPEC.emb_dim, k=5)
+    eng = StreamEngine(g, delta=1e-4, ingest="device")
+    for b in batches[:3]:
+        eng.step(b)
+    eng.checkpoint(str(tmp_path))
+
+    r = StreamEngine.restore(str(tmp_path))
+    store, orig = r.ingestor.store, eng.ingestor.store
+    assert store.count == orig.count
+    assert store.capacity == orig.capacity
+    np.testing.assert_array_equal(np.asarray(store.valid),
+                                  np.asarray(orig.valid))
+    np.testing.assert_array_equal(np.asarray(store.kth),
+                                  np.asarray(orig.kth))
+    for b in batches[3:]:
+        r.step(b)
+    _assert_graphs_equal(r.graph, g_ref)
+
+
+def test_restore_latest_default_and_step_selection(tmp_path):
+    """restore() picks the newest complete step by default, honors an
+    explicit older step, and fails loudly with no committed checkpoint."""
+    with pytest.raises(FileNotFoundError, match="no committed checkpoint"):
+        StreamEngine.restore(str(tmp_path))
+    batches = _batches()
+    g = DynamicGraph(emb_dim=SPEC.emb_dim, k=5)
+    eng = StreamEngine(g, delta=1e-4)
+    eng.step(batches[0])
+    eng.checkpoint(str(tmp_path))
+    first = eng.commits
+    eng.step(batches[1])
+    eng.checkpoint(str(tmp_path))
+    assert StreamEngine.restore(str(tmp_path)).commits == eng.commits
+    assert StreamEngine.restore(str(tmp_path), step=first).commits == first
+
+
+def test_restore_probe_cache_and_rung_metadata(tmp_path):
+    """auto:measured restore on the same mesh size reinstates the probe
+    cache: rungs measured before the checkpoint are NOT re-timed (their
+    sweep numbers survive verbatim, ``probe_cache_hits`` ticks on multi-
+    device meshes) and replayed labels match the uninterrupted engine."""
+    mesh = make_stream_mesh()
+    batches = _batches()
+    g_ref = DynamicGraph(emb_dim=SPEC.emb_dim, k=5)
+    ref = StreamEngine(g_ref, delta=1e-4, mesh=mesh,
+                       transport="auto:measured")
+    for b in batches:
+        ref.step(b)
+
+    g = DynamicGraph(emb_dim=SPEC.emb_dim, k=5)
+    eng = StreamEngine(g, delta=1e-4, mesh=mesh, transport="auto:measured")
+    for b in batches[:3]:
+        eng.step(b)
+    eng.checkpoint(str(tmp_path))
+    cached = dict(eng._measured)
+
+    r = StreamEngine.restore(str(tmp_path), mesh=make_stream_mesh(),
+                             transport="auto:measured")
+    assert r._measured == cached
+    for b in batches[3:]:
+        r.step(b)
+    _assert_graphs_equal(r.graph, g_ref)
+    summary = r.transport_summary()
+    # cached rungs were never re-timed: their sweeps survive verbatim
+    for key, sweep in cached.items():
+        assert r._measured[key] == sweep
+    if mesh.devices.size > 1 and cached:
+        assert summary["probe_cache_hits"] >= 1, summary
+
+
+def test_restore_drops_stale_rung_metadata_on_knob_change(tmp_path):
+    """Rung decisions whose validity scope breaks (different transport
+    knob here) are dropped and re-derived — the restored engine still
+    replays bit-identically, just from a clean slate."""
+    batches = _batches()
+    g_ref = DynamicGraph(emb_dim=SPEC.emb_dim, k=5)
+    ref = StreamEngine(g_ref, delta=1e-4)
+    for b in batches:
+        ref.step(b)
+
+    g = DynamicGraph(emb_dim=SPEC.emb_dim, k=5)
+    eng = StreamEngine(g, delta=1e-4, mesh=make_stream_mesh(),
+                       transport="allgather")
+    for b in batches[:3]:
+        eng.step(b)
+    eng.checkpoint(str(tmp_path))
+    r = StreamEngine.restore(str(tmp_path), transport=None)  # mesh-less
+    assert r._transport_modes == {}  # stale decisions dropped, not kept
+    for b in batches[3:]:
+        r.step(b)
+    _assert_graphs_equal(r.graph, g_ref)
+
+
+# ---------------------------------------------------------------------- #
+# service checkpoint policy
+# ---------------------------------------------------------------------- #
+def test_service_checkpoint_cadence_async(tmp_path):
+    """checkpoint_every writes async snapshots at quiescent commit
+    boundaries; the newest restores to exactly the served state."""
+    g = DynamicGraph(emb_dim=SPEC.emb_dim, k=5)
+    svc = _service(StreamEngine(g, delta=1e-4), checkpoint_every=2,
+                   checkpoint_dir=str(tmp_path))
+    batches = _batches()
+    for b in batches:
+        _feed(svc, b)
+    svc._ckpt_mgr.wait()  # settle the last async write before asserting
+    st = svc.stats()
+    assert st.checkpoints_written >= 2
+    # the newest snapshot is never more than one cadence behind
+    assert svc.engine.commits - st.last_checkpoint_commit < 2
+    assert ckpt.latest_step(str(tmp_path)) == st.last_checkpoint_commit
+    r = StreamEngine.restore(str(tmp_path))
+    for b in batches[r.batches:]:
+        r.step(b)
+    _assert_graphs_equal(r.graph, g)
+
+
+def test_service_shutdown_writes_final_sync_checkpoint(tmp_path):
+    """shutdown() drains everything and writes one final synchronous
+    snapshot — even without a cadence — returning its commit id."""
+    g = DynamicGraph(emb_dim=SPEC.emb_dim, k=5)
+    svc = _service(StreamEngine(g, delta=1e-4),
+                   checkpoint_dir=str(tmp_path))
+    batches = _batches()
+    for b in batches[:2]:
+        _feed(svc, b)
+    # one more mutation left un-synced: shutdown must flush + commit it
+    svc.mutate(ins_emb=batches[2].ins_emb, ins_labels=batches[2].ins_labels,
+               del_ids=batches[2].del_ids)
+    step = svc.shutdown()
+    assert step == svc.engine.commits == 3
+    assert ckpt.latest_step(str(tmp_path)) == step
+    r = StreamEngine.restore(str(tmp_path))
+    _assert_graphs_equal(r.graph, g)
+    # no checkpoint_dir -> shutdown still drains, returns None
+    svc2 = _service(StreamEngine(DynamicGraph(emb_dim=SPEC.emb_dim, k=5),
+                                 delta=1e-4))
+    _feed(svc2, batches[0])
+    assert svc2.shutdown() is None
+
+
+def test_service_async_checkpoint_failure_surfaces(tmp_path):
+    """An async snapshot that fails to write must re-raise at the next
+    mutate()/sync() — the service never pretends broken durability."""
+    ckdir = tmp_path / "ck"
+    g = DynamicGraph(emb_dim=SPEC.emb_dim, k=5)
+    svc = _service(StreamEngine(g, delta=1e-4), checkpoint_every=1,
+                   checkpoint_dir=str(ckdir))
+    batches = _batches()
+    _feed(svc, batches[0])
+    svc._ckpt_mgr.wait()
+    # sabotage: the checkpoint directory becomes a plain file, so every
+    # subsequent write fails (works under root, unlike chmod tricks)
+    import shutil
+
+    shutil.rmtree(ckdir)
+    ckdir.write_text("not a directory")
+    # first failing write parks the error on the manager's worker; the
+    # next cadence surfaces it into the service, then mutate() raises
+    _feed(svc, batches[1])
+    with pytest.raises(RuntimeError, match="durable state is stale"):
+        for b in batches[2:]:
+            _feed(svc, b)
+    # the error is delivered once; the service keeps serving afterwards
+    _feed(svc, batches[-1])
+
+
+def test_service_preemption_drains_checkpoints_halts(tmp_path):
+    """The preemption flow: signal -> next pump() drains the in-flight
+    batch, writes a final sync checkpoint, halts the driver; afterwards
+    mutations are refused and the checkpoint restores the drained state."""
+    g = DynamicGraph(emb_dim=SPEC.emb_dim, k=5)
+    svc = _service(StreamEngine(g, delta=1e-4),
+                   checkpoint_dir=str(tmp_path))
+    guard = svc.arm_preemption(PreemptionGuard(signals=()))
+    batches = _batches()
+    svc.start()
+    for b in batches[:2]:
+        _feed(svc, b)
+    # leave a batch in flight, then "deliver" the signal
+    svc.mutate(ins_emb=batches[2].ins_emb, ins_labels=batches[2].ins_labels,
+               del_ids=batches[2].del_ids)
+    svc.flush()
+    assert svc.engine.in_flight
+    guard.requested = True
+    svc.pump()  # any clock tick observes the guard
+    st = svc.stats()
+    assert st.preempted and not svc.engine.in_flight
+    assert st.last_checkpoint_commit == svc.engine.commits == 3
+    assert ckpt.latest_step(str(tmp_path)) == 3
+    with pytest.raises(RuntimeError, match="preempted"):
+        svc.mutate(ins_emb=batches[3].ins_emb)
+    svc.stop()  # completes the driver join from outside
+    assert not svc.driver_running
+    r = StreamEngine.restore(str(tmp_path))
+    _assert_graphs_equal(r.graph, g)
+
+
+def test_service_checkpoint_policy_validation(tmp_path):
+    eng = StreamEngine(DynamicGraph(emb_dim=4, k=3), delta=1e-4)
+    with pytest.raises(ValueError, match="requires checkpoint_dir"):
+        LPService(eng, checkpoint_every=4)
+    with pytest.raises(ValueError, match="checkpoint_every"):
+        LPService(eng, checkpoint_every=0, checkpoint_dir=str(tmp_path))
+
+
+# ---------------------------------------------------------------------- #
+# fault injection: kill mid-drain, restore, replay, compare
+# ---------------------------------------------------------------------- #
+# The victim runs the service with a per-commit checkpoint cadence, then
+# dies with os._exit INSIDE the drain of batch KILL_AT: the in-flight
+# solve never commits and the newest async checkpoint write may be torn
+# mid-write.  Exit code 137 proves the kill happened where intended.
+VICTIM = textwrap.dedent("""
+    import os, sys
+    os.environ["XLA_FLAGS"] = \\
+        "--xla_force_host_platform_device_count={ndev}"
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    sys.path.insert(0, {src!r})
+    import numpy as np
+    from repro.core.stream import StreamEngine
+    from repro.data.synth import StreamSpec, gaussian_mixture_stream
+    from repro.graph.dynamic import DynamicGraph
+    from repro.launch.mesh import make_stream_mesh
+    from repro.serving.lp_service import LPService
+
+    spec = StreamSpec(**{spec!r})
+    batches = [b for b, _ in gaussian_mixture_stream(spec)]
+    mesh = make_stream_mesh() if {use_mesh} else None
+    if mesh is not None:
+        assert mesh.devices.size == {ndev}
+    g = DynamicGraph(emb_dim=spec.emb_dim, k=5)
+    eng = StreamEngine(g, delta=1e-4, mesh=mesh, ingest={ingest!r})
+    svc = LPService(eng, window_ops=10_000, window_ms=1e9,
+                    max_pending_ops=100_000, checkpoint_every=1,
+                    checkpoint_dir={dir!r})
+    for b in batches[:{kill}]:
+        svc.mutate(ins_emb=b.ins_emb, ins_labels=b.ins_labels,
+                   del_ids=b.del_ids)
+        svc.flush()
+        svc.sync()
+    b = batches[{kill}]
+    svc.mutate(ins_emb=b.ins_emb, ins_labels=b.ins_labels,
+               del_ids=b.del_ids)
+    svc.flush()
+    assert eng.in_flight
+    eng.drain = lambda: os._exit(137)  # die mid-drain of batch {kill}
+    svc.sync()
+    raise SystemExit("unreachable: the drain should have killed us")
+""")
+
+# Replays the remaining stream from the latest complete checkpoint and
+# compares against an uninterrupted in-process oracle (used standalone
+# for the forced-8-device arm; the single-device arm does this inline).
+CHECKER = textwrap.dedent("""
+    import os, sys
+    os.environ["XLA_FLAGS"] = \\
+        "--xla_force_host_platform_device_count={ndev}"
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    sys.path.insert(0, {src!r})
+    import numpy as np
+    from repro.core.stream import StreamEngine
+    from repro.data.synth import StreamSpec, gaussian_mixture_stream
+    from repro.graph.dynamic import DynamicGraph
+    from repro.launch.mesh import make_stream_mesh
+
+    spec = StreamSpec(**{spec!r})
+    batches = [b for b, _ in gaussian_mixture_stream(spec)]
+    mesh = make_stream_mesh() if {use_mesh} else None
+    g_ref = DynamicGraph(emb_dim=spec.emb_dim, k=5)
+    ref = StreamEngine(g_ref, delta=1e-4, mesh=mesh, ingest={ingest!r})
+    for b in batches:
+        ref.step(b)
+
+    r = StreamEngine.restore({dir!r}, mesh=make_stream_mesh()
+                             if {use_mesh} else None)
+    assert 0 < r.batches <= {kill}, r.batches
+    for b in batches[r.batches:]:
+        r.step(b)
+    for name in ("f", "labels", "alive", "knn_idx", "knn_wgt"):
+        assert np.array_equal(getattr(r.graph, name),
+                              getattr(g_ref, name)), name
+    ids = np.flatnonzero(g_ref.alive)
+    pr, cr = r.device_view().query(ids, 0.5)
+    po, co = ref.device_view().query(ids, 0.5)
+    assert np.array_equal(pr, po) and np.array_equal(cr, co)
+    print("OK kill-restore", r.batches, "->", r.commits, "commits")
+""")
+
+
+def _run_script(script, **fields):
+    env = dict(os.environ, JAX_PLATFORMS="cpu")
+    env.pop("REPRO_STREAM_TRANSPORT", None)
+    return subprocess.run(
+        [sys.executable, "-c", script.format(src=SRC, **fields)],
+        capture_output=True, text=True, env=env, timeout=900)
+
+
+def test_kill_mid_drain_restore_replay_single_device(tmp_path):
+    """Victim killed mid-drain; restore from the latest complete
+    checkpoint and replay the rest of the stream in THIS process: final
+    labels bit-identical to the uninterrupted oracle (device ingest, so
+    the EmbeddingStore crash path is exercised too)."""
+    ckdir = str(tmp_path / "ck")
+    out = _run_script(VICTIM, ndev=1, use_mesh=False, ingest="device",
+                      spec=KILL_SPEC, dir=ckdir, kill=KILL_AT)
+    assert out.returncode == 137, (out.returncode, out.stderr[-3000:])
+
+    batches = _batches(KILL_SPEC)
+    spec = StreamSpec(**KILL_SPEC)
+    g_ref = DynamicGraph(emb_dim=spec.emb_dim, k=5)
+    ref = StreamEngine(g_ref, delta=1e-4, ingest="device")
+    for b in batches:
+        ref.step(b)
+
+    r = StreamEngine.restore(ckdir)
+    # the kill landed mid-drain of batch KILL_AT: the survivor covers at
+    # most the KILL_AT batches that committed, never the lost one
+    assert 0 < r.batches <= KILL_AT
+    for b in batches[r.batches:]:
+        r.step(b)
+    _assert_graphs_equal(r.graph, g_ref)
+    ids = np.flatnonzero(g_ref.alive)
+    pred_r, conf_r = r.device_view().query(ids, 0.5)
+    pred_o, conf_o = ref.device_view().query(ids, 0.5)
+    np.testing.assert_array_equal(pred_r, pred_o)
+    np.testing.assert_array_equal(conf_r, conf_o)
+
+
+def test_kill_mid_drain_restore_replay_8dev(tmp_path):
+    """Same fault injection on a forced 8-virtual-device mesh: the
+    victim's checkpoint restores onto a fresh 8-device mesh in a second
+    process and replays bit-identically to the sharded oracle."""
+    ckdir = str(tmp_path / "ck")
+    out = _run_script(VICTIM, ndev=8, use_mesh=True, ingest="host",
+                      spec=KILL_SPEC, dir=ckdir, kill=KILL_AT)
+    assert out.returncode == 137, (out.returncode, out.stderr[-3000:])
+    out = _run_script(CHECKER, ndev=8, use_mesh=True, ingest="host",
+                      spec=KILL_SPEC, dir=ckdir, kill=KILL_AT)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "OK kill-restore" in out.stdout
+
+
+# ---------------------------------------------------------------------- #
+# elastic restore across mesh shapes
+# ---------------------------------------------------------------------- #
+ELASTIC = textwrap.dedent("""
+    import os, sys
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    sys.path.insert(0, {src!r})
+    import numpy as np
+    from repro.core.stream import StreamEngine
+    from repro.data.synth import StreamSpec, gaussian_mixture_stream
+    from repro.graph.dynamic import DynamicGraph
+    from repro.launch.mesh import make_stream_mesh
+
+    spec = StreamSpec(**{spec!r})
+    batches = [b for b, _ in gaussian_mixture_stream(spec)]
+    mesh = make_stream_mesh()
+    assert mesh.devices.size == 8
+
+    # 8-device halo engine -> checkpoint -> mesh-LESS restore
+    g8 = DynamicGraph(emb_dim=spec.emb_dim, k=5)
+    e8 = StreamEngine(g8, delta=1e-4, mesh=mesh, transport="halo")
+    for b in batches:
+        e8.step(b)
+    e8.checkpoint({dir_a!r})
+    ids = np.flatnonzero(g8.alive)
+    p8, c8 = e8.device_view().query(ids, 0.5)
+    r1 = StreamEngine.restore({dir_a!r})
+    assert r1.mesh is None and r1.transport != "halo"
+    p1, c1 = r1.device_view().query(ids, 0.5)
+    assert np.array_equal(p8, p1) and np.array_equal(c8, c1)
+
+    # single-device engine -> checkpoint -> 8-device mesh restore
+    g1 = DynamicGraph(emb_dim=spec.emb_dim, k=5)
+    e1 = StreamEngine(g1, delta=1e-4)
+    for b in batches:
+        e1.step(b)
+    e1.checkpoint({dir_b!r})
+    r8 = StreamEngine.restore({dir_b!r}, mesh=make_stream_mesh(),
+                              transport="halo")
+    assert r8.mesh is not None and r8.transport == "halo"
+    pm, cm = r8.device_view().query(ids, 0.5)
+    pe, ce = e1.device_view().query(ids, 0.5)
+    assert np.array_equal(pm, pe) and np.array_equal(cm, ce)
+
+    # both restored engines keep streaming bit-identically
+    extra = StreamSpec(**{spec!r})
+    extra.seed += 1
+    more = [b for b, _ in gaussian_mixture_stream(extra)][:2]
+    for b in more:
+        r1.step(b)
+        r8.step(b)
+    assert np.array_equal(r1.graph.f, r8.graph.f)
+    assert np.array_equal(r1.graph.labels, r8.graph.labels)
+    print("OK elastic-restore", r1.commits, r8.commits)
+""")
+
+
+def test_elastic_restore_across_mesh_shapes_8dev(tmp_path):
+    """A checkpoint from an 8-device halo engine restores mesh-less (and
+    a single-device checkpoint restores onto 8 devices) with bit-identical
+    DeviceLabelView answers — the save format is mesh-independent."""
+    out = _run_script(ELASTIC, spec=KILL_SPEC,
+                      dir_a=str(tmp_path / "a"), dir_b=str(tmp_path / "b"))
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "OK elastic-restore" in out.stdout

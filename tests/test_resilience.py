@@ -1,6 +1,9 @@
 """Checkpoint manager, preemption, straggler monitor, gradient compression."""
 
+import logging
 import os
+import shutil
+import signal
 
 import jax
 import jax.numpy as jnp
@@ -11,6 +14,7 @@ from repro.checkpoint import manager as ckpt
 from repro.launch.mesh import make_mesh
 from repro.training import optim
 from repro.training.resilience import (
+    PreemptionGuard,
     StragglerMonitor,
     compress_tree,
     decompress_tree,
@@ -62,6 +66,126 @@ def test_manager_async_then_restore(tmp_path):
     mgr.wait()
     got = mgr.restore(t)
     np.testing.assert_array_equal(np.asarray(got["a"]), np.asarray(t["a"]))
+
+
+def test_manager_async_failure_surfaces(tmp_path):
+    """A failed async write must NOT be silent: the worker's exception
+    re-raises at the next wait()/save_async()/save_sync(), once, and the
+    manager stays usable for a retry afterwards."""
+    ckdir = tmp_path / "ck"
+    mgr = ckpt.CheckpointManager(str(ckdir))
+    t = _tree()
+    mgr.save_async(1, t)
+    mgr.wait()
+    # sabotage: the checkpoint directory becomes a plain FILE, so every
+    # write fails (robust under root, unlike permission tricks)
+    shutil.rmtree(ckdir)
+    ckdir.write_text("not a directory")
+    mgr.save_async(2, t)  # worker hits the sabotage; no raise here
+    with pytest.raises(OSError):
+        mgr.wait()
+    mgr.wait()  # the error was delivered once, then cleared
+    # surfacing also happens at the next save_async call itself
+    mgr.save_async(3, t)
+    with pytest.raises(OSError):
+        mgr.save_async(4, t)
+    # ...and at save_sync
+    mgr.save_async(5, t)
+    with pytest.raises(OSError):
+        mgr.save_sync(6, t)
+    # un-sabotage: the same manager recovers
+    ckdir.unlink()
+    mgr.save_sync(7, t)
+    assert mgr.latest_step() == 7
+
+
+def test_save_rejects_removed_wait_param(tmp_path):
+    """save() is always synchronous; the historical dead ``wait=`` knob
+    is gone rather than silently accepted-and-ignored."""
+    with pytest.raises(TypeError):
+        ckpt.save(str(tmp_path), 1, _tree(), wait=False)
+
+
+def test_latest_step_and_gc_survive_malformed_entries(tmp_path):
+    """Stray files and crashed-writer ``.tmp`` staging dirs under the
+    checkpoint directory must never crash latest_step/_gc; marker-less
+    tmp dirs are invisible to restore and reaped by the next gc."""
+    mgr = ckpt.CheckpointManager(str(tmp_path), keep=2)
+    t = _tree()
+    mgr.save_sync(1, t)
+    # a stray non-step file, a malformed step name, and a crashed
+    # writer's marker-less staging dir
+    (tmp_path / "step_x").write_text("junk")
+    os.makedirs(tmp_path / "step_notanumber")
+    os.makedirs(tmp_path / "step_00000042.tmp")
+    assert ckpt.latest_step(str(tmp_path)) == 1
+    mgr.save_sync(2, t)  # runs _gc: must not raise, must reap the tmp
+    assert not (tmp_path / "step_00000042.tmp").exists()
+    assert (tmp_path / "step_x").exists()  # non-checkpoint junk untouched
+    assert (tmp_path / "step_notanumber").exists()
+    assert mgr.latest_step() == 2
+
+
+def test_straggler_end_step_without_start_is_noop(caplog):
+    """end_step() with no matching start_step() used to TypeError on
+    ``perf_counter() - None``; now it warns and returns None, and the
+    monitor keeps working afterwards."""
+    mon = StragglerMonitor(threshold=2.0, window=16)
+    with caplog.at_level(logging.WARNING, "repro.training.resilience"):
+        assert mon.end_step() is None
+    assert any("without start_step" in r.message for r in caplog.records)
+    assert len(mon.times) == 0
+    mon.start_step()
+    assert mon.end_step() is None  # matched pair records a sample
+    assert len(mon.times) == 1
+    # a second unmatched call is also a no-op (start consumed above)
+    assert mon.end_step() is None
+    assert len(mon.times) == 1
+    for _ in range(10):
+        assert mon.observe(0.1) is None  # observe() path still intact
+    assert mon.observe(0.5) is not None
+
+
+def test_preemption_guard_installs_both_signals_and_rearms():
+    """The guard registers SIGTERM AND SIGINT by default (matching its
+    docstring), restore() puts the old handlers back and resets the
+    flag, and the same guard re-arms — including as a context manager."""
+    old_term = signal.getsignal(signal.SIGTERM)
+    old_int = signal.getsignal(signal.SIGINT)
+    guard = PreemptionGuard()
+    try:
+        assert signal.getsignal(signal.SIGTERM) == guard._handler
+        assert signal.getsignal(signal.SIGINT) == guard._handler
+        os.kill(os.getpid(), signal.SIGTERM)
+        assert guard.requested
+    finally:
+        guard.restore()
+    assert signal.getsignal(signal.SIGTERM) == old_term
+    assert signal.getsignal(signal.SIGINT) == old_int
+    assert not guard.requested  # restore() resets the flag: re-armable
+    # round 2: the SAME guard via the context-manager form
+    with guard as g:
+        assert g is guard
+        assert signal.getsignal(signal.SIGTERM) == guard._handler
+        os.kill(os.getpid(), signal.SIGTERM)
+        assert guard.requested
+    assert signal.getsignal(signal.SIGTERM) == old_term
+    assert not guard.requested
+
+
+def test_preemption_guard_custom_signals():
+    """A custom signal set leaves the defaults untouched (the LPService
+    tests use ``signals=()`` to drive the flag manually)."""
+    old_term = signal.getsignal(signal.SIGTERM)
+    old_usr1 = signal.getsignal(signal.SIGUSR1)
+    with PreemptionGuard(signals=(signal.SIGUSR1,)) as guard:
+        assert signal.getsignal(signal.SIGTERM) == old_term
+        os.kill(os.getpid(), signal.SIGUSR1)
+        assert guard.requested
+    assert signal.getsignal(signal.SIGUSR1) == old_usr1
+    none_guard = PreemptionGuard(signals=())
+    assert not none_guard.requested
+    none_guard.restore()
 
 
 def test_straggler_monitor_flags_outlier():
