@@ -1,6 +1,6 @@
 """Render BENCH_stream.json / BENCH_serve.json / BENCH_ingest.json /
-BENCH_checkpoint.json headline numbers as a GitHub job-summary markdown
-table.
+BENCH_checkpoint.json / BENCH_landmark.json headline numbers as a
+GitHub job-summary markdown table.
 
 The bench-smoke CI job appends this script's stdout to
 ``$GITHUB_STEP_SUMMARY`` so perf regressions are visible on the PR
@@ -9,7 +9,8 @@ as ``—`` rather than failing: the summary is reporting, the gating lives
 in the benchmarks' ``--check``.
 
 Usage: ``python benchmarks/ci_summary.py [BENCH_stream.json]
-[BENCH_serve.json] [BENCH_ingest.json] [BENCH_checkpoint.json]``
+[BENCH_serve.json] [BENCH_ingest.json] [BENCH_checkpoint.json]
+[BENCH_landmark.json]``
 """
 
 from __future__ import annotations
@@ -165,16 +166,54 @@ def checkpoint_rows(bench: dict) -> list[tuple[str, str]]:
     return rows
 
 
+def landmark_rows(bench: dict) -> list[tuple[str, str]]:
+    rows = []
+    ag = bench.get("agreement")
+    if ag:
+        rows += [
+            ("hot-set agreement vs exact engine",
+             f"{_get(ag, 'hot_agreement')} "
+             f"(floor {_get(bench, 'floors', 'hot_agreement')}, "
+             f"{_get(ag, 'hot_rows')} rows)"),
+            ("overall agreement (hot + cold tail)",
+             f"{_get(ag, 'overall_agreement')} over "
+             f"{_get(ag, 'unlabeled')} unlabeled"),
+            ("accuracy vs truth (exact / landmark)",
+             f"{_get(ag, 'acc_exact_vs_truth')} / "
+             f"{_get(ag, 'acc_landmark_vs_truth')}"),
+            ("cold rows served / landmarks",
+             f"{_get(ag, 'landmark', 'cold_rows')} / "
+             f"{_get(ag, 'landmark', 'num_landmarks')}"),
+        ]
+    sc = bench.get("scale")
+    if sc:
+        rows += [
+            ("scale: steady insert rows/sec",
+             f"{_get(sc, 'ops_per_sec')} "
+             f"(floor {_get(bench, 'floors', 'scale_ops_per_sec')}, "
+             f"{_get(sc, 'total_nodes')} nodes)"),
+            ("scale: staged hot rung vs exact requirement",
+             f"{_get(sc, 'max_hot_bucket_rows')} / "
+             f"{_get(sc, 'exact_bucket_rows')} rows "
+             f"({_get(sc, 'staged_fraction')}, ceiling "
+             f"{_get(bench, 'floors', 'scale_stage_max_fraction')})"),
+        ]
+    return rows
+
+
 def main(stream_path: str = "BENCH_stream.json",
          serve_path: str = "BENCH_serve.json",
          ingest_path: str = "BENCH_ingest.json",
-         checkpoint_path: str = "BENCH_checkpoint.json") -> str:
+         checkpoint_path: str = "BENCH_checkpoint.json",
+         landmark_path: str = "BENCH_landmark.json") -> str:
     lines = ["## Benchmark smoke headlines", ""]
     for title, rows in (("stream throughput", stream_rows(_load(stream_path))),
                         ("LP serving", serve_rows(_load(serve_path))),
                         ("device ingestion", ingest_rows(_load(ingest_path))),
                         ("checkpoint / restore",
-                         checkpoint_rows(_load(checkpoint_path)))):
+                         checkpoint_rows(_load(checkpoint_path))),
+                        ("landmark backend",
+                         landmark_rows(_load(landmark_path)))):
         lines += [f"### {title}", "", "| metric | value |", "|---|---|"]
         if not rows:
             rows = [("(no data)", "—")]
@@ -185,4 +224,4 @@ def main(stream_path: str = "BENCH_stream.json",
 
 if __name__ == "__main__":
     args = sys.argv[1:]
-    print(main(*args[:4]))
+    print(main(*args[:5]))

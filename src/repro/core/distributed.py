@@ -86,7 +86,10 @@ from repro.graph.structures import PAD
 from repro.kernels.bsr_spmv import bsr_spmv, fill_bsr_blocks
 from repro.kernels.ell_propagate import ell_propagate_step
 
-STREAM_BACKENDS = ("ref", "ell_pallas", "bsr")
+# "landmark" has no mesh body of its own: its hot solve IS the ref body
+# (the hot/cold split happens at staging, in the engine), so it rides the
+# ref branch of make_sharded_propagate_fn under both transports.
+STREAM_BACKENDS = ("ref", "ell_pallas", "bsr", "landmark")
 TRANSPORTS = ("allgather", "halo")
 
 

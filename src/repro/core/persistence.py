@@ -125,6 +125,23 @@ def engine_state(engine: StreamEngine) -> dict:
         for k, v in store.state_arrays().items():
             state[f"store_{k}"] = v
         meta["store_count"] = int(store.count)
+    lm = engine._lm
+    if lm is not None:
+        # the landmark factorization + working-set clock: saved so a
+        # restored hot/cold stream resumes with identical hot masks,
+        # assignments and landmark labels (readable by older code — all
+        # keys are additive and read back via meta.get)
+        state["landmark_touched_at"] = engine._touched_at.copy()
+        meta["landmark"] = {
+            "streaming": engine._lm_streaming,
+            "batches": int(engine.landmark_batches),
+            "cold_rows": int(engine.landmark_cold_rows),
+            "ready": lm.ready,
+            **lm.state_meta(),
+        }
+        if lm.ready:
+            for k, v in lm.state_arrays().items():
+                state[f"landmark_{k}"] = v
     state["meta"] = np.frombuffer(
         json.dumps(meta).encode(), np.uint8).copy()
     return state
@@ -155,6 +172,7 @@ def restore_engine(
     max_k: object = _UNSET,
     read_placement: object = "auto",
     ingest: object = _UNSET,
+    landmark: object = _UNSET,
 ) -> StreamEngine:
     """Rebuild a ``StreamEngine`` from the latest (or given) checkpoint.
 
@@ -221,6 +239,13 @@ def restore_engine(
         if transport == "halo" and mesh is None:
             transport = None  # elastic: mesh-less restore degrades to auto
 
+    lm_meta = meta.get("landmark")  # absent in pre-landmark checkpoints
+    if landmark is _UNSET:
+        landmark = ({key: lm_meta[key] for key in
+                     ("num_landmarks", "assign_k", "hot_ttl",
+                      "resample_factor", "dead_frac_max")}
+                    if lm_meta is not None else None)
+
     engine = StreamEngine(
         g,
         delta=meta["delta"],
@@ -236,7 +261,30 @@ def restore_engine(
         transport=transport,
         read_placement=read_placement,
         ingest=ingest,
+        landmark=landmark,
     )
+
+    if lm_meta is not None and engine._lm is not None:
+        cfg = engine._lm.cfg
+        # landmark state is mesh-independent (the hot solve is exact and
+        # the cold pass deterministic), so unlike the rung metadata below
+        # it reinstalls on ANY mesh — but only under the same geometry
+        # (a changed L or R invalidates the assignment table)
+        if (cfg.num_landmarks == lm_meta["num_landmarks"]
+                and cfg.assign_k == lm_meta["assign_k"]):
+            if "landmark_touched_at" in state:
+                engine._touched_at = np.asarray(
+                    state["landmark_touched_at"], np.int64).copy()
+            engine._lm_streaming = bool(lm_meta["streaming"])
+            engine.landmark_batches = int(lm_meta["batches"])
+            engine.landmark_cold_rows = int(lm_meta["cold_rows"])
+            if lm_meta.get("ready") and "landmark_ids" in state:
+                engine._lm.load_state(
+                    {"ids": state["landmark_ids"],
+                     "emb": state["landmark_emb"],
+                     "lm_valid": state["landmark_lm_valid"],
+                     "assign_idx": state["landmark_assign_idx"],
+                     "assign_w": state["landmark_assign_w"]}, lm_meta)
 
     engine.commits = int(meta["commits"])
     engine.batches = int(meta["batches"])

@@ -360,6 +360,7 @@ def build_host_problem(
     row_multiple: int | None = None,
     max_k: int | None = None,
     warned: set | None = None,
+    hot: np.ndarray | None = None,
 ) -> HostSnapshot:
     """Host-side (numpy) snapshot build; see module docstring for padding.
 
@@ -376,11 +377,24 @@ def build_host_problem(
     their tight natural K.  Truncation is logged when it fires; ``warned``
     scopes the once-per-rung WARNING dedup (engines pass their own set,
     bare calls share the module-level fallback).
+
+    ``hot`` restricts the snapshot to a working set (the ``landmark``
+    backend's hot/cold split): only alive unlabeled vertices with
+    ``hot[id]`` become rows, and an edge from a hot row to a COLD
+    unlabeled neighbor v folds into the supernode weights with v's
+    committed fractional label — ``wl0 += w·(1−f_v)``, ``wl1 += w·f_v``.
+    Because ``update_island`` computes ``d_f = (0−f)·wl0 + (1−f)·wl1 +
+    Σ w·(f_v − f)``, that fold contributes exactly ``w·(f_v − f)``: the
+    restricted solve is an EXACT Jacobi fixpoint on the hot subgraph
+    with the cold tail as fixed boundary conditions, reusing the
+    barriered arithmetic (and every backend/transport behind it)
+    unchanged.
     """
     if warned is None:
         warned = _MAX_K_WARNED
     alive_unl = g.alive & (g.labels == UNLABELED)
-    unl_ids = np.flatnonzero(alive_unl)
+    row_mask = alive_unl if hot is None else alive_unl & hot
+    unl_ids = np.flatnonzero(row_mask)
     u = len(unl_ids)
     remap = np.full(g.num_nodes, -1, np.int64)
     remap[unl_ids] = np.arange(u)
@@ -389,11 +403,12 @@ def build_host_problem(
     live = g.alive[src] & g.alive[dst] if len(src) else np.zeros(0, bool)
     src, dst, wgt = src[live], dst[live], wgt[live]
 
-    s_unl = alive_unl[src]
+    s_unl = row_mask[src]
     d_unl = alive_unl[dst]
+    d_row = d_unl if hot is None else row_mask[dst]
 
-    # unlabeled -> unlabeled edges form the ELL tensor
-    uu = s_unl & d_unl
+    # (hot) unlabeled -> (hot) unlabeled edges form the ELL tensor
+    uu = s_unl & d_row
     csr = coo_to_csr(u, remap[src[uu]], remap[dst[uu]], wgt[uu])
     if max_k is not None:
         deg = np.diff(csr.rowptr)
@@ -437,6 +452,15 @@ def build_host_problem(
     rows = remap[src[ul]]
     np.add.at(wl0, rows[lab == 0], wgt[ul][lab == 0])
     np.add.at(wl1, rows[lab == 1], wgt[ul][lab == 1])
+
+    if hot is not None:
+        # hot -> cold-unlabeled edges fold the frozen fractional label as
+        # boundary conditions (see docstring: exact on the hot subgraph)
+        uc = s_unl & d_unl & ~d_row
+        fv = g.f[dst[uc]].astype(np.float32)
+        rows_c = remap[src[uc]]
+        np.add.at(wl0, rows_c, wgt[uc] * (1.0 - fv))
+        np.add.at(wl1, rows_c, wgt[uc] * fv)
 
     valid = np.ones(u, bool)
     if pad_to is not None and u < pad_to:  # shard padding rows

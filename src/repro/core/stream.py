@@ -58,7 +58,20 @@ single-device engine under every transport
 (tests/test_stream_sharded.py, tests/test_stream_property.py); a
 ``bsr`` rung stages in the halo row layout under BOTH transports so its
 labels are bit-identical across them too.  See docs/streaming.md
-§Transports and §Backends.
+§Transports and docs/backends.md.
+
+The ``landmark`` backend changes the STAGING, not the solve: once its
+lazily-sampled landmark state is ready and the registry resolves the
+engine's knob to ``"landmark"``, snapshots restrict to the hot working
+set (rows touched by a Δ_t within the last ``hot_ttl`` batches), cold
+unlabeled neighbors fold their committed fractional labels into the
+supernode weights (an exact boundary condition — see
+``core.snapshot.build_host_problem``), and each commit additionally
+runs the low-rank cold pass of ``kernels.landmark_propagate`` so the
+cold tail keeps moving at O(N·R).  Staged hot problems ride the same
+buffers, plans and transports as every exact backend; labels carry an
+agreement-floor contract instead of bit-equality (docs/backends.md,
+``benchmarks/landmark_lp.py``).
 """
 
 from __future__ import annotations
@@ -79,13 +92,14 @@ from repro.core.dynlp import gprime_components
 from repro.core.init_labels import supernode_init
 from repro.core.propagate import PropagationProblem
 from repro.core.snapshot import (DeviceLabelView, HostSnapshot, LabelView,
-                                 apply_halo_layout, bucket_k,
+                                 apply_halo_layout, bucket, bucket_k,
                                  build_host_problem, publish_device_view,
                                  reorder_host_snapshot)
 from repro.graph import partition
 from repro.graph.dynamic import UNLABELED, BatchUpdate, DynamicGraph
 from repro.kernels import ops
 from repro.kernels.bsr_spmv import ell_bsr_layout
+from repro.kernels.landmark_propagate import LandmarkConfig, LandmarkState
 
 logger = logging.getLogger(__name__)
 
@@ -111,8 +125,9 @@ class StreamStats:
     transport: str = "single"  # collective this Δ_t rode: "single" (no
     # mesh), "allgather", "halo", or "none" (no-op Δ_t, nothing solved)
     backend: str = "none"  # registry backend that solved this Δ_t
-    # ("ref"/"ell_pallas"/"bsr"; "none" for a no-op Δ_t) — a bsr rung's
-    # slot-budget overflow shows up here as an "ell_pallas" batch
+    # ("ref"/"ell_pallas"/"bsr"/"landmark"; "none" for a no-op Δ_t) — a
+    # bsr rung's slot-budget overflow shows up here as an "ell_pallas"
+    # batch; a "landmark" batch solved the hot working set only
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))
@@ -142,6 +157,9 @@ class _Pending:
     # row-layout inverse (halo export-prefix or BSR component order):
     # solved row for original row i is rows[i] (None = staged unpermuted)
     rows: np.ndarray | None = None
+    # landmark batches only: the cold unlabeled rows excluded from the
+    # staged hot problem — drain serves them through the low-rank pass
+    cold_ids: np.ndarray | None = None
 
 
 @dataclasses.dataclass
@@ -176,6 +194,7 @@ class StreamEngine:
         transport: str | None = None,
         read_placement: object = "auto",
         ingest: object = None,
+        landmark: object = None,
     ):
         self.graph = graph
         # ingest: who nominates kNN candidates for arriving batches.
@@ -258,6 +277,29 @@ class StreamEngine:
             ops.backend_candidates(None, sharded=mesh is not None)
             if knob == "auto" else (ops.backend_spec(knob).name,))
         self._bsr_block = ops.BSR_BLOCK_SIZE
+        # landmark: configuration of the approximate hot/cold backend
+        # (kernels.landmark_propagate).  None = off, unless the pinned
+        # knob names "landmark" — then a default config activates (the
+        # knob is meaningless without the state); True = default config;
+        # a dict or LandmarkConfig tunes it.  With backend="auto" and a
+        # config, the registry may pick landmark per its eligibility rule
+        # (LANDMARK_AUTO_MIN_ROWS) once the state is ready; the decision
+        # then LATCHES for the engine's lifetime so every later rung
+        # carries one consistent contract (docs/backends.md).
+        if landmark is None and knob == "landmark":
+            landmark = True
+        if landmark is True:
+            landmark = LandmarkConfig()
+        elif isinstance(landmark, dict):
+            landmark = LandmarkConfig(**landmark)
+        self._lm = (LandmarkState(landmark, graph.emb_dim)
+                    if landmark is not None else None)
+        self._lm_streaming = False  # the hot/cold latch (see above)
+        # batch index each vertex was last touched by a Δ_t — the hot
+        # working set is everything with age <= hot_ttl
+        self._touched_at = np.full(graph.num_nodes, -1, np.int64)
+        self.landmark_batches = 0  # batches solved on the hot/cold split
+        self.landmark_cold_rows = 0  # cold rows served by the low-rank pass
         row_multiple = int(mesh.devices.size) if mesh is not None else 1
         if "bsr" in self._backend_candidates:
             # every shard's row block must tile evenly into BSR block rows
@@ -404,6 +446,71 @@ class StreamEngine:
                 "(warned once per rung)", key, needed,
                 self._slot_budgets[key])
         self.backend_overflows += 1
+
+    # ------------------------------------------------------------------ #
+    def _note_touched(self, effect) -> None:
+        """Stamp the vertices a Δ_t touched with the current batch index
+        (the hot working set is everything stamped within ``hot_ttl``)."""
+        g = self.graph
+        if len(self._touched_at) < g.num_nodes:
+            grown = np.full(g.num_nodes, -1, np.int64)
+            grown[: len(self._touched_at)] = self._touched_at
+            self._touched_at = grown
+        self._touched_at[effect.affected] = self.batches
+        self._touched_at[effect.new_ids] = self.batches
+
+    # ------------------------------------------------------------------ #
+    def _landmark_gate(self) -> np.ndarray | None:
+        """Decide whether this Δ_t streams the hot/cold split; returns
+        the hot row mask (or None for plain exact staging).
+
+        The decision must precede the snapshot build (the restriction
+        changes the bucket the batch lands in), so it cannot ride the
+        per-rung resolution the exact backends use: the registry is
+        consulted with the FULL unlabeled count and the landmark state's
+        readiness, and the first "landmark" verdict latches for the
+        engine's lifetime — every later batch stays on the hot/cold
+        contract even when deletions shrink the graph back under the
+        auto threshold (per-rung backend modes stay consistent that way).
+        """
+        g = self.graph
+        lm = self._lm
+        store = getattr(self.ingestor, "store", None)
+        if not lm.ready:
+            lm.refresh(g, store)  # lazy activation; cheap no-op early on
+        if not self._lm_streaming:
+            n_unl = int((g.alive & (g.labels == UNLABELED)).sum())
+            resolved = ops.select_backend(
+                self._backend_knob, num_rows=bucket(n_unl),
+                sharded=self.mesh is not None,
+                landmark_ready=lm.ready, use_env=False)
+            if resolved != "landmark" or not lm.ready:
+                return None
+            self._lm_streaming = True
+            logger.info(
+                "stream landmark: hot/cold split active (%d landmarks, "
+                "hot_ttl %d, %d unlabeled rows)", lm.num_landmarks,
+                lm.cfg.hot_ttl, n_unl)
+        age = self.batches - self._touched_at
+        return (self._touched_at >= 0) & (age <= lm.cfg.hot_ttl)
+
+    # ------------------------------------------------------------------ #
+    def _landmark_commit(self, p: "_Pending") -> None:
+        """Commit-boundary landmark work for a hot/cold batch: refresh
+        the factorization incrementally (new rows get assignments; the
+        landmark label vector is re-read in O(L)) and fold the low-rank
+        estimates over the batch's cold unlabeled rows — rows with no
+        assignment (no valid landmark yet) keep their committed labels."""
+        g = self.graph
+        lm = self._lm
+        lm.refresh(g, getattr(self.ingestor, "store", None))
+        est, wsum = lm.cold_values(lm.landmark_values(g))
+        ids = p.cold_ids
+        sel = ids[wsum[ids] > 0]
+        g.f[sel] = est[sel]
+        p.view_f[sel] = est[sel]
+        self.landmark_batches += 1
+        self.landmark_cold_rows += len(sel)
 
     # ------------------------------------------------------------------ #
     def _stage_single(self, host: HostSnapshot) -> _Staging:
@@ -665,6 +772,8 @@ class StreamEngine:
         # ---- Step 1: change adjustment & sparsification (host) ----
         effect = g.apply_batch(batch, tau=self.tau, selector=self.ingestor)
         m = len(effect.new_ids)
+        if self._lm is not None:
+            self._note_touched(effect)
 
         # ``effect.affected`` is already alive-filtered, so the frontier
         # below is nonempty iff some affected vertex is unlabeled — an
@@ -689,12 +798,26 @@ class StreamEngine:
             )
             return prev
 
+        # ---- landmark hot/cold gate: decided BEFORE the snapshot build
+        # (the hot restriction changes the bucket this Δ_t lands in) ----
+        hot = self._landmark_gate() if self._lm is not None else None
+        cold_ids = None
+        if hot is not None:
+            cold_ids = np.flatnonzero(g.alive & (g.labels == UNLABELED)
+                                      & ~hot)
+
         # ---- stage batch-t topology while batch t-1 still propagates ----
         host = build_host_problem(g, max_degree=self.max_degree,
                                   auto_bucket=True,
                                   row_multiple=self._row_multiple,
                                   max_k=self.max_k,
-                                  warned=self._max_k_warned)
+                                  warned=self._max_k_warned,
+                                  hot=hot)
+        if hot is not None:
+            # the hot/cold contract overrides the rung's registry scan —
+            # a hot problem is small by design, so per-rung auto would
+            # pick an exact backend and mislabel approximate batches
+            self._backend_modes[host.bucket_key] = "landmark"
         u = len(host.unl_ids)
         u_pad = len(host.valid)
         frontier = np.zeros(u_pad, bool)
@@ -762,7 +885,7 @@ class StreamEngine:
             num_components=n_components, frontier_size=int(frontier.sum()),
             bucket=host.bucket_key, recompiled=recompiled,
             transport=st.transport, backend=st.backend,
-            rows=st.rows,
+            rows=st.rows, cold_ids=cold_ids,
             # Batch-t host state (labels/alive fixed by apply_batch above;
             # f now holds batch t-1's committed labels plus this batch's
             # supernode inits).  drain() folds the solved rows over view_f
@@ -796,6 +919,8 @@ class StreamEngine:
             iterations = int(p.res.iterations)
             converged = bool(p.res.converged)
             resid = float(p.res.max_residual)
+        if p.cold_ids is not None and self._lm is not None:
+            self._landmark_commit(p)
         self.commits += 1
         self._view = LabelView(f=p.view_f, labels=p.view_labels,
                                alive=p.view_alive, commit_id=self.commits)
@@ -895,6 +1020,14 @@ class StreamEngine:
             "backend_overflows": self.backend_overflows,
             "measured_sweep_ms": by_rung(self._measured),
             "probe_cache_hits": self.probe_cache_hits,
+            "landmark": {
+                "configured": self._lm is not None,
+                "streaming": self._lm_streaming,
+                "num_landmarks": self._lm.num_landmarks if self._lm else 0,
+                "batches": self.landmark_batches,
+                "cold_rows": self.landmark_cold_rows,
+                "resamples": self._lm.resamples if self._lm else 0,
+            },
         }
 
     # ------------------------------------------------------------------ #

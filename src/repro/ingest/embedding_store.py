@@ -177,6 +177,18 @@ class EmbeddingStore:
         self.appends += 1
         return batch_dev, bvalid_dev, base_id
 
+    def landmark_rows(self, lo: int, hi: int) -> jax.Array:
+        """Device slice of rows ``[lo, hi)`` — the landmark backend's
+        assignment-refresh hook (``kernels.landmark_propagate``): query
+        blocks come straight off the resident array, no host staging."""
+        return self.emb[lo:hi]
+
+    def landmark_gather(self, ids: np.ndarray) -> jax.Array:
+        """Device gather of the sampled landmark rows by global id — the
+        landmark backend's sampling hook (one small gather per resample,
+        never a full-store copy)."""
+        return self.emb[jnp.asarray(np.asarray(ids, np.int32))]
+
     def kill(self, ids: np.ndarray) -> None:
         """Mark rows dead (deletions) — they stop matching immediately."""
         if not len(ids):

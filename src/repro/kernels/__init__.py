@@ -1,3 +1,10 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Propagation backend registry and device kernels.
+
+`ops.py` is the front door: the `BackendSpec` registry behind
+`run_propagation` (see docs/backends.md).  The kernel modules back the
+registered backends — `propagate_pallas` (fused ELL), `bsr_spmv` (MXU
+tiles), `landmark_propagate` (hot/cold approximate staging) — plus the
+ingest argkmin pass and the Shiloach–Vishkin hook used for component
+reordering.  The layer stays optional: every backend has an exact XLA
+reference path, so TPU-less environments degrade instead of crashing.
+"""

@@ -61,6 +61,11 @@ def bsr_spmv(
     x: jax.Array,  # (C * BS,) float
     interpret: bool = True,
 ) -> jax.Array:
+    """Block-sparse y = A @ x over `(R, J, BS, BS)` BSR tiles on the MXU.
+
+    Empty tile slots carry `block_cols == -1` and are steered to a
+    zero-weight read of column block 0, so padding never contributes.
+    """
     r, j, bs, _ = blocks.shape
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,

@@ -37,6 +37,9 @@ def cc_hook_step(
     block_rows: int = 512,
     interpret: bool = True,
 ) -> jax.Array:
+    """One fused Shiloach–Vishkin hook + path-halving jump over the ELL
+    adjacency: per row, min over the neighbors' parents, then one jump
+    through the (previous iteration's) parent vector."""
     n, k = nbr.shape
     r = min(block_rows, n)
     assert n % r == 0
@@ -66,10 +69,12 @@ def connected_components_pallas(nbr, max_iters: int = 10_000, interpret=True,
     n = nbr.shape[0]
 
     def cond(state):
+        """Loop while any parent changed and iterations remain."""
         par, changed, it = state
         return jnp.logical_and(changed, it < max_iters)
 
     def body(state):
+        """One hook+jump step; flags whether any parent moved."""
         par, _, it = state
         new = cc_hook_step(nbr, par, block_rows=block_rows, interpret=interpret)
         return new, jnp.any(new != par), it + 1

@@ -1,0 +1,328 @@
+"""Landmark / low-rank cold-tail state for the ``landmark`` backend.
+
+Every exact backend (``ref``, ``ell_pallas``, ``bsr``) stages the FULL
+unlabeled row set on device each Δ_t, so graph size is capped by device
+memory.  The ``landmark`` backend (registered in ``kernels.ops``) splits
+the graph instead:
+
+  * **hot working set** — frontier + recently-touched rows (tracked per
+    batch by ``core.stream.StreamEngine``) solve EXACTLY: the
+    hot-restricted snapshot (``core.snapshot.build_host_problem(hot=…)``)
+    folds each cold unlabeled neighbor's committed fractional label into
+    the supernode weights, which makes the restricted solve a true Jacobi
+    fixpoint on the hot subgraph with the cold tail as fixed boundary —
+    the barriered ``update_island`` arithmetic, every registry backend
+    body, and both mesh transports are reused unchanged;
+  * **cold tail** — served through the low-rank factorization held here:
+    ``L`` landmark vertices (sampled evenly over the alive set), their
+    committed labels ``fL`` refreshed at every commit in O(L), and a
+    device-resident per-node assignment ``(N_pad, R)`` of nearest
+    landmarks with cosine weights, built by reusing the
+    ``kernels.argkmin`` pass against the landmark block and refreshed
+    **incrementally** (only rows appended since the last commit are
+    re-assigned; a full rebuild happens only on landmark resampling).
+
+Cold estimates are ``f_v = Σ_r W[v,r] · fL[idx[v,r]]`` — one jitted
+gather-reduce over ladder-bucketed shapes (``landmark_cache_size``
+counts its compiles), written back at commit so cold labels keep moving
+with the landmark labels at O(N·R) instead of O(edges · sweeps).
+
+This is the repo's first accuracy-vs-speed backend: unlike the
+bit-equality contract of the exact backends, ``landmark`` gates a
+recorded hot-set agreement floor (``benchmarks/landmark_lp.py``,
+``BENCH_landmark.json``).  See docs/backends.md.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.argkmin import argkmin_candidates
+
+# assignment rows are processed in fixed-size chunks so an unbounded
+# stream compiles one scatter shape, not one per batch size
+ASSIGN_CHUNK = 1024
+
+# assignment-table row ladder (doubling, like the embedding store's
+# capacity ladder) — keeps ``_grow_assign``/``_cold_pass`` compiles
+# bounded by O(log N)
+ASSIGN_FLOOR = 1024
+
+
+def _dim_pad(d: int) -> int:
+    # mirrors ingest.embedding_store.dim_pad; duplicated (3 lines) so this
+    # module never imports the ingest package (which imports kernels back)
+    return max(8, -8 * (-d // 8))
+
+
+def _assign_bucket(n: int, floor: int = ASSIGN_FLOOR) -> int:
+    b = floor
+    while b < n:
+        b *= 2
+    return b
+
+
+def _donate(*argnums):
+    # GPU XLA can't alias these shapes and would warn per call
+    return () if jax.default_backend() == "gpu" else argnums
+
+
+@functools.partial(jax.jit, static_argnames=("r",),
+                   donate_argnums=_donate(0, 1))
+def _scatter_assign(assign_idx, assign_w, rows, val, idx, r):
+    """Fold one argkmin chunk into the assignment table.
+
+    ``val``/``idx`` are the argkmin top-k against the landmark block
+    (``-inf`` marks empty slots); keep the best ``r`` per row, normalize
+    the cosine weights to sum 1 (all-zero rows mean "no assignment" and
+    are skipped by callers of ``_cold_pass``), and scatter at ``rows``
+    (out-of-range padding rows drop).
+    """
+    val = val[:, :r]
+    idx = idx[:, :r]
+    if val.shape[1] < r:  # fewer landmarks than r: pad with empty slots
+        pad = r - val.shape[1]
+        val = jnp.pad(val, ((0, 0), (0, pad)), constant_values=-jnp.inf)
+        idx = jnp.pad(idx, ((0, 0), (0, pad)))
+    w = jnp.where(jnp.isfinite(val), jnp.maximum(val, 0.0), 0.0)
+    wsum = jnp.sum(w, axis=1, keepdims=True)
+    w = jnp.where(wsum > 0, w / jnp.maximum(wsum, 1e-30), 0.0)
+    assign_idx = assign_idx.at[rows].set(idx.astype(jnp.int32), mode="drop")
+    assign_w = assign_w.at[rows].set(w.astype(jnp.float32), mode="drop")
+    return assign_idx, assign_w
+
+
+@functools.partial(jax.jit, static_argnames=("new_cap",))
+def _grow_assign(assign_idx, assign_w, new_cap):
+    """Pad the assignment table up the row ladder (output outgrows input,
+    so no aliasing)."""
+    pad = new_cap - assign_idx.shape[0]
+    r = assign_idx.shape[1]
+    return (jnp.concatenate([assign_idx, jnp.zeros((pad, r), jnp.int32)]),
+            jnp.concatenate([assign_w, jnp.zeros((pad, r), jnp.float32)]))
+
+
+@jax.jit
+def _cold_pass(assign_idx, assign_w, lm_f):
+    """The low-rank cold-tail pass: per-node landmark-weighted label
+    estimate plus the per-node assignment weight sum (0 = no estimate)."""
+    est = jnp.sum(assign_w * lm_f[assign_idx], axis=1)
+    return est, jnp.sum(assign_w, axis=1)
+
+
+def landmark_cache_size() -> int:
+    """Live jit cache entries across the landmark update kernels
+    (compile-once telemetry; the argkmin pass it reuses is counted by
+    ``kernels.argkmin.argkmin_cache_size``)."""
+    return int(sum(f._cache_size()
+                   for f in (_scatter_assign, _grow_assign, _cold_pass)))
+
+
+@dataclasses.dataclass(frozen=True)
+class LandmarkConfig:
+    """Knobs of the landmark cold-tail factorization.
+
+    ``hot_ttl`` is the working-set window in batches: a vertex stays hot
+    (solved exactly) for this many batches after it was last touched by a
+    Δ_t, then falls to the cold tail.  ``resample_factor`` and
+    ``dead_frac_max`` bound landmark staleness: the landmark set is
+    resampled (and the assignment table fully rebuilt) when the alive set
+    outgrows the sampled one by the factor, or when too many landmarks
+    have been deleted.
+    """
+
+    num_landmarks: int = 64
+    assign_k: int = 4  # landmarks per node (R)
+    hot_ttl: int = 4
+    resample_factor: float = 2.0
+    dead_frac_max: float = 0.1
+
+    def __post_init__(self):
+        if self.num_landmarks < 1 or self.assign_k < 1 or self.hot_ttl < 0:
+            raise ValueError(
+                f"invalid LandmarkConfig: num_landmarks={self.num_landmarks} "
+                f"assign_k={self.assign_k} hot_ttl={self.hot_ttl}")
+
+
+class LandmarkState:
+    """Device-resident landmark factorization, refreshed at commit
+    boundaries by ``core.stream.StreamEngine``.
+
+    Activation is lazy: until the alive set reaches twice
+    ``num_landmarks`` (so the landmark block has one stable shape) the
+    state reports ``ready == False`` and the engine streams unrestricted.
+    After activation, ``refresh`` is incremental — only rows appended
+    since the last call are assigned; a landmark resample (growth or
+    deaths, see ``LandmarkConfig``) rebuilds the whole table.
+    """
+
+    def __init__(self, cfg: LandmarkConfig, emb_dim: int):
+        self.cfg = cfg
+        self.emb_dim = emb_dim
+        self.dp = _dim_pad(emb_dim)
+        self.lm_ids: np.ndarray | None = None  # (L,) global landmark ids
+        self.lm_emb: jax.Array | None = None  # (L, dp) normalized rows
+        self.lm_valid: jax.Array | None = None  # (L,) bool
+        self.assign_idx: jax.Array | None = None  # (N_pad, R) int32
+        self.assign_w: jax.Array | None = None  # (N_pad, R) f32, rows sum 1
+        self.assigned_upto = 0  # rows [0, assigned_upto) hold assignments
+        self.sampled_alive = 0  # alive count at the last (re)sample
+        self.resamples = 0
+
+    @property
+    def ready(self) -> bool:
+        """True once landmarks are sampled and assignments exist."""
+        return self.lm_ids is not None
+
+    @property
+    def num_landmarks(self) -> int:
+        """Landmarks in the current sample (0 before activation)."""
+        return 0 if self.lm_ids is None else len(self.lm_ids)
+
+    # ------------------------------------------------------------------ #
+    def _emb_rows(self, g, store, lo: int, hi: int) -> jax.Array:
+        """Normalized embedding rows [lo, hi) as a (hi-lo, dp) device
+        block — from the ingest store when one is attached (already
+        device-resident and dim-padded), else staged from the host
+        graph's ``embn``."""
+        if store is not None and store.count >= hi:
+            return store.landmark_rows(lo, hi)
+        block = np.zeros((hi - lo, self.dp), np.float32)
+        embn = g.embn[lo:hi]
+        block[:, : embn.shape[1]] = embn
+        return jnp.asarray(block)
+
+    def _gather_landmarks(self, g, store, ids: np.ndarray) -> jax.Array:
+        if store is not None and store.count >= g.num_nodes:
+            return store.landmark_gather(ids)
+        block = np.zeros((len(ids), self.dp), np.float32)
+        embn = g.embn[ids]
+        block[:, : embn.shape[1]] = embn
+        return jnp.asarray(block)
+
+    # ------------------------------------------------------------------ #
+    def _needs_resample(self, g) -> bool:
+        if self.lm_ids is None:
+            return True
+        n_alive = int(g.alive.sum())
+        if n_alive > self.cfg.resample_factor * max(1, self.sampled_alive):
+            return True
+        dead = int((~g.alive[self.lm_ids]).sum())
+        return dead > self.cfg.dead_frac_max * len(self.lm_ids)
+
+    def refresh(self, g, store=None) -> None:
+        """Bring the factorization up to date with the graph (called at
+        commit boundaries).  No-op before activation and when nothing
+        changed; O(rows appended since last call) otherwise; O(N·L) only
+        on a landmark resample."""
+        n = g.num_nodes
+        n_alive = int(g.alive.sum())
+        if self.lm_ids is None and n_alive < 2 * self.cfg.num_landmarks:
+            return  # not enough rows for a stable landmark block yet
+        if self._needs_resample(g):
+            alive_ids = np.flatnonzero(g.alive)
+            pick = np.unique(np.linspace(
+                0, len(alive_ids) - 1, self.cfg.num_landmarks).round()
+                .astype(np.int64))
+            self.lm_ids = alive_ids[pick]
+            # keep the landmark-block shape stable across resamples: pad
+            # by repeating row 0 with valid=False (inert in argkmin)
+            ids_pad = np.zeros(self.cfg.num_landmarks, np.int64)
+            ids_pad[: len(self.lm_ids)] = self.lm_ids
+            self.lm_emb = self._gather_landmarks(g, store, ids_pad)
+            lv = np.zeros(self.cfg.num_landmarks, bool)
+            lv[: len(self.lm_ids)] = True
+            self.lm_valid = jnp.asarray(lv)
+            self.sampled_alive = n_alive
+            self.assigned_upto = 0  # full rebuild below
+            self.resamples += 1
+        if self.assigned_upto >= n:
+            return
+        cap = _assign_bucket(n)
+        if self.assign_idx is None:
+            r = self.cfg.assign_k
+            self.assign_idx = jnp.zeros((cap, r), jnp.int32)
+            self.assign_w = jnp.zeros((cap, r), jnp.float32)
+        elif cap > self.assign_idx.shape[0]:
+            self.assign_idx, self.assign_w = _grow_assign(
+                self.assign_idx, self.assign_w, cap)
+        l_pad = int(self.lm_emb.shape[0])
+        kth = jnp.full((l_pad,), -jnp.inf, jnp.float32)
+        for lo in range(self.assigned_upto, n, ASSIGN_CHUNK):
+            hi = min(lo + ASSIGN_CHUNK, n)
+            block = self._emb_rows(g, store, lo, hi)
+            m = hi - lo
+            if m < ASSIGN_CHUNK:  # pad the tail chunk to the fixed shape
+                block = jnp.pad(block, ((0, ASSIGN_CHUNK - m), (0, 0)))
+            bvalid = jnp.asarray(np.arange(ASSIGN_CHUNK) < m)
+            # base_id >= landmark rows disables the kernel's self-match
+            # diagonal: nodes may legitimately BE landmarks
+            val, idx, _ = argkmin_candidates(
+                self.lm_emb, self.lm_valid, kth, block, bvalid,
+                base_id=l_pad, slack=0.0, k=self.cfg.assign_k,
+                backend="xla")
+            rows = np.full(ASSIGN_CHUNK, self.assign_idx.shape[0], np.int32)
+            rows[:m] = np.arange(lo, hi)  # OOB pad rows drop in the scatter
+            self.assign_idx, self.assign_w = _scatter_assign(
+                self.assign_idx, self.assign_w, jnp.asarray(rows), val, idx,
+                r=self.cfg.assign_k)
+        self.assigned_upto = n
+
+    # ------------------------------------------------------------------ #
+    def landmark_values(self, g) -> np.ndarray:
+        """The (L,) committed landmark labels ``fL`` — ground-truth label
+        for seeded landmarks, committed fractional label otherwise.  O(L)
+        per commit; this is the whole "refresh the label matrix
+        incrementally" cost."""
+        ids_pad = np.zeros(self.cfg.num_landmarks, np.int64)
+        ids_pad[: len(self.lm_ids)] = self.lm_ids
+        f = g.f[ids_pad].astype(np.float32)
+        lab = g.labels[ids_pad]
+        return np.where(lab >= 0, lab.astype(np.float32), f)
+
+    def cold_values(self, lm_f: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """Low-rank label estimates for every assigned row.
+
+        Returns host ``(est, wsum)`` over the padded node axis; rows with
+        ``wsum == 0`` (never assigned, or no valid landmark) have no
+        estimate and must keep their previous label.
+        """
+        est, wsum = _cold_pass(self.assign_idx, self.assign_w,
+                               jnp.asarray(lm_f))
+        return np.asarray(est), np.asarray(wsum)
+
+    # ------------------------------------------------------------------ #
+    def state_arrays(self) -> dict:
+        """Device/host arrays for persistence (``core.persistence``)."""
+        return {"ids": np.asarray(self.lm_ids, np.int64),
+                "emb": self.lm_emb, "lm_valid": self.lm_valid,
+                "assign_idx": self.assign_idx, "assign_w": self.assign_w}
+
+    def state_meta(self) -> dict:
+        """JSON-friendly scalar state for the checkpoint ``meta`` leaf."""
+        return {"num_landmarks": self.cfg.num_landmarks,
+                "assign_k": self.cfg.assign_k,
+                "hot_ttl": self.cfg.hot_ttl,
+                "resample_factor": self.cfg.resample_factor,
+                "dead_frac_max": self.cfg.dead_frac_max,
+                "assigned_upto": int(self.assigned_upto),
+                "sampled_alive": int(self.sampled_alive),
+                "resamples": int(self.resamples)}
+
+    def load_state(self, arrays: dict, meta: dict) -> None:
+        """Adopt a persisted snapshot (restore path)."""
+        self.lm_ids = np.asarray(arrays["ids"], np.int64)
+        self.lm_emb = jnp.asarray(np.asarray(arrays["emb"], np.float32))
+        self.lm_valid = jnp.asarray(np.asarray(arrays["lm_valid"], bool))
+        self.assign_idx = jnp.asarray(
+            np.asarray(arrays["assign_idx"], np.int32))
+        self.assign_w = jnp.asarray(
+            np.asarray(arrays["assign_w"], np.float32))
+        self.assigned_upto = int(meta["assigned_upto"])
+        self.sampled_alive = int(meta["sampled_alive"])
+        self.resamples = int(meta["resamples"])

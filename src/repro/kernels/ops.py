@@ -33,6 +33,21 @@ Registered backends:
                        transports; auto-eligible on TPU when the
                        post-reorder block fill factor clears
                        ``BSR_AUTO_FILL_MIN``.
+  * ``"landmark"``   — the APPROXIMATE hot/cold split for beyond-HBM
+                       graphs (``kernels.landmark_propagate``): exact
+                       barriered Jacobi on the hot working set, a
+                       low-rank landmark pass for the cold tail.  The
+                       hot/cold machinery lives in the streaming engine
+                       (working-set tracking, cold-label folding, commit
+                       refresh); standalone ``run_propagation`` calls
+                       degrade to the exact ``ref`` body.  Unlike every
+                       other backend its contract is a recorded hot-set
+                       agreement floor, NOT bit-equality — see
+                       docs/backends.md.  Auto-eligible only when the
+                       caller declares ``ProblemInfo.landmark_ready``
+                       (the engine does, once landmark state is
+                       configured and sampled) and the row count clears
+                       ``LANDMARK_AUTO_MIN_ROWS``.
 
 ``backend="auto"`` scans the registry by priority and takes the first
 backend whose ``auto_eligible`` accepts the problem; the
@@ -71,6 +86,7 @@ from repro.kernels.ell_propagate import ell_propagate_step
 
 
 def on_tpu() -> bool:
+    """True when jax dispatches to a real TPU (not interpret mode)."""
     return jax.default_backend() == "tpu"
 
 
@@ -90,6 +106,11 @@ BSR_BLOCK_SIZE = 8
 # zeros and the VPU ELL kernel wins.
 BSR_AUTO_FILL_MIN = 0.25
 
+# auto may pick the approximate landmark backend only at row counts
+# where exact staging pressure is real — below this the whole problem
+# fits a single exact rung comfortably and approximation buys nothing.
+LANDMARK_AUTO_MIN_ROWS = 4096
+
 
 # --------------------------------------------------------------------- #
 # Backend registry
@@ -101,11 +122,16 @@ class ProblemInfo:
     ``block_fill`` is the post-component-reorder BSR fill factor — only
     the streaming engine measures it (at rung entry); plain callers leave
     it ``None``, which keeps ``bsr`` out of their auto scan.
+    ``landmark_ready`` declares that the caller runs the hot/cold
+    landmark machinery (sampled landmarks + assignment table); plain
+    callers leave it False, which keeps the approximate ``landmark``
+    backend out of their auto scan the same way.
     """
 
     num_rows: int | None = None
     block_fill: float | None = None
     sharded: bool = False
+    landmark_ready: bool = False
 
 
 @dataclasses.dataclass(frozen=True)
@@ -131,10 +157,12 @@ def register_backend(spec: BackendSpec) -> BackendSpec:
 
 
 def backend_names() -> tuple[str, ...]:
+    """Registered backend names, registration order."""
     return tuple(_REGISTRY)
 
 
 def backend_spec(name: str) -> BackendSpec:
+    """The registered ``BackendSpec`` for ``name`` (raises on unknown)."""
     spec = _REGISTRY.get(name)
     if spec is None:
         raise ValueError(
@@ -157,6 +185,7 @@ def select_backend(backend: str | None = None,
                    num_rows: int | None = None,
                    sharded: bool = False,
                    block_fill: float | None = None,
+                   landmark_ready: bool = False,
                    use_env: bool = True) -> str:
     """Resolve ``backend`` (None/"auto" → registry scan, env override).
 
@@ -181,7 +210,7 @@ def select_backend(backend: str | None = None,
         from_env = env != "auto"
         backend = env
     info = ProblemInfo(num_rows=num_rows, block_fill=block_fill,
-                       sharded=sharded)
+                       sharded=sharded, landmark_ready=landmark_ready)
     hw = jax.default_backend()
     if backend == "auto":
         return _auto_select(info, hw)
@@ -207,7 +236,8 @@ def backend_candidates(backend: str | None = None, *,
         if not (sharded and not spec.sharded):
             return (env,)
     hw = jax.default_backend()
-    optimistic = ProblemInfo(num_rows=None, block_fill=1.0, sharded=sharded)
+    optimistic = ProblemInfo(num_rows=None, block_fill=1.0, sharded=sharded,
+                             landmark_ready=True)
     return tuple(
         s.name for s in sorted(_REGISTRY.values(),
                                key=lambda s: -s.auto_priority)
@@ -254,10 +284,12 @@ def propagate_pallas(
     idx = jnp.where(mask, problem.nbr, 0)
 
     def cond(state):
+        """Sweep while the frontier is non-empty and iterations remain."""
         _, frontier, it, _ = state
         return jnp.logical_and(frontier.any(), it < max_iters)
 
     def body(state):
+        """One frontier-masked Jacobi sweep; returns the next state."""
         f, frontier, it, _ = state
         f_new, changed = ell_propagate_step(
             problem.nbr, problem.wgt, problem.wl0, problem.wl1,
@@ -297,10 +329,12 @@ def _bsr_fixpoint(problem, slot, f0, frontier0, delta, max_iters, interpret,
     n = nbr.shape[0]
 
     def cond(state):
+        """Sweep while the frontier is non-empty and iterations remain."""
         _, frontier, it, _ = state
         return jnp.logical_and(frontier.any(), it < max_iters)
 
     def body(state):
+        """One frontier-masked Jacobi sweep; returns the next state."""
         f, frontier, it, _ = state
         # F'_u = (Σ_v w(u,v)·F_v + wl1_u) / Wall_u — §5's weighted average,
         # with the neighbor sum as a block-sparse matvec on the MXU.
@@ -400,6 +434,7 @@ def propagate_bsr(
     layout = ell_bsr_layout(nbr_p, block_size)
 
     def rpad(x, fill=0):
+        """Pad per-row arrays to the block multiple, then permute."""
         x = np.asarray(x)
         if not pad:
             return x[order]
@@ -473,6 +508,27 @@ def _run_bsr(problem, f0, frontier0, *, delta, max_iters, interpret, donate,
                          donate=donate)
 
 
+def _run_landmark(problem, f0, frontier0, *, delta, max_iters, donate, **_):
+    """The landmark backend's solve body — the exact reference update.
+
+    The approximation lives entirely in how the streaming engine STAGES
+    for this backend (hot-restricted snapshot with cold labels folded as
+    boundary weights, plus the commit-time low-rank cold pass in
+    ``kernels.landmark_propagate``).  The staged problem itself is solved
+    exactly, so standalone callers selecting ``landmark`` just get the
+    reference answer.
+    """
+    return _run_ref(problem, f0, frontier0, delta=delta,
+                    max_iters=max_iters, donate=donate)
+
+
+def _landmark_cold_entry():
+    # deferred: landmark_propagate imports argkmin, which this module's
+    # importers don't all need at import time
+    from repro.kernels.landmark_propagate import _cold_pass
+    return _cold_pass
+
+
 register_backend(BackendSpec(
     name="ref",
     sharded=True,
@@ -505,6 +561,18 @@ register_backend(BackendSpec(
     and (info.num_rows is None or info.num_rows >= _PALLAS_MIN_ROWS),
     run=_run_bsr,
     cache_entry_points=(lambda: _bsr_solve, lambda: _bsr_donating),
+))
+
+register_backend(BackendSpec(
+    name="landmark",
+    sharded=True,  # the hot solve reuses the ref mesh body + transports
+    transports=("allgather", "halo"),
+    auto_priority=40,  # when the caller runs hot/cold, scale wins
+    auto_eligible=lambda info, hw: info.landmark_ready and (
+        info.num_rows is None or info.num_rows >= LANDMARK_AUTO_MIN_ROWS),
+    run=_run_landmark,
+    cache_entry_points=(lambda: propagate, lambda: _ref_donating,
+                        _landmark_cold_entry),
 ))
 
 BACKENDS = backend_names()

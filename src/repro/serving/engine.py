@@ -62,6 +62,7 @@ class ReadTicket:
 
     @property
     def done(self) -> bool:
+        """True once the driver has fulfilled (or failed) this ticket."""
         return self._done.is_set()
 
     def wait(self, timeout: float | None = None):
@@ -91,6 +92,7 @@ class ReadBatcher:
         self._closed = False
 
     def submit(self, ids: np.ndarray, cutoff: float) -> ReadTicket:
+        """Queue a read for the driver's next fused gather."""
         t = ReadTicket(ids, cutoff)
         with self._lock:
             if self._closed:
@@ -100,12 +102,14 @@ class ReadBatcher:
         return t
 
     def take_all(self) -> list[ReadTicket]:
+        """Drain the queue (driver side): all tickets, atomically."""
         with self._lock:
             tickets, self._tickets = self._tickets, []
         return tickets
 
     @property
     def pending(self) -> int:
+        """Tickets queued but not yet taken by the driver."""
         with self._lock:
             return len(self._tickets)
 
@@ -118,6 +122,7 @@ class ReadBatcher:
         return tickets
 
     def wait_for_work(self, timeout: float):
+        """Park the driver until a submit arrives or ``timeout`` lapses."""
         self._wake.wait(timeout)
         self._wake.clear()
 
@@ -149,6 +154,8 @@ class ServiceDriver(threading.Thread):
         self.deadline_admissions = 0  # windows admitted by the clock
 
     def run(self):
+        """Driver loop: fuse queued reads, pump the service's admission
+        clock, exit only after a halt request has drained stragglers."""
         while True:
             tickets = self._batcher.take_all()
             if tickets:
@@ -195,6 +202,8 @@ class ServiceDriver(threading.Thread):
 
 @dataclasses.dataclass
 class Request:
+    """One decode request: prompt tokens in, generated tokens out."""
+
     uid: int
     prompt: np.ndarray  # (S,) int32
     max_new: int = 16
@@ -203,6 +212,9 @@ class Request:
 
 
 class ServeEngine:
+    """Slot-based continuous-batching decode loop (the KV-cache serving
+    exemplar the ServiceDriver's fused-read design borrows from)."""
+
     def __init__(self, model, params, max_batch: int = 4, s_max: int = 256):
         self.model = model
         self.params = params
@@ -230,6 +242,7 @@ class ServeEngine:
         """Adopt only ``slot``'s rows from new_cache (other slots frozen)."""
 
         def leaf(new, old, axis):
+            """Copy one slot's rows along this leaf's batch axis."""
             idx = [slice(None)] * new.ndim
             idx[axis] = slice(slot, slot + 1)
             return old.at[tuple(idx)].set(new[tuple(idx)])
@@ -237,6 +250,7 @@ class ServeEngine:
         self.cache = jax.tree.map(leaf, new_cache, self.cache, self.batch_axes)
 
     def submit(self, req: Request) -> bool:
+        """Prefill ``req`` into a free slot; False when all slots busy."""
         slot = self._free_slot()
         if slot is None:
             return False
@@ -281,6 +295,7 @@ class ServeEngine:
                 self.slots[i] = None
 
     def run(self, requests: list[Request], max_steps: int = 1_000):
+        """Drive all ``requests`` to completion (admit-as-slots-free)."""
         pending = list(requests)
         while (pending or any(s is not None for s in self.slots)) \
                 and self.steps < max_steps:

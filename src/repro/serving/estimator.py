@@ -79,9 +79,12 @@ class DynLabelPropagation:
         return [p for p in sig.parameters if p != "self"]
 
     def get_params(self, deep: bool = True) -> dict:
+        """Constructor parameters, sklearn-style (``deep`` is accepted
+        for API compatibility; there are no nested estimators)."""
         return {name: getattr(self, name) for name in self._param_names()}
 
     def set_params(self, **params) -> "DynLabelPropagation":
+        """Set constructor parameters in place, sklearn-style."""
         valid = set(self._param_names())
         for key, val in params.items():
             if key not in valid:

@@ -94,10 +94,12 @@ class MutationTicket:
 
     @property
     def committed(self) -> bool:
+        """Whether the mutation has landed in a committed view."""
         return self.committed_at is not None
 
     @property
     def latency_ms(self) -> float | None:
+        """Enqueue-to-commit latency, or None while still pending."""
         if self.committed_at is None:
             return None
         return (self.committed_at - self.enqueued_at) * 1e3
@@ -115,6 +117,8 @@ class QueryResult:
 
 @dataclasses.dataclass(frozen=True)
 class ServiceStats:
+    """Point-in-time counters for one LPService instance."""
+
     queries: int
     query_nodes: int
     queries_while_inflight: int  # reads served while a solve was pending
@@ -285,6 +289,7 @@ class LPService:
 
     @property
     def driver_running(self) -> bool:
+        """Whether the background commit driver thread is alive."""
         d = self._driver
         return d is not None and d.is_alive()
 
@@ -450,6 +455,7 @@ class LPService:
         return out
 
     def committed_view(self) -> LabelView:
+        """Snapshot handle over the last committed labels."""
         return self.engine.committed_view()
 
     # ------------------------------------------------------------------ #
@@ -686,6 +692,7 @@ class LPService:
 
     # ------------------------------------------------------------------ #
     def stats(self) -> ServiceStats:
+        """Current service counters plus commit-latency percentiles."""
         lat = self._commit_latency_ms
         pct = {}
         if lat:

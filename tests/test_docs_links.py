@@ -1,6 +1,7 @@
-"""The docs front door stays navigable: every relative link and
-``path:line`` code reference in README.md + docs/*.md resolves
-(tools/check_docs_links.py — CI runs the same check as a tier-1 step)."""
+"""The docs front door stays navigable: every relative link, ``#anchor``
+fragment, and ``path:line`` code reference in README.md + docs/*.md
+resolves (tools/check_docs_links.py — CI runs the same check as a
+tier-1 step)."""
 
 import pathlib
 import sys
@@ -13,8 +14,19 @@ import check_docs_links  # noqa: E402
 
 def test_readme_and_docs_exist():
     assert (REPO / "README.md").exists()
-    for doc in ("serving.md", "streaming.md", "benchmarks.md"):
+    for doc in ("README.md", "serving.md", "streaming.md", "benchmarks.md",
+                "backends.md"):
         assert (REPO / "docs" / doc).exists(), f"docs/{doc} missing"
+
+
+def test_docs_index_covers_every_page():
+    """docs/README.md is the index: every docs/*.md page must be linked
+    from it (a page nobody can navigate to is a page nobody reads)."""
+    index = (REPO / "docs" / "README.md").read_text()
+    for page in sorted((REPO / "docs").glob("*.md")):
+        if page.name == "README.md":
+            continue
+        assert f"({page.name}" in index, f"docs/README.md misses {page.name}"
 
 
 def test_all_docs_references_resolve():
@@ -38,3 +50,38 @@ def test_checker_catches_broken_references(tmp_path):
     assert "docs/real.md:99" in msgs  # line past end of file
     assert "NoSuchSymbol" in msgs  # ::symbol absent from the file
     assert "[ok](docs/real.md)" not in msgs
+
+
+def test_slugify_matches_github_rendering():
+    assert check_docs_links.slugify("Backends") == "backends"
+    assert check_docs_links.slugify("Hot / cold split") == "hot--cold-split"
+    assert (check_docs_links.slugify("`BENCH_landmark.json` schema")
+            == "bench_landmarkjson-schema")
+    assert (check_docs_links.slugify("§ Auto-selection rules")
+            == "-auto-selection-rules")
+    assert (check_docs_links.slugify("[linked](docs/x.md) heading")
+            == "linked-heading")
+
+
+def test_anchors_skip_fenced_code_and_number_duplicates(tmp_path):
+    md = tmp_path / "page.md"
+    md.write_text("# Title\n\n## Usage\n\n```bash\n# not a heading\n```\n\n"
+                  "## Usage\n")
+    assert (check_docs_links.anchors_of(md)
+            == {"title", "usage", "usage-1"})
+
+
+def test_checker_catches_broken_anchors(tmp_path):
+    (tmp_path / "docs").mkdir()
+    (tmp_path / "docs" / "real.md").write_text(
+        "# Real Page\n\n## The `bsr` backend\n")
+    (tmp_path / "README.md").write_text(
+        "[ok](docs/real.md#the-bsr-backend) "
+        "[bad](docs/real.md#no-such-section)\n"
+        "# Local\n[self-ok](#local) [self-bad](#nowhere)\n")
+    msgs = "\n".join(
+        check_docs_links.check_file(tmp_path / "README.md", tmp_path))
+    assert "docs/real.md#no-such-section" in msgs
+    assert "#nowhere" in msgs
+    assert "the-bsr-backend" not in msgs
+    assert "(#local)" not in msgs

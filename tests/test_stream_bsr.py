@@ -42,10 +42,10 @@ def _empty_batch(dim):
 def test_registry_declares_capabilities():
     """Every backend is a registry entry with declared capabilities —
     the dispatch layer has no hard-coded backend names left."""
-    assert ops.backend_names() == ("ref", "ell_pallas", "bsr")
+    assert ops.backend_names() == ("ref", "ell_pallas", "bsr", "landmark")
     for name in ops.backend_names():
         spec = ops.backend_spec(name)
-        assert spec.sharded  # all three have a core.distributed body
+        assert spec.sharded  # all four have a core.distributed body
         assert spec.transports == ("allgather", "halo")
         assert callable(spec.auto_eligible) and callable(spec.run)
     with pytest.raises(ValueError, match="unknown backend"):

@@ -1,0 +1,238 @@
+"""Landmark backend: registry contract, hot/cold streaming agreement,
+auto-eligibility latch, checkpoint round-trip, forced 8-device mesh.
+
+The landmark backend is the repo's first APPROXIMATE backend — its
+contract is a hot-set agreement floor vs the exact engine, not
+bit-equality (docs/backends.md).  Two things still ARE exact and tested
+as such: the mesh form (hot solve + cold pass are deterministic, so
+sharded landmark labels match single-device landmark labels bit-for-bit)
+and checkpoint/restore (a restored hot/cold stream replays identically).
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core.stream import StreamEngine
+from repro.data.synth import StreamSpec, gaussian_mixture_stream
+from repro.graph.dynamic import UNLABELED, DynamicGraph
+from repro.kernels import ops
+from repro.kernels.landmark_propagate import LandmarkConfig
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# 50 mixed insert/delete batches (paper protocol fractions shifted
+# delete-heavy, 5% ground-truth seeds so propagation is actually
+# exercised) — the acceptance workload
+SPEC_50 = StreamSpec(total_vertices=1500, batch_size=30, seed=11,
+                     class_sep=6.0, noise=0.9, frac_deleted=0.2,
+                     frac_labeled=0.05)
+
+LM_CFG = dict(num_landmarks=32, assign_k=4, hot_ttl=3)
+
+
+def _mixed_batches(spec=SPEC_50):
+    batches = [b for b, _ in gaussian_mixture_stream(spec)]
+    assert len(batches) == 50
+    assert any(len(b.del_ids) for b in batches)
+    return batches
+
+
+# ------------------------------------------------------------------ #
+# registry contract
+# ------------------------------------------------------------------ #
+def test_landmark_registry_capabilities(monkeypatch):
+    monkeypatch.delenv("REPRO_BACKEND", raising=False)  # pure auto-scan test
+    spec = ops.backend_spec("landmark")
+    assert spec.sharded and spec.transports == ("allgather", "halo")
+    # outranks every exact backend when eligible: scale wins
+    assert spec.auto_priority > max(
+        ops.backend_spec(n).auto_priority
+        for n in ("ref", "ell_pallas", "bsr"))
+    # eligibility needs BOTH the caller-declared hot/cold machinery and
+    # a row count where exact staging pressure is real
+    big, small = ops.LANDMARK_AUTO_MIN_ROWS, ops.LANDMARK_AUTO_MIN_ROWS - 1
+    for hw in ("cpu", "tpu"):  # unlike bsr/ell_pallas: not TPU-gated
+        assert spec.auto_eligible(
+            ops.ProblemInfo(num_rows=big, landmark_ready=True), hw)
+    assert not spec.auto_eligible(
+        ops.ProblemInfo(num_rows=big, landmark_ready=False), "cpu")
+    assert not spec.auto_eligible(
+        ops.ProblemInfo(num_rows=small, landmark_ready=True), "cpu")
+    # plain callers (no landmark_ready) never see it in an auto scan
+    assert ops.select_backend("auto", num_rows=big) == "ref"
+    assert ops.select_backend("auto", num_rows=big,
+                              landmark_ready=True) == "landmark"
+
+
+def test_landmark_env_hint(monkeypatch):
+    """REPRO_BACKEND=landmark is a fleet-wide hint like any other."""
+    monkeypatch.setenv("REPRO_BACKEND", "landmark")
+    assert ops.select_backend(None) == "landmark"
+    assert ops.backend_candidates(None) == ("landmark",)
+    # standalone run_propagation degrades to the exact ref body — the
+    # hot/cold split only exists inside the engine
+    from repro.core.propagate import PropagationProblem, propagate
+    nbr = np.full((4, 2), -1, np.int32)
+    p = PropagationProblem(
+        nbr=nbr, wgt=np.zeros((4, 2), np.float32),
+        wl0=np.ones(4, np.float32), wl1=np.zeros(4, np.float32),
+        valid=np.ones(4, bool))
+    f0 = np.full(4, 0.5, np.float32)
+    fr = np.ones(4, bool)
+    res = ops.run_propagation(p, f0, fr)
+    want = propagate(p, f0, fr)
+    np.testing.assert_array_equal(np.asarray(res.f), np.asarray(want.f))
+
+
+# ------------------------------------------------------------------ #
+# hot/cold streaming (single device)
+# ------------------------------------------------------------------ #
+def test_landmark_stream_mixed_50_batches_agreement():
+    """The acceptance workload: 50 mixed insert/delete batches through
+    the exact engine and the landmark engine; hot-set binary agreement
+    must clear the recorded floor, and the hot/cold machinery must have
+    actually engaged (cold rows served, 'landmark' in per-batch stats)."""
+    g_ref = DynamicGraph(emb_dim=SPEC_50.emb_dim, k=5)
+    g_lm = DynamicGraph(emb_dim=SPEC_50.emb_dim, k=5)
+    ref = StreamEngine(g_ref, delta=1e-4)
+    lm = StreamEngine(g_lm, delta=1e-4, backend="landmark", landmark=LM_CFG)
+    backends = []
+    for b in _mixed_batches():
+        ref.step(b)
+        backends.append(lm.step(b).backend)
+    assert backends[-1] == "landmark"
+    summary = lm.transport_summary()["landmark"]
+    assert summary["streaming"] and summary["batches"] > 0
+    assert summary["cold_rows"] > 0  # the low-rank pass served rows
+    ids = np.flatnonzero(g_ref.alive & (g_ref.labels == UNLABELED))
+    hot = (lm._touched_at[ids] >= 0) & (
+        lm.batches - lm._touched_at[ids] <= LM_CFG["hot_ttl"])
+    assert hot.sum() > 0
+    pr = g_ref.f[ids] >= 0.5
+    pl = g_lm.f[ids] >= 0.5
+    assert (pr[hot] == pl[hot]).mean() >= 0.98  # the agreement contract
+
+
+def test_landmark_auto_latch(monkeypatch):
+    """backend='auto' + a landmark config: the registry picks landmark
+    once the state is ready and the row count clears the threshold, and
+    the decision latches — deletions shrinking the graph back under the
+    threshold must not flip later batches to an exact backend."""
+    monkeypatch.setattr(ops, "LANDMARK_AUTO_MIN_ROWS", 256)
+    monkeypatch.delenv("REPRO_BACKEND", raising=False)
+    g = DynamicGraph(emb_dim=SPEC_50.emb_dim, k=5)
+    eng = StreamEngine(g, delta=1e-4, landmark=LM_CFG)
+    backends = [eng.step(b).backend for b in _mixed_batches()]
+    assert eng._lm_streaming
+    # ref until activation+threshold, landmark from the latch on
+    flip = backends.index("landmark")
+    assert all(b == "landmark" for b in backends[flip:] if b != "none")
+    # without a config, the same auto engine NEVER picks landmark
+    g2 = DynamicGraph(emb_dim=SPEC_50.emb_dim, k=5)
+    eng2 = StreamEngine(g2, delta=1e-4)
+    assert eng2._lm is None
+    spec = StreamSpec(total_vertices=600, batch_size=100, seed=3,
+                      class_sep=6.0, noise=0.9)
+    assert all(eng2.step(b).backend != "landmark"
+               for b, _ in gaussian_mixture_stream(spec))
+
+
+def test_landmark_config_validation():
+    with pytest.raises(ValueError, match="invalid LandmarkConfig"):
+        LandmarkConfig(num_landmarks=0)
+    with pytest.raises(ValueError, match="invalid LandmarkConfig"):
+        StreamEngine(DynamicGraph(emb_dim=8, k=3), landmark=dict(assign_k=0))
+
+
+# ------------------------------------------------------------------ #
+# durability
+# ------------------------------------------------------------------ #
+def test_landmark_checkpoint_roundtrip(tmp_path):
+    """Stop a hot/cold stream mid-way, checkpoint, restore, continue:
+    labels bit-identical to the uninterrupted stream (PR 8's contract
+    extends to the landmark state — working-set clock, assignments,
+    latch all round-trip)."""
+    batches = _mixed_batches()
+    cut = 20
+
+    def mk():
+        g = DynamicGraph(emb_dim=SPEC_50.emb_dim, k=5)
+        return StreamEngine(g, delta=1e-4, backend="landmark",
+                            landmark=LM_CFG)
+
+    full, part = mk(), mk()
+    for i, b in enumerate(batches):
+        full.step(b)
+        if i < cut:
+            part.step(b)
+    assert part._lm_streaming  # the cut lands after the latch
+    part.checkpoint(str(tmp_path))
+    rest = StreamEngine.restore(str(tmp_path))
+    assert rest._lm_streaming and rest._lm.ready
+    np.testing.assert_array_equal(rest._touched_at, part._touched_at)
+    for b in batches[cut:]:
+        rest.step(b)
+    np.testing.assert_array_equal(full.graph.f, rest.graph.f)
+    s_full = full.transport_summary()["landmark"]
+    s_rest = rest.transport_summary()["landmark"]
+    assert s_rest["batches"] == s_full["batches"]
+    assert s_rest["cold_rows"] == s_full["cold_rows"]
+
+
+# ------------------------------------------------------------------ #
+# forced 8-device mesh (subprocess: XLA_FLAGS must precede jax init)
+# ------------------------------------------------------------------ #
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    import sys
+    sys.path.insert(0, {src!r})
+    import numpy as np
+    from repro.core.stream import StreamEngine
+    from repro.data.synth import StreamSpec, gaussian_mixture_stream
+    from repro.graph.dynamic import DynamicGraph
+    from repro.launch.mesh import make_stream_mesh
+
+    spec = StreamSpec(total_vertices=1500, batch_size=30, seed=11,
+                      class_sep=6.0, noise=0.9, frac_deleted=0.2,
+                      frac_labeled=0.05)
+    batches = [b for b, _ in gaussian_mixture_stream(spec)]
+    assert len(batches) == 50 and any(len(b.del_ids) for b in batches)
+
+    mesh = make_stream_mesh()
+    assert mesh.devices.size == 8, mesh
+    cfg = dict(num_landmarks=32, assign_k=4, hot_ttl=3)
+    g_m = DynamicGraph(emb_dim=spec.emb_dim, k=5)
+    g_s = DynamicGraph(emb_dim=spec.emb_dim, k=5)
+    eng_m = StreamEngine(g_m, delta=1e-4, mesh=mesh, backend="landmark",
+                         landmark=cfg)
+    eng_s = StreamEngine(g_s, delta=1e-4, backend="landmark", landmark=cfg)
+    for b in batches:
+        st_m = eng_m.step(b)
+        eng_s.step(b)
+    # deterministic hot solve + cold pass: the mesh form is bit-identical
+    np.testing.assert_array_equal(g_m.f, g_s.f)
+    assert st_m.backend == "landmark"
+    s = eng_m.transport_summary()["landmark"]
+    assert s["streaming"] and s["batches"] > 0 and s["cold_rows"] > 0
+    print("OK landmark-8dev")
+""")
+
+
+def test_landmark_stream_8dev():
+    """50 mixed insert/delete batches on a forced 8-device CPU mesh:
+    the landmark engine streams, and its labels are bit-identical to the
+    single-device landmark engine (the approximation is in the staging,
+    which is mesh-independent — the solve itself stays exact)."""
+    env = dict(os.environ, JAX_PLATFORMS="cpu")
+    out = subprocess.run(
+        [sys.executable, "-c", SCRIPT.format(src=SRC)],
+        capture_output=True, text=True, env=env, timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "OK landmark-8dev" in out.stdout

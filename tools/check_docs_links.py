@@ -5,8 +5,13 @@ Checked, per markdown file:
 
 * relative links ``[text](target)`` — ``target`` must exist on disk,
   resolved against the file's own directory (external ``http(s)://`` /
-  ``mailto:`` targets and pure ``#anchor`` self-links are skipped; a
-  ``path#anchor`` link is checked for the path part);
+  ``mailto:`` targets are skipped);
+* anchor fragments — a pure ``#anchor`` self-link must match a heading
+  in the same file, and the fragment of a ``path.md#anchor`` link must
+  match a heading in the target file.  Headings are slugified the way
+  GitHub renders them (lowercase, code spans unwrapped, punctuation
+  stripped, spaces to hyphens, ``-N`` suffixes for duplicates), and
+  headings inside fenced code blocks don't count;
 * inline-code file references — a backtick span that looks like a repo
   path (``benchmarks/serve_lp.py``, ``docs/serving.md``, optionally
   ``::qualifier`` or ``:line``) must exist relative to the repo root
@@ -38,6 +43,41 @@ PATHLIKE = re.compile(
     r"^(?P<path>[\w./-]+\.(?:py|md|json|yml|yaml|toml|txt))"
     r"(?:::?(?P<rest>[\w.:\[\]-]+))?$")
 EXTERNAL = ("http://", "https://", "mailto:")
+FENCE = re.compile(r"^(?:```|~~~)")
+HEADING = re.compile(r"^(#{1,6})\s+(.*?)\s*#*\s*$")
+
+
+def slugify(heading: str) -> str:
+    """GitHub's anchor slug for a heading: code spans and link syntax
+    unwrapped, lowercased, punctuation dropped (word chars, hyphens and
+    spaces survive), spaces to hyphens."""
+    text = re.sub(r"`([^`]*)`", r"\1", heading)
+    text = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", text)
+    text = re.sub(r"[^\w\- ]", "", text.strip().lower())
+    return text.replace(" ", "-")
+
+
+def anchors_of(md: pathlib.Path) -> set[str]:
+    """All anchor slugs a markdown file exposes.  Duplicate headings get
+    GitHub's ``-1``/``-2`` suffixes; fenced code blocks are skipped (a
+    ``# comment`` in a shell listing is not a heading)."""
+    slugs: set[str] = set()
+    seen: dict[str, int] = {}
+    in_fence = False
+    for line in md.read_text().splitlines():
+        if FENCE.match(line.lstrip()):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        m = HEADING.match(line)
+        if not m:
+            continue
+        slug = slugify(m.group(2))
+        n = seen.get(slug, 0)
+        seen[slug] = n + 1
+        slugs.add(slug if n == 0 else f"{slug}-{n}")
+    return slugs
 
 
 def md_files(root: pathlib.Path) -> list[pathlib.Path]:
@@ -52,13 +92,18 @@ def check_file(md: pathlib.Path, root: pathlib.Path) -> list[str]:
     rel = md.relative_to(root)
     for m in MD_LINK.finditer(text):
         target = m.group(1)
-        if target.startswith(EXTERNAL) or target.startswith("#"):
+        if target.startswith(EXTERNAL):
             continue
-        path = target.split("#", 1)[0]
-        if not path:
+        path, _, frag = target.partition("#")
+        if not path:  # self-link: the anchor must exist in THIS file
+            if frag and frag not in anchors_of(md):
+                errors.append(f"{rel}: broken anchor ({target})")
             continue
-        if not (md.parent / path).exists():
+        dest = md.parent / path
+        if not dest.exists():
             errors.append(f"{rel}: broken link ({target})")
+        elif frag and dest.suffix == ".md" and frag not in anchors_of(dest):
+            errors.append(f"{rel}: broken anchor ({target})")
     for m in CODE_SPAN.finditer(text):
         span = m.group(1)
         pm = PATHLIKE.match(span)
