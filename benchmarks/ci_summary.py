@@ -116,7 +116,7 @@ def serve_rows(bench: dict) -> list[tuple[str, str]]:
 
 def ingest_rows(bench: dict) -> list[tuple[str, str]]:
     rows = []
-    for arm in ("host", "device"):
+    for arm in ("host", "device", "sharded"):
         r = bench.get(arm)
         if not r:
             continue
@@ -139,6 +139,27 @@ def ingest_rows(bench: dict) -> list[tuple[str, str]]:
              f"{_get(bench, 'device', 'ingest_cache_entries')} / "
              f"{_get(bench, 'device', 'ingest_cache_bound')}"),
         ]
+    if "sharded" in bench:
+        rows += [
+            ("sharded vs device arm",
+             f"{_get(bench, 'sharded_over_device')}x "
+             f"(floor {_get(bench, 'floors', 'sharded_over_device')}x, "
+             f"{_get(bench, 'sharded', 'n_devices')} virtual devices)"),
+            ("sharded agreement (bit-identical graphs)",
+             _get(bench, "agreement_sharded")),
+            ("sharded per-device store bytes (≤ 1/D + slack)",
+             f"{_get(bench, 'sharded', 'store_device_bytes')} / "
+             f"{_get(bench, 'sharded_bytes_per_device_bound')}"),
+            ("sharded ingest jit entries (≤ ladder)",
+             f"{_get(bench, 'sharded', 'ingest_cache_entries')} / "
+             f"{_get(bench, 'sharded', 'ingest_cache_bound')}"),
+        ]
+    if "locality" in bench:
+        rows.append(
+            ("locality admission export fraction (vs arrival)",
+             f"{_get(bench, 'locality', 'export_fraction')} vs "
+             f"{_get(bench, 'locality', 'export_fraction_arrival')} "
+             f"(delta {_get(bench, 'locality', 'export_fraction_delta')})"))
     return rows
 
 

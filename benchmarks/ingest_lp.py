@@ -1,8 +1,8 @@
-"""Ingestion benchmark: host-staged vs device-resident kNN candidate
-search feeding the same streaming LP engine.
+"""Ingestion benchmark: host-staged vs device-resident vs mesh-sharded
+kNN candidate search feeding the same streaming LP engine.
 
-Two arms replay ONE pre-generated embedding stream (so their graphs are
-comparable bit-for-bit) through ``StreamEngine``:
+Three arms replay ONE pre-generated embedding stream (so their graphs
+are comparable bit-for-bit) through ``StreamEngine``:
 
   * ``host``    — ``ingest="host"``: the staging path this PR's device
                   pipeline replaces.  Candidate search runs
@@ -11,6 +11,19 @@ comparable bit-for-bit) through ``StreamEngine``:
                   device-resident ``EmbeddingStore`` and one fused
                   ``kernels.argkmin`` pass per batch returns the new
                   rows' candidate supersets plus the displaced-row set.
+  * ``sharded`` — ``ingest="device"`` with the STORE sharded over a
+                  forced 8-virtual-device mesh (own subprocess,
+                  ``--xla_force_host_platform_device_count=8``): the
+                  ``ShardedEmbeddingStore`` row-shards the ladder and
+                  the argkmin orientation flips to move-the-batch
+                  (``core.distributed.StoreShardPlan``); the LP solve
+                  stays single-device so the arm isolates the store
+                  flip rather than re-timing the mesh solve
+                  (``stream_throughput.py``'s job).  Virtual devices
+                  share the same cores, so the gate is a no-regression
+                  bound, not a speedup claim — the headline here is
+                  per-device memory: each device holds exactly 1/D of
+                  the store.
 
 Each arm seeds a mixed insert/delete/mostly-labeled stream (growing the
 graph through several bucket rungs, so rung-crossing compiles are paid
@@ -28,24 +41,38 @@ ingestion item is about.  Arms run interleaved best-of-``ROUNDS``
   * kernel-vs-oracle agreement == 1.0 — the device arm's final graph
     (labels, adjacency, edges) is BIT-IDENTICAL to the host oracle's,
     the ``graph.knn`` module-docstring contract measured end to end;
+  * sharded-arm floors: its graph byte-identical to both single-device
+    arms, per-device store bytes ≤ 1/D of the unsharded store (+ one
+    ladder rung of slack), steady ops/s ≥
+    ``SHARDED_OVER_DEVICE_FLOOR`` x the device arm, and the sharded
+    ingest jit cache ≤ ``ingest_ladder_bound(..., sharded=True)``;
   * compile-once: engine recompiles ≤ the snapshot ladder bound, and
     the ingest path's jit entries ≤ ``ingest_ladder_bound`` — stream
     length never shows up in either cache.
 
-Single-device by design (``REPRO_FORCE_HOST_DEVICES`` is deliberately
-not applied): the 8-virtual-device bit-identity of the device ingest
-path is proven by tests/test_stream_sharded.py; this benchmark measures
-the ingest arms without mesh staging noise.  On a CPU-only host both
-arms share the same silicon, so the live host arm (sped up by the same
-graph-merge work) is the agreement oracle while the *recorded* 200
-ops/s reference carries the cross-PR throughput claim.
+The ``locality`` side-arm (not an identity arm: reordering arrivals
+changes id assignment by design) replays the device arm once with
+``ingest_order="locality"`` — ``data.synth.cosine_locality_order`` over
+each admitted batch — and records the top-rung halo export fraction
+next to the arrival-order arm's, the delta being the recorded measure
+of how much locality-ordered admission shrinks cross-shard halos.
+
+The single-device arms stay mesh-less by design (the sharded arm forces
+its own 8-virtual-device subprocess): on a CPU-only host all arms share
+the same silicon, so the live host arm (sped up by the same graph-merge
+work) is the agreement oracle while the *recorded* 200 ops/s reference
+carries the cross-PR throughput claim.
 """
 
 from __future__ import annotations
 
 import argparse
+import hashlib
 import json
 import os
+import subprocess
+import sys
+import textwrap
 import time
 
 import numpy as np
@@ -58,7 +85,9 @@ except ImportError:  # run as a script: sys.path[0] is benchmarks/ itself
 from repro.core.snapshot import ladder_size
 from repro.core.stream import StreamEngine
 from repro.graph.dynamic import UNLABELED, BatchUpdate, DynamicGraph
-from repro.ingest.incremental_knn import ingest_cache_size, ingest_ladder_bound
+from repro.graph.partition import build_halo_plan
+from repro.ingest.incremental_knn import (DeviceIngestor, ingest_cache_size,
+                                          ingest_ladder_bound)
 
 OUT = "BENCH_ingest.json"
 DELTA = 1e-3  # match stream_throughput: measure machinery, not solve depth
@@ -69,9 +98,9 @@ K = 5
 # insert batches (steady state — no supernode re-init churn, every batch
 # still solves the affected frontier)
 FULL = dict(dim=256, seed_rows=8000, seed_batch=200,
-            meas_batches=30, meas_batch=64)
+            meas_batches=30, meas_batch=128)
 TINY = dict(dim=128, seed_rows=2000, seed_batch=200,
-            meas_batches=10, meas_batch=64)
+            meas_batches=10, meas_batch=128)
 SEED_LABELED_FRAC = 0.9
 SEED_DELETE_FRAC = 0.05  # of each seed batch, from prior alive rows
 WARM_STEPS = 2  # measured-shape batches stepped before the clock starts
@@ -87,6 +116,15 @@ ROUNDS = 2
 # ops/s keeps the recorded provenance conservative rather than stale.
 HOST_STAGING_OPS_PER_SEC = 200.0
 DEVICE_OVER_REFERENCE_FLOOR = 5.0
+
+# Sharded-arm floors.  Virtual devices time-share the host cores and the
+# sweep adds two all-gathers per batch, so the throughput gate is a
+# no-regression bound (real speedup is a TPU claim).  The bytes slack
+# covers one capacity rung of ladder skew between arms.
+SHARDED_OVER_DEVICE_FLOOR = 0.8
+SHARD_BYTES_SLACK = 2.0
+SHARD_DEVICES = 8  # forced-virtual-CPU mesh size (and halo shard count
+                   # for the export-fraction measurement)
 
 
 def _make_stream(cfg: dict, seed: int = 0):
@@ -127,20 +165,40 @@ def _make_stream(cfg: dict, seed: int = 0):
     return seed_batches, warm, meas
 
 
-def _fingerprint(g: DynamicGraph) -> dict[str, bytes]:
-    """Byte images of everything the selector contract promises to keep
-    identical: committed labels, per-row adjacency, and the edge list."""
-    return {name: np.ascontiguousarray(arr).tobytes()
+def _fingerprint(g: DynamicGraph) -> dict[str, str]:
+    """sha256 images of everything the selector contract promises to keep
+    identical: committed labels, per-row adjacency, and the edge list —
+    hex digests so the sharded subprocess can ship its own over JSON."""
+    return {name: hashlib.sha256(np.ascontiguousarray(arr).tobytes())
+            .hexdigest()
             for name, arr in (("f", g.f), ("labels", g.labels),
                               ("knn_idx", g.knn_idx), ("knn_wgt", g.knn_wgt),
                               ("src", g.src), ("dst", g.dst),
                               ("wgt", g.wgt))}
 
 
-def _run_arm(ingest: str, cfg: dict, stream) -> dict:
+def _export_fraction(g: DynamicGraph) -> float:
+    """Fraction of alive rows a SHARD_DEVICES-way halo layout of the
+    final (top-rung) adjacency would export — the transport-facing
+    number locality-ordered admission is supposed to shrink."""
+    plan = build_halo_plan(np.asarray(g.knn_idx, np.int32), SHARD_DEVICES)
+    return round(float(plan.export_counts.sum())
+                 / max(1, int(g.alive.sum())), 4)
+
+
+def _run_arm(ingest: str, cfg: dict, stream, store_mesh=None,
+             ingest_order: str = "arrival") -> dict:
     seed_batches, warm, meas = stream
     g = DynamicGraph(emb_dim=cfg["dim"], k=K)
-    eng = StreamEngine(g, delta=DELTA, ingest=ingest)
+    eng = StreamEngine(g, delta=DELTA, ingest=ingest,
+                       ingest_order=ingest_order)
+    if store_mesh is not None:
+        # shard ONLY the store: the solve stays single-device so the arm
+        # isolates the tentpole (move-the-batch sweep vs resident-batch
+        # argkmin) instead of also timing the mesh solve's collectives —
+        # 8 virtual devices time-share the same cores, and the solve-on-
+        # mesh cost is stream_throughput.py's measurement, not this one
+        eng.ingestor = DeviceIngestor(cfg["dim"], mesh=store_mesh)
     for b in seed_batches:
         eng.step(b)
     for b in warm:
@@ -151,7 +209,7 @@ def _run_arm(ingest: str, cfg: dict, stream) -> dict:
         eng.step(b)
     dt = time.perf_counter() - t0
     max_k = max(k for _, k in eng.bucket_keys)
-    return {
+    out = {
         "ops_per_sec": round(rows / dt, 1),
         "measured_rows": rows,
         "measured_s": round(dt, 4),
@@ -160,7 +218,65 @@ def _run_arm(ingest: str, cfg: dict, stream) -> dict:
         "recompiles": eng.recompile_count,
         "ladder_bound": ladder_size(g.num_nodes + 256, max_k),
         "fingerprint": _fingerprint(g),
+        "export_fraction": _export_fraction(g),
     }
+    if ingest == "device":
+        # per-device residency: max over devices (== total bytes on a
+        # single device, total/D on the sharded mesh)
+        out["store_device_bytes"] = eng.ingestor.store.device_bytes()
+        out["store_shards"] = eng.ingestor.store.n_shards
+    return out
+
+
+# The sharded arm needs its own process: the virtual-device count is a
+# one-shot XLA flag read before jax initializes (same pattern as the
+# tests/test_ingest.py 8-dev arm).  Pure JSON on stdout.
+_SHARDED_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = \\
+        "--xla_force_host_platform_device_count={ndev}"
+    os.environ["JAX_PLATFORMS"] = "cpu"
+    import json, sys
+    sys.path.insert(0, {src!r})
+    sys.path.insert(0, {bench!r})
+    import ingest_lp
+    from repro.ingest.incremental_knn import (ingest_cache_size,
+                                              ingest_ladder_bound)
+    from repro.launch.mesh import make_stream_mesh
+
+    mesh = make_stream_mesh()
+    assert mesh.devices.size == {ndev}, mesh
+    cfg = ingest_lp.TINY if {tiny} else ingest_lp.FULL
+    stream = ingest_lp._make_stream(cfg)
+    best = None
+    for _ in range(ingest_lp.ROUNDS):
+        r = ingest_lp._run_arm("device", cfg, stream, store_mesh=mesh)
+        if best is None or r["ops_per_sec"] > best["ops_per_sec"]:
+            best = r
+    best["n_devices"] = {ndev}
+    best["ingest_cache_entries"] = ingest_cache_size()
+    best["ingest_cache_bound"] = ingest_ladder_bound(
+        best["total_rows"], max(cfg["seed_batch"], cfg["meas_batch"]),
+        sharded=True)
+    json.dump(best, sys.stdout)
+""")
+
+
+def _run_sharded_arm(tiny: bool) -> dict:
+    env = dict(os.environ, JAX_PLATFORMS="cpu")
+    env.pop("XLA_FLAGS", None)
+    env.pop("REPRO_STREAM_TRANSPORT", None)  # rung transports stay auto
+    out = subprocess.run(
+        [sys.executable, "-c", _SHARDED_SCRIPT.format(
+            ndev=SHARD_DEVICES, tiny=tiny,
+            src=os.path.abspath(os.path.join(os.path.dirname(__file__),
+                                             os.pardir, "src")),
+            bench=os.path.abspath(os.path.dirname(__file__)))],
+        capture_output=True, text=True, env=env, timeout=3600)
+    if out.returncode != 0:
+        raise RuntimeError(
+            f"sharded arm subprocess failed:\n{out.stderr[-3000:]}")
+    return json.loads(out.stdout)
 
 
 def main(out: str = OUT, tiny: bool = False, check: bool = False) -> dict:
@@ -176,18 +292,34 @@ def main(out: str = OUT, tiny: bool = False, check: bool = False) -> dict:
             history[arm].append(r["ops_per_sec"])
             if arm not in best or r["ops_per_sec"] > best[arm]["ops_per_sec"]:
                 best[arm] = r
-    # kernel-vs-oracle agreement, end to end: the device arm's committed
-    # graph must be byte-identical to the host oracle's.  Deterministic
-    # per arm, so comparing the best rounds compares every round.
+    # the sharded arm replays the same stream on its forced 8-virtual-
+    # device mesh; the locality side-arm replays the device arm with
+    # reordered admission to record the halo export-fraction delta
+    best["sharded"] = _run_sharded_arm(tiny)
+    locality = _run_arm("device", cfg, stream, ingest_order="locality")
+    locality.pop("fingerprint")  # reordered ids: not an identity arm
+    arms = arms + ("sharded",)
+
+    # kernel-vs-oracle agreement, end to end: the device AND sharded
+    # arms' committed graphs must be byte-identical to the host
+    # oracle's.  Deterministic per arm, so comparing the best rounds
+    # compares every round.
     fp_h = best["host"].pop("fingerprint")
     fp_d = best["device"].pop("fingerprint")
+    fp_s = best["sharded"].pop("fingerprint")
     mismatch = [k for k in fp_h if fp_h[k] != fp_d[k]]
+    mismatch_sharded = [k for k in fp_h if fp_h[k] != fp_s[k]]
     agreement = 0.0 if mismatch else 1.0
+    agreement_sharded = 0.0 if mismatch_sharded else 1.0
 
     cache = ingest_cache_size()
     cache_bound = ingest_ladder_bound(best["device"]["total_rows"], max_batch)
     best["device"]["ingest_cache_entries"] = cache
     best["device"]["ingest_cache_bound"] = cache_bound
+    per_dev = best["sharded"]["store_device_bytes"]
+    n_dev = best["sharded"]["n_devices"]
+    single_bytes = best["device"]["store_device_bytes"]
+    bytes_bound = int(single_bytes / n_dev * SHARD_BYTES_SLACK)
 
     results = {
         "config": {k: v for k, v in cfg.items()},
@@ -196,13 +328,28 @@ def main(out: str = OUT, tiny: bool = False, check: bool = False) -> dict:
         "floors": {
             "host_staging_ops_per_sec": HOST_STAGING_OPS_PER_SEC,
             "device_over_reference": DEVICE_OVER_REFERENCE_FLOOR,
+            "sharded_over_device": SHARDED_OVER_DEVICE_FLOOR,
+            "shard_bytes_slack": SHARD_BYTES_SLACK,
         },
         "device_over_reference": round(
             best["device"]["ops_per_sec"] / HOST_STAGING_OPS_PER_SEC, 2),
         "device_over_host_live": round(
             best["device"]["ops_per_sec"]
             / max(best["host"]["ops_per_sec"], 1e-9), 3),
+        "sharded_over_device": round(
+            best["sharded"]["ops_per_sec"]
+            / max(best["device"]["ops_per_sec"], 1e-9), 3),
+        "sharded_bytes_per_device_bound": bytes_bound,
         "agreement": agreement,
+        "agreement_sharded": agreement_sharded,
+        "locality": {
+            "ops_per_sec": locality["ops_per_sec"],
+            "export_fraction": locality["export_fraction"],
+            "export_fraction_arrival": best["device"]["export_fraction"],
+            "export_fraction_delta": round(
+                best["device"]["export_fraction"]
+                - locality["export_fraction"], 4),
+        },
     }
     results.update(best)
     for arm in arms:
@@ -215,6 +362,15 @@ def main(out: str = OUT, tiny: bool = False, check: bool = False) -> dict:
           f"(recorded host staging {HOST_STAGING_OPS_PER_SEC} ops/s) | "
           f"device/host-live {results['device_over_host_live']}x | "
           f"agreement {agreement} | ingest cache {cache} ≤ {cache_bound}")
+    print(f"sharded/device {results['sharded_over_device']}x | "
+          f"agreement {agreement_sharded} | per-device bytes {per_dev} "
+          f"≤ {bytes_bound} ({n_dev} devices, single {single_bytes}) | "
+          f"sharded cache {best['sharded']['ingest_cache_entries']} ≤ "
+          f"{best['sharded']['ingest_cache_bound']}")
+    print(f"locality admission: export fraction "
+          f"{results['locality']['export_fraction']} vs arrival "
+          f"{results['locality']['export_fraction_arrival']} "
+          f"(delta {results['locality']['export_fraction_delta']})")
     if check:
         floor = DEVICE_OVER_REFERENCE_FLOOR * HOST_STAGING_OPS_PER_SEC
         _gate("device/throughput",
@@ -229,6 +385,25 @@ def main(out: str = OUT, tiny: bool = False, check: bool = False) -> dict:
               "is supposed to dominate")
         _gate("agreement", agreement == 1.0,
               f"device arm diverged from the host oracle in: {mismatch}")
+        _gate("sharded/agreement", agreement_sharded == 1.0,
+              f"sharded arm diverged from the host oracle in: "
+              f"{mismatch_sharded}")
+        _gate("sharded/throughput",
+              best["sharded"]["ops_per_sec"]
+              >= SHARDED_OVER_DEVICE_FLOOR * best["device"]["ops_per_sec"],
+              f"{best['sharded']['ops_per_sec']} ops/s < "
+              f"{SHARDED_OVER_DEVICE_FLOOR}x the device arm "
+              f"({best['device']['ops_per_sec']} ops/s)")
+        _gate("sharded/device_bytes", per_dev <= bytes_bound,
+              f"per-device store bytes {per_dev} > 1/{n_dev} of the "
+              f"unsharded store ({single_bytes}) x {SHARD_BYTES_SLACK} "
+              "ladder slack")
+        _gate("sharded/ingest_cache",
+              best["sharded"]["ingest_cache_entries"]
+              <= best["sharded"]["ingest_cache_bound"],
+              f"{best['sharded']['ingest_cache_entries']} sharded ingest "
+              f"jit entries > ladder bound "
+              f"{best['sharded']['ingest_cache_bound']}")
         for arm in arms:
             _gate(f"{arm}/recompiles",
                   best[arm]["recompiles"] <= best[arm]["ladder_bound"],

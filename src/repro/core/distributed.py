@@ -626,6 +626,146 @@ def sharded_cache_size() -> int:
     return total
 
 
+# --------------------------------------------------------------------- #
+# Sharded embedding-store sweep plans (ingest.ShardedEmbeddingStore)
+# --------------------------------------------------------------------- #
+# Same lifecycle as the stream plans above: one jitted shard_map runner
+# per (mesh, argkmin hyperparams) in _STORE_FN_CACHE — every capacity
+# rung / batch bucket is one more shape specialization in its jit cache,
+# which is what ``store_sweep_cache_size`` counts and
+# ``ingest.ingest_ladder_bound(sharded=True)`` bounds — plus one
+# lightweight StoreShardPlan per (runner, rung) holding the staging
+# shardings.
+_STORE_FN_CACHE: dict = {}
+_STORE_PLAN_CACHE: dict = {}
+
+
+@dataclasses.dataclass(frozen=True)
+class StoreShardPlan:
+    """Per-rung plan for the move-the-batch argkmin sweep over a
+    row-sharded embedding store.
+
+    Each device keeps its ``cap / D`` store rows resident and receives
+    the replicated batch; the runner executes
+    ``kernels.argkmin.shard_sweep_body`` under shard_map — per-shard
+    top-(k+margin) with global row ids, one packed all-gather of the
+    per-shard lists, device-side ``merge_topk`` reduction — and returns
+    ``(val, idx)`` and the displacement mask replicated (the mask's
+    shards gather back into exactly the single-device mask, so the host
+    pull is one local copy).  The merged lists are bit-identical to the
+    single-device ``argkmin_candidates`` (see the argkmin module
+    docstring for the tie argument), so canonical host re-selection
+    keeps every graph byte-identical to the unsharded path.
+    """
+
+    mesh: jax.sharding.Mesh
+    cap_key: tuple[int, int]  # (capacity rung, padded emb dim)
+    backend: str              # resolved: "pallas" | "xla"
+    block_rows: int
+    interpret: bool | None
+    row_sharding: jax.sharding.NamedSharding
+    row2_sharding: jax.sharding.NamedSharding
+    rep_sharding: jax.sharding.NamedSharding
+    run: object  # jitted shard_map sweep fn (static topk)
+
+    @property
+    def n_devices(self) -> int:
+        return self.mesh.devices.size
+
+    def sweep(self, emb, valid, kth, batch, bvalid, base_id, slack, *,
+              topk: int):
+        """Run the sharded candidate sweep for one appended batch."""
+        if tuple(emb.shape) != self.cap_key:
+            raise ValueError(
+                f"store shape {tuple(emb.shape)} does not match plan rung "
+                f"{self.cap_key}")
+        return self.run(emb, valid, kth, batch, bvalid,
+                        jnp.int32(base_id), jnp.float32(slack), topk=topk)
+
+
+def _store_sweep_for(mesh, *, backend, block_rows, interpret):
+    """Fetch (or build, memoized) the jitted sharded-sweep runner for one
+    (mesh, argkmin hyperparams) set; rungs/batches share it."""
+    key = (mesh, backend, block_rows, interpret)
+    run = _STORE_FN_CACHE.get(key)
+    if run is None:
+        # lazy: argkmin pulls graph.knn, which ingest-only processes may
+        # never need until a sharded store exists
+        from repro.kernels.argkmin import shard_sweep_body
+        axes = mesh.axis_names
+
+        def sweep(emb, valid, kth, batch, bvalid, base_id, slack, *, topk):
+            body = shard_map(
+                functools.partial(
+                    shard_sweep_body, axes=axes, topk=topk, backend=backend,
+                    block_rows=block_rows, interpret=interpret),
+                mesh=mesh,
+                in_specs=(P(axes, None), P(axes), P(axes),
+                          P(), P(), P(), P()),
+                out_specs=(P(), P(), P()))
+            return body(emb, valid, kth, batch, bvalid, base_id, slack)
+
+        run = jax.jit(sweep, static_argnames=("topk",))
+        _STORE_FN_CACHE[key] = run
+    return key, run
+
+
+def build_store_shard_plan(
+    mesh,
+    cap_key: tuple[int, int],
+    *,
+    backend: str = "auto",
+    block_rows: int = 256,
+    interpret: bool | None = None,
+) -> StoreShardPlan:
+    """Build (or fetch, memoized) the sharded-store sweep plan for one
+    capacity rung.
+
+    ``cap_key`` is ``(capacity, dim_pad)``; capacity must divide evenly
+    over the mesh (the store ladder floor guarantees it for power-of-two
+    meshes).  ``backend="auto"`` resolves to Pallas on TPU, XLA elsewhere
+    — resolution happens here so auto and explicit callers share runners.
+    """
+    cap, dp = cap_key
+    n_dev = int(mesh.devices.size)
+    if cap % n_dev:
+        raise ValueError(
+            f"store capacity {cap} not divisible by mesh device count "
+            f"{n_dev}")
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if backend == "pallas" and interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    fn_key, run = _store_sweep_for(
+        mesh, backend=backend, block_rows=block_rows, interpret=interpret)
+    key = (fn_key, (int(cap), int(dp)))
+    plan = _STORE_PLAN_CACHE.get(key)
+    if plan is None:
+        axes = mesh.axis_names
+        plan = StoreShardPlan(
+            mesh=mesh, cap_key=(int(cap), int(dp)), backend=backend,
+            block_rows=block_rows, interpret=interpret,
+            row_sharding=jax.sharding.NamedSharding(mesh, P(axes)),
+            row2_sharding=jax.sharding.NamedSharding(mesh, P(axes, None)),
+            rep_sharding=jax.sharding.NamedSharding(mesh, P()),
+            run=run)
+        _STORE_PLAN_CACHE[key] = plan
+    return plan
+
+
+def store_sweep_cache_size() -> int:
+    """Summed jit-cache entries of every sharded store-sweep runner —
+    folded into ``ingest.ingest_cache_size`` so the ingest recompile gate
+    covers the mesh path too."""
+    total = 0
+    for fn in _STORE_FN_CACHE.values():
+        try:
+            total += fn._cache_size()
+        except AttributeError:  # pragma: no cover — future jax rename
+            pass
+    return total
+
+
 def make_propagate_halo_fn(mesh, rows_per_shard: int, export_max: int,
                            delta: float = 1e-4, max_iters: int = 100_000):
     """Historical one-shot halo entry point — now a thin wrapper over the

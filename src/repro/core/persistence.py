@@ -98,6 +98,7 @@ def engine_state(engine: StreamEngine) -> dict:
         "backend_knob": engine._backend_knob,
         "backend_candidates": list(engine._backend_candidates),
         "ingest": _ingest_mode(engine),
+        "ingest_order": engine.ingest_order,
         # stream position + ladder history
         "commits": int(engine.commits),
         "batches": int(engine.batches),
@@ -122,6 +123,11 @@ def engine_state(engine: StreamEngine) -> dict:
     }
     store = getattr(engine.ingestor, "store", None)
     if store is not None:
+        # mesh-independent by construction: a ShardedEmbeddingStore hands
+        # back its row-sharded jax handles and the checkpoint writer's
+        # device_get assembles them into full host arrays — restore then
+        # re-shards (or not) onto whatever mesh is active, extending the
+        # PR-8 elastic contract to the store
         for k, v in store.state_arrays().items():
             state[f"store_{k}"] = v
         meta["store_count"] = int(store.count)
@@ -226,9 +232,12 @@ def restore_engine(
         # pre-load the saved store instead of letting the engine ctor
         # backfill from the graph: contents are equivalent, but this
         # keeps the capacity ladder and k-th pruning thresholds exact.
+        # mesh= routes the load into a ShardedEmbeddingStore when one is
+        # active — the saved arrays are full host images, so they land
+        # on any mesh shape (8dev → 1dev and back are both exact).
         from repro.ingest import DeviceIngestor
 
-        ingestor = DeviceIngestor(meta["emb_dim"])
+        ingestor = DeviceIngestor(meta["emb_dim"], mesh=mesh)
         ingestor.store.load_state_arrays(
             {"emb": state["store_emb"], "valid": state["store_valid"],
              "kth": state["store_kth"]}, count=meta["store_count"])
@@ -262,6 +271,7 @@ def restore_engine(
         read_placement=read_placement,
         ingest=ingest,
         landmark=landmark,
+        ingest_order=meta.get("ingest_order", "arrival"),
     )
 
     if lm_meta is not None and engine._lm is not None:

@@ -195,6 +195,7 @@ class StreamEngine:
         read_placement: object = "auto",
         ingest: object = None,
         landmark: object = None,
+        ingest_order: str = "arrival",
     ):
         self.graph = graph
         # ingest: who nominates kNN candidates for arriving batches.
@@ -204,12 +205,15 @@ class StreamEngine:
         # (docs/ingestion.md), adopting any rows already in the graph;
         # or pass a pre-built selector instance.  Either way the labels
         # and topology are bit-identical — only where the candidate
-        # search runs changes.
+        # search runs changes.  With a mesh, "device" picks the
+        # row-sharded store automatically (move-the-batch argkmin,
+        # docs/ingestion.md §Sharded store) — same labels/topology again,
+        # the store just spreads over the mesh's HBM.
         if ingest in (None, "host"):
             self.ingestor = None
         elif ingest == "device":
             from repro.ingest import DeviceIngestor
-            self.ingestor = DeviceIngestor(graph.emb_dim)
+            self.ingestor = DeviceIngestor(graph.emb_dim, mesh=mesh)
             if graph.num_nodes:
                 self.ingestor.attach(graph)
         elif isinstance(ingest, str):
@@ -217,6 +221,18 @@ class StreamEngine:
                              "'host', 'device', or a selector instance")
         else:
             self.ingestor = ingest
+        # ingest_order: how an arriving batch's rows are ordered before id
+        # assignment.  "arrival" keeps the caller's order; "locality" runs
+        # data.synth.cosine_locality_order over each admitted batch so
+        # consecutive ids are angular neighbors — ids land halo-friendly
+        # (fewer cross-shard references ⇒ smaller export prefixes; the
+        # top-rung export-fraction delta is recorded in BENCH_ingest.json).
+        # Reordering happens before ids exist, so engines that share a
+        # stream agree bit-for-bit as long as they share this knob.
+        if ingest_order not in ("arrival", "locality"):
+            raise ValueError(f"unknown ingest_order {ingest_order!r}; want "
+                             "'arrival' or 'locality'")
+        self.ingest_order = ingest_order
         self.delta = delta
         self.tau = tau
         self.max_iters = max_iters
@@ -276,7 +292,7 @@ class StreamEngine:
         self._backend_candidates = (
             ops.backend_candidates(None, sharded=mesh is not None)
             if knob == "auto" else (ops.backend_spec(knob).name,))
-        self._bsr_block = ops.BSR_BLOCK_SIZE
+        self._bsr_block = ops.bsr_block_size()
         # landmark: configuration of the approximate hot/cold backend
         # (kernels.landmark_propagate).  None = off, unless the pinned
         # knob names "landmark" — then a default config activates (the
@@ -768,6 +784,16 @@ class StreamEngine:
         stats of the PREVIOUS batch (None on the first call)."""
         t0 = time.perf_counter()
         g = self.graph
+
+        # ---- Step 0: arrival ordering (ids are assigned in row order,
+        # so this must run before apply_batch) ----
+        if self.ingest_order == "locality" and len(batch.ins_emb) > 2:
+            from repro.data.synth import cosine_locality_order
+            order = cosine_locality_order(
+                np.asarray(batch.ins_emb, np.float32))
+            batch = dataclasses.replace(
+                batch, ins_emb=np.asarray(batch.ins_emb)[order],
+                ins_labels=np.asarray(batch.ins_labels)[order])
 
         # ---- Step 1: change adjustment & sparsification (host) ----
         effect = g.apply_batch(batch, tau=self.tau, selector=self.ingestor)

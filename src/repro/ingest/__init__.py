@@ -2,16 +2,20 @@
 
 Turns raw embedding batches into incremental graph updates on device:
 ``EmbeddingStore`` keeps every vertex's normalized embedding resident in
-a bucket-ladder array, and ``DeviceIngestor`` plugs into
-``graph.dynamic.apply_batch`` as the candidate selector, running the
-``kernels.argkmin`` distance+top-k pass instead of host-staged BLAS.
+a bucket-ladder array (``ShardedEmbeddingStore`` row-shards the ladder
+over a stream mesh, spilling past single-device HBM), and
+``DeviceIngestor`` plugs into ``graph.dynamic.apply_batch`` as the
+candidate selector, running the ``kernels.argkmin`` distance+top-k pass
+— move-the-batch over the shards when a mesh is attached — instead of
+host-staged BLAS.
 """
 
-from .embedding_store import EmbeddingStore
+from .embedding_store import EmbeddingStore, ShardedEmbeddingStore
 from .incremental_knn import DeviceIngestor, ingest_cache_size, ingest_ladder_bound
 
 __all__ = [
     "EmbeddingStore",
+    "ShardedEmbeddingStore",
     "DeviceIngestor",
     "ingest_cache_size",
     "ingest_ladder_bound",

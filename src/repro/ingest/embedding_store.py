@@ -13,6 +13,16 @@ so the jit cache is bounded by the ladder cross-product, not the stream
 length, and steady-state batches re-use buffers in place on TPU.
 ``store_cache_size``/``ingest_ladder_bound`` (``ingest.incremental_knn``
 re-exports) make the bound checkable by the bench ``--check`` gate.
+
+``ShardedEmbeddingStore`` is the mesh twin: the same ladder, the same
+donated updates, but every (capacity, ·) array is row-sharded over the
+stream mesh via ``NamedSharding`` — each device holds ``cap / D`` rows
+resident, spilling the store past single-device HBM, and the argkmin
+orientation flips to move-the-batch (``kernels.argkmin.shard_sweep_body``
+via ``core.distributed.StoreShardPlan``).  The update jits are memoized
+per sharding with explicit ``out_shardings`` so appends/kills stay
+shard-local donated writes and the ladder never silently decays to a
+replicated layout.
 """
 
 from __future__ import annotations
@@ -22,6 +32,8 @@ import functools
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
 
 CAP_FLOOR = 1024  # multiple of the argkmin kernel's 256-row tile
 BATCH_FLOOR = 8
@@ -56,8 +68,7 @@ def _donate(*argnums):
     return () if jax.default_backend() == "gpu" else argnums
 
 
-@functools.partial(jax.jit, donate_argnums=_donate(0, 1, 2))
-def _append(emb, valid, kth, block, bvalid, offset):
+def _append_impl(emb, valid, kth, block, bvalid, offset):
     emb = jax.lax.dynamic_update_slice(emb, block, (offset, 0))
     valid = jax.lax.dynamic_update_slice(valid, bvalid, (offset,))
     kth = jax.lax.dynamic_update_slice(
@@ -65,8 +76,7 @@ def _append(emb, valid, kth, block, bvalid, offset):
     return emb, valid, kth
 
 
-@functools.partial(jax.jit, static_argnames=("new_cap",))
-def _grow(emb, valid, kth, new_cap):  # output outgrows input: can't alias
+def _grow_impl(emb, valid, kth, new_cap):  # output outgrows input: can't alias
     pad = new_cap - emb.shape[0]
     emb = jnp.concatenate([emb, jnp.zeros((pad, emb.shape[1]), jnp.float32)])
     valid = jnp.concatenate([valid, jnp.zeros((pad,), bool)])
@@ -74,20 +84,55 @@ def _grow(emb, valid, kth, new_cap):  # output outgrows input: can't alias
     return emb, valid, kth
 
 
-@functools.partial(jax.jit, donate_argnums=_donate(0))
-def _kill(valid, ids):
+def _kill_impl(valid, ids):
     # ids are padded with an out-of-range value; mode="drop" discards them
     return valid.at[ids].set(False, mode="drop")
 
 
-@functools.partial(jax.jit, donate_argnums=_donate(0))
-def _set_kth(kth, rows, vals):
+def _set_kth_impl(kth, rows, vals):
     return kth.at[rows].set(vals, mode="drop")
 
 
+_append = jax.jit(_append_impl, donate_argnums=_donate(0, 1, 2))
+_grow = jax.jit(_grow_impl, static_argnames=("new_cap",))
+_kill = jax.jit(_kill_impl, donate_argnums=_donate(0))
+_set_kth = jax.jit(_set_kth_impl, donate_argnums=_donate(0))
+
+# Sharded twins of the update jits, memoized per (row, row2) sharding pair
+# — one dict per mesh layout, process lifetime like the module jits.  The
+# explicit ``out_shardings`` pin every result to the store's row sharding:
+# appends/kills become shard-local donated writes (GSPMD routes the update
+# slice to the owning shards) and a ladder grow re-lands the doubled
+# capacity evenly instead of letting sharding propagation decide.
+_SHARDED_FNS: dict = {}
+
+
+def _sharded_update_fns(s1, s2) -> dict:
+    """Update jits whose outputs are pinned to row shardings ``s1`` (per
+    row) / ``s2`` (row-major 2-D)."""
+    fns = _SHARDED_FNS.get((s1, s2))
+    if fns is None:
+        fns = {
+            "append": jax.jit(_append_impl, donate_argnums=_donate(0, 1, 2),
+                              out_shardings=(s2, s1, s1)),
+            "grow": jax.jit(_grow_impl, static_argnames=("new_cap",),
+                            out_shardings=(s2, s1, s1)),
+            "kill": jax.jit(_kill_impl, donate_argnums=_donate(0),
+                            out_shardings=s1),
+            "set_kth": jax.jit(_set_kth_impl, donate_argnums=_donate(0),
+                               out_shardings=s1),
+        }
+        _SHARDED_FNS[(s1, s2)] = fns
+    return fns
+
+
 def store_cache_size() -> int:
-    """Live jit cache entries across the store's update kernels."""
-    return int(sum(f._cache_size() for f in (_append, _grow, _kill, _set_kth)))
+    """Live jit cache entries across the store's update kernels (both the
+    single-device jits and every sharded twin)."""
+    total = sum(f._cache_size() for f in (_append, _grow, _kill, _set_kth))
+    for fns in _SHARDED_FNS.values():
+        total += sum(f._cache_size() for f in fns.values())
+    return int(total)
 
 
 class EmbeddingStore:
@@ -108,12 +153,42 @@ class EmbeddingStore:
     def capacity(self) -> int:
         return self.emb.shape[0]
 
+    @property
+    def n_shards(self) -> int:
+        """Device count the store's rows are spread over (1 here)."""
+        return 1
+
+    def device_bytes(self) -> int:
+        """Max over devices of this store's resident bytes — the
+        per-device memory bound the sharded bench gate checks (equals
+        the total on a single-device store)."""
+        per: dict = {}
+        for arr in (self.emb, self.valid, self.kth):
+            for sh in arr.addressable_shards:
+                per[sh.device] = per.get(sh.device, 0) + sh.data.nbytes
+        return int(max(per.values()))
+
+    # -- layout hooks the sharded subclass overrides -------------------- #
+    def _update_fns(self) -> dict:
+        return {"append": _append, "grow": _grow, "kill": _kill,
+                "set_kth": _set_kth}
+
+    def _put_batch(self, x: np.ndarray) -> jax.Array:
+        """Stage a host batch block on device (replicated when sharded)."""
+        return jnp.asarray(x)
+
+    def _put_state(self, emb_h, valid_h, kth_h) -> None:
+        """Adopt host-built full-capacity arrays as the store state."""
+        self.emb = jnp.asarray(emb_h)
+        self.valid = jnp.asarray(valid_h)
+        self.kth = jnp.asarray(kth_h)
+
     # ------------------------------------------------------------------ #
     def ensure(self, rows: int) -> None:
         """Grow the ladder until ``rows`` fit (donated device-side pad)."""
         if rows > self.capacity:
             new_cap = cap_bucket(rows)
-            self.emb, self.valid, self.kth = _grow(
+            self.emb, self.valid, self.kth = self._update_fns()["grow"](
                 self.emb, self.valid, self.kth, new_cap)
             self.grows += 1
 
@@ -129,9 +204,7 @@ class EmbeddingStore:
         valid_h[:n] = alive
         kth_h = np.full(cap, -np.inf, np.float32)
         kth_h[:n] = kth
-        self.emb = jnp.asarray(emb_h)
-        self.valid = jnp.asarray(valid_h)
-        self.kth = jnp.asarray(kth_h)
+        self._put_state(emb_h, valid_h, kth_h)
         self.count = n
 
     def state_arrays(self) -> dict[str, jax.Array]:
@@ -149,9 +222,8 @@ class EmbeddingStore:
             raise ValueError(
                 f"store snapshot dim {emb.shape[1]} != padded dim {self.dp} "
                 f"(emb_dim {self.emb_dim})")
-        self.emb = jnp.asarray(emb)
-        self.valid = jnp.asarray(np.asarray(arrays["valid"], bool))
-        self.kth = jnp.asarray(np.asarray(arrays["kth"], np.float32))
+        self._put_state(emb, np.asarray(arrays["valid"], bool),
+                        np.asarray(arrays["kth"], np.float32))
         self.count = int(count)
 
     def append(self, embn: np.ndarray) -> tuple[jax.Array, jax.Array, int]:
@@ -168,9 +240,9 @@ class EmbeddingStore:
         block = np.zeros((mp, self.dp), np.float32)
         block[:m, : self.emb_dim] = embn
         bvalid = np.arange(mp) < m
-        batch_dev = jnp.asarray(block)
-        bvalid_dev = jnp.asarray(bvalid)
-        self.emb, self.valid, self.kth = _append(
+        batch_dev = self._put_batch(block)
+        bvalid_dev = self._put_batch(bvalid)
+        self.emb, self.valid, self.kth = self._update_fns()["append"](
             self.emb, self.valid, self.kth, batch_dev, bvalid_dev,
             np.int32(base_id))
         self.count += m
@@ -196,7 +268,8 @@ class EmbeddingStore:
         rp = batch_bucket(len(ids))
         padded = np.full(rp, self.capacity, np.int32)  # OOB pad → dropped
         padded[: len(ids)] = ids
-        self.valid = _kill(self.valid, jnp.asarray(padded))
+        self.valid = self._update_fns()["kill"](
+            self.valid, jnp.asarray(padded))
 
     def set_kth(self, rows: np.ndarray, vals: np.ndarray) -> None:
         """Refresh the pruning thresholds of rows whose lists changed."""
@@ -207,4 +280,72 @@ class EmbeddingStore:
         rows_p[: len(rows)] = rows
         vals_p = np.zeros(rp, np.float32)
         vals_p[: len(rows)] = vals
-        self.kth = _set_kth(self.kth, jnp.asarray(rows_p), jnp.asarray(vals_p))
+        self.kth = self._update_fns()["set_kth"](
+            self.kth, jnp.asarray(rows_p), jnp.asarray(vals_p))
+
+
+class ShardedEmbeddingStore(EmbeddingStore):
+    """Row-sharded twin of ``EmbeddingStore`` over a stream mesh.
+
+    Every (capacity, ·) ladder array carries
+    ``NamedSharding(mesh, P(axes))`` — each device holds ``cap / D``
+    contiguous rows resident (global row id ``shard · cap/D + local``),
+    so the store's HBM footprint per device is ``1/D`` of the unsharded
+    ladder and capacity scales with the mesh instead of one device.
+
+    The update jits are the sharded twins from ``_sharded_update_fns``
+    (same arithmetic, outputs pinned to the row sharding, donation
+    intact), batches stage replicated (the move-the-batch broadcast), and
+    the landmark hooks re-replicate their small result blocks so the
+    landmark backend's downstream jits never specialize on exotic
+    shardings.  Candidate search goes through
+    ``core.distributed.StoreShardPlan`` instead of the single-device
+    ``argkmin_candidates`` — ``DeviceIngestor`` routes automatically.
+    """
+
+    def __init__(self, emb_dim: int, mesh, capacity_floor: int = CAP_FLOOR):
+        n_dev = int(mesh.devices.size)
+        floor_cap = cap_bucket(max(1, capacity_floor))
+        if floor_cap % n_dev:
+            raise ValueError(
+                f"store capacity floor {floor_cap} not divisible by mesh "
+                f"device count {n_dev}; the doubling ladder keeps rows "
+                "divisible only for power-of-two meshes up to the floor")
+        self.mesh = mesh
+        axes = mesh.axis_names
+        self._s1 = NamedSharding(mesh, P(axes))
+        self._s2 = NamedSharding(mesh, P(axes, None))
+        self._srep = NamedSharding(mesh, P())
+        super().__init__(emb_dim, capacity_floor=capacity_floor)
+        # the ladder floor was built unsharded by the parent ctor
+        self.emb = jax.device_put(self.emb, self._s2)
+        self.valid = jax.device_put(self.valid, self._s1)
+        self.kth = jax.device_put(self.kth, self._s1)
+
+    @property
+    def n_shards(self) -> int:
+        return int(self.mesh.devices.size)
+
+    def _update_fns(self) -> dict:
+        return _sharded_update_fns(self._s1, self._s2)
+
+    def _put_batch(self, x: np.ndarray) -> jax.Array:
+        # the orientation flip: the small batch broadcasts to every shard
+        return jax.device_put(np.asarray(x), self._srep)
+
+    def _put_state(self, emb_h, valid_h, kth_h) -> None:
+        # backfill/restore land directly in the row sharding — elastic
+        # across mesh shapes because snapshots are plain host arrays
+        self.emb = jax.device_put(np.asarray(emb_h, np.float32), self._s2)
+        self.valid = jax.device_put(np.asarray(valid_h, bool), self._s1)
+        self.kth = jax.device_put(np.asarray(kth_h, np.float32), self._s1)
+
+    def landmark_rows(self, lo: int, hi: int) -> jax.Array:
+        """Cold-tail assignment block, re-replicated: the slice spans
+        shards, and the landmark jits expect one placement."""
+        return jax.device_put(self.emb[lo:hi], self._srep)
+
+    def landmark_gather(self, ids: np.ndarray) -> jax.Array:
+        """Landmark sample gather, re-replicated (small: one row per
+        landmark)."""
+        return jax.device_put(super().landmark_gather(ids), self._srep)

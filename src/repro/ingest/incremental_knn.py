@@ -20,20 +20,32 @@ Canonical re-selection and list merges stay in ``DynamicGraph`` — the
 ingestor only nominates supersets, which is why its streams are
 bit-identical to the ``HostKNNSelector`` staging path (see the
 ``graph.knn`` module docstring for the contract).
+
+With a mesh (``DeviceIngestor(..., mesh=...)``) the ingestor builds the
+row-sharded store and flips the argkmin orientation to move-the-batch:
+candidate search runs through ``core.distributed.StoreShardPlan`` (one
+memoized plan per capacity rung), and the merged candidate lists and
+the gathered displacement mask come back replicated, so the D2H pull
+stays one local copy per array.  Everything downstream (canonical
+re-selection, ``finalize``) is unchanged, so sharded streams stay
+bit-identical to single-device ones.
 """
 
 from __future__ import annotations
 
+import warnings
+
 import numpy as np
 
 from repro.graph.dynamic import Selection
-from repro.graph.knn import selection_slack
+from repro.graph.knn import SELECT_MARGIN, selection_slack
 from repro.kernels.argkmin import argkmin_cache_size, argkmin_candidates
 
 from .embedding_store import (
     BATCH_FLOOR,
     CAP_FLOOR,
     EmbeddingStore,
+    ShardedEmbeddingStore,
     batch_bucket,
     cap_bucket,
     store_cache_size,
@@ -42,8 +54,10 @@ from .embedding_store import (
 
 def ingest_cache_size() -> int:
     """Total live jit entries on the ingest path (store updates + both
-    argkmin backends) — the quantity the recompile gate bounds."""
-    return store_cache_size() + argkmin_cache_size()
+    argkmin backends + the sharded sweep runners) — the quantity the
+    recompile gate bounds."""
+    from repro.core.distributed import store_sweep_cache_size
+    return store_cache_size() + argkmin_cache_size() + store_sweep_cache_size()
 
 
 def _rungs(floor: int, hi: int) -> int:
@@ -54,7 +68,8 @@ def _rungs(floor: int, hi: int) -> int:
     return n
 
 
-def ingest_ladder_bound(max_rows: int, max_batch: int) -> int:
+def ingest_ladder_bound(max_rows: int, max_batch: int, *,
+                        sharded: bool = False) -> int:
     """A-priori bound on ``ingest_cache_size()`` for a stream that never
     exceeds ``max_rows`` total rows or ``max_batch`` rows per batch.
 
@@ -62,6 +77,13 @@ def ingest_ladder_bound(max_rows: int, max_batch: int) -> int:
     cache is bounded by the ladder cross-product — independent of stream
     length.  Scatter updates (kill / set_kth) can touch up to the whole
     store, hence the ``max_rows`` rung count for those terms.
+
+    ``sharded=True`` adds the sharded sweep runner's rung cross-product
+    (``core.distributed.store_sweep_cache_size``): the sweep inlines the
+    per-shard pass unjitted, so it contributes exactly one extra entry
+    per (capacity rung, batch bucket) and nothing else — the sharded
+    store's update jits are distinct cache entries from the single-device
+    ones but identical in count, already covered by the terms below.
     """
     n_cap = _rungs(CAP_FLOOR, cap_bucket(max_rows))
     n_b = _rungs(BATCH_FLOOR, batch_bucket(max(max_batch, 1)))
@@ -72,6 +94,7 @@ def ingest_ladder_bound(max_rows: int, max_batch: int) -> int:
         + (n_cap - 1)    # _grow
         + n_cap * n_s    # _kill
         + n_cap * n_s    # _set_kth
+        + (n_cap * n_b if sharded else 0)  # sharded sweep runner
     )
 
 
@@ -92,8 +115,22 @@ class DeviceIngestor:
         block_rows: int = 256,
         interpret: bool | None = None,
         capacity_floor: int = CAP_FLOOR,
+        mesh=None,
     ):
-        self.store = EmbeddingStore(emb_dim, capacity_floor=capacity_floor)
+        self.mesh = None
+        if mesh is not None:
+            if cap_bucket(max(1, capacity_floor)) % int(mesh.devices.size):
+                warnings.warn(
+                    f"mesh device count {int(mesh.devices.size)} does not "
+                    f"divide the store capacity ladder; falling back to the "
+                    "single-device embedding store", stacklevel=2)
+            else:
+                self.mesh = mesh
+        if self.mesh is not None:
+            self.store: EmbeddingStore = ShardedEmbeddingStore(
+                emb_dim, self.mesh, capacity_floor=capacity_floor)
+        else:
+            self.store = EmbeddingStore(emb_dim, capacity_floor=capacity_floor)
         self.backend = backend
         self.block_rows = block_rows
         self.interpret = interpret
@@ -127,14 +164,27 @@ class DeviceIngestor:
         batch_dev, bvalid_dev, bid = self.store.append(
             np.ascontiguousarray(embn_new, np.float32))
         assert bid == base_id
-        val, idx, disp = argkmin_candidates(
-            self.store.emb, self.store.valid, self.store.kth,
-            batch_dev, bvalid_dev, base_id, selection_slack(g.emb_dim),
-            k=g.k, backend=self.backend, block_rows=self.block_rows,
-            interpret=self.interpret)
+        if self.mesh is not None:
+            from repro.core.distributed import build_store_shard_plan
+            plan = build_store_shard_plan(
+                self.mesh, (self.store.capacity, self.store.dp),
+                backend=self.backend, block_rows=self.block_rows,
+                interpret=self.interpret)
+            val, idx, disp = plan.sweep(
+                self.store.emb, self.store.valid, self.store.kth,
+                batch_dev, bvalid_dev, base_id, selection_slack(g.emb_dim),
+                topk=min(g.k + SELECT_MARGIN, self.store.capacity))
+        else:
+            val, idx, disp = argkmin_candidates(
+                self.store.emb, self.store.valid, self.store.kth,
+                batch_dev, bvalid_dev, base_id, selection_slack(g.emb_dim),
+                k=g.k, backend=self.backend, block_rows=self.block_rows,
+                interpret=self.interpret)
         m = len(new_ids)
         # D2H the padded blocks whole, slice on the host: jnp slicing
-        # would dispatch one device gather per distinct m
+        # would dispatch one device gather per distinct m (under a mesh
+        # all three outputs come back replicated — the sweep gathers the
+        # displacement shards on device — so every pull is a local copy)
         val = np.asarray(val)[:m]
         cand = np.where(np.isfinite(val), np.asarray(idx).astype(np.int64)[:m], -1)
         flagged = np.flatnonzero(np.asarray(disp)).astype(np.int64)

@@ -32,6 +32,20 @@ The ``xla`` twin (one fused jit: matmul + ``lax.top_k`` + mask) serves
 non-TPU hardware; ``backend="auto"`` picks Pallas on TPU, XLA elsewhere.
 Interpret-mode Pallas is only used to *verify* agreement in tests and
 ``benchmarks/ingest_lp.py --check``.
+
+**Sharded sweep (move-the-batch orientation).**  When the store is
+row-sharded over a mesh (``ingest.ShardedEmbeddingStore``), each device
+runs the same pass against only its resident rows with ``row0`` set to
+its shard's global row offset — candidate ids and the ``base_id``
+comparisons are global, so per-shard outputs compose without any host
+renumbering — then ``shard_sweep_body`` all-gathers the per-shard
+top-(k+margin) lists and ``merge_topk`` reduces them to the global
+top-(k+margin).  Shard row blocks are contiguous-ascending and each
+per-shard list orders tied values by ascending id, so the merge's
+ties→lowest-position rule IS ties→lowest-global-id: the merged list is
+bit-identical to the single-device pass, and the displacement masks
+concatenate to the single-device mask because each row's dot product is
+the same reduction wherever it lives.
 """
 
 from __future__ import annotations
@@ -54,14 +68,18 @@ def _on_tpu() -> bool:
 
 
 def _kernel(store_ref, valid_ref, kth_ref, batch_ref, bvalid_ref,
-            base_ref, slack_ref, val_ref, idx_ref, disp_ref, *, topk):
+            base_ref, slack_ref, row0_ref, val_ref, idx_ref, disp_ref, *,
+            topk):
     i = pl.program_id(0)
     tile = store_ref[...]  # (R, D)
     batch = batch_ref[...]  # (M, D) — VMEM resident across tiles
     r = tile.shape[0]
     m = batch.shape[0]
     base_id = base_ref[0]
-    rows_g = i * r + jax.lax.iota(jnp.int32, r)
+    # row0 is this store block's global row offset (0 single-device; the
+    # shard's offset under the sharded sweep) — all row ids downstream of
+    # rows_g are global, so per-shard outputs merge without renumbering
+    rows_g = row0_ref[0] + i * r + jax.lax.iota(jnp.int32, r)
 
     s = jnp.dot(batch, tile.T, preferred_element_type=jnp.float32)  # (M, R)
     w = (s + 1.0) * 0.5
@@ -96,9 +114,10 @@ def _kernel(store_ref, valid_ref, kth_ref, batch_ref, bvalid_ref,
     idx_ref[...] = jnp.stack(idxs, axis=1)
 
 
-@functools.partial(jax.jit, static_argnames=("topk", "block_rows", "interpret"))
-def _argkmin_pallas(store, valid, kth, batch, batch_valid, base_id, slack,
-                    topk, block_rows, interpret):
+def _argkmin_pallas_impl(store, valid, kth, batch, batch_valid, base_id,
+                         slack, row0, topk, block_rows, interpret):
+    """Unjitted Pallas pass over one (shard-local or whole) store block;
+    ``row0`` is the block's global row offset."""
     c, d = store.shape
     m = batch.shape[0]
     r = min(block_rows, c)
@@ -118,6 +137,7 @@ def _argkmin_pallas(store, valid, kth, batch, batch_valid, base_id, slack,
             const_spec(m),        # batch_valid
             const_spec(1),        # base_id
             const_spec(1),        # slack
+            const_spec(1),        # row0 (global offset of this block)
         ],
         out_specs=[const_spec(m, topk), const_spec(m, topk), row_spec()],
         out_shape=[
@@ -127,15 +147,25 @@ def _argkmin_pallas(store, valid, kth, batch, batch_valid, base_id, slack,
         ],
         interpret=interpret,
     )(store, valid, kth.astype(jnp.float32), batch, batch_valid,
-      jnp.full((1,), base_id, jnp.int32), jnp.full((1,), slack, jnp.float32))
+      jnp.full((1,), base_id, jnp.int32), jnp.full((1,), slack, jnp.float32),
+      jnp.full((1,), row0, jnp.int32))
     return val, idx, disp
 
 
-@functools.partial(jax.jit, static_argnames=("topk",))
-def _argkmin_xla(store, valid, kth, batch, batch_valid, base_id, slack, topk):
+_argkmin_pallas = jax.jit(
+    _argkmin_pallas_impl,
+    static_argnames=("topk", "block_rows", "interpret"))
+
+
+def _argkmin_xla_impl(store, valid, kth, batch, batch_valid, base_id, slack,
+                      row0, topk):
+    """Unjitted XLA pass over one (shard-local or whole) store block;
+    ``row0`` is the block's global row offset — the shared arithmetic of
+    the single-device jit and the per-shard body, so displacement bits
+    and candidate values agree across both by construction."""
     c = store.shape[0]
     m = batch.shape[0]
-    rows_g = jnp.arange(c, dtype=jnp.int32)
+    rows_g = row0 + jnp.arange(c, dtype=jnp.int32)
     # store-major orientation: on CPU XLA, (C, D) @ (D, M) with the big
     # operand on the left runs ~4x faster than batch @ store.T, and the
     # barrier stops XLA from folding the later transpose back into the
@@ -149,7 +179,63 @@ def _argkmin_xla(store, valid, kth, batch, batch_valid, base_id, slack, topk):
     self_mask = rows_g[None, :] == base_id + jnp.arange(m, dtype=jnp.int32)[:, None]
     wm = jnp.where(valid[None, :] & ~self_mask, w.T, -jnp.inf)
     val, idx = jax.lax.top_k(wm, topk)  # ties keep the lower index
-    return val, idx.astype(jnp.int32), disp
+    return val, (row0 + idx).astype(jnp.int32), disp
+
+
+_argkmin_xla = jax.jit(_argkmin_xla_impl, static_argnames=("topk",))
+
+
+def merge_topk(val_g, idx_g, topk: int):
+    """Top-``topk`` merge of concatenated per-shard candidate lists.
+
+    ``val_g``/``idx_g`` are ``(M, D·tk_loc)`` — shard s's list occupies
+    columns ``[s·tk_loc, (s+1)·tk_loc)``.  ``lax.top_k`` breaks ties by
+    lowest *position*; shard row blocks are contiguous-ascending and each
+    shard list orders tied values by ascending global id, so lowest
+    position ⇔ lowest global id — the canonical tie order of the
+    single-device pass and the host oracle.
+    """
+    mval, pos = jax.lax.top_k(val_g, topk)
+    midx = jnp.take_along_axis(idx_g, pos, axis=1)
+    return mval, midx
+
+
+def shard_sweep_body(emb_l, valid_l, kth_l, batch, bvalid, base_id, slack,
+                     *, axes, topk, backend, block_rows, interpret):
+    """Per-device body of the sharded store sweep (runs under shard_map).
+
+    The shard's resident rows are the matmul operand; the replicated
+    batch moved to it.  Runs the selected per-block pass with this
+    shard's global ``row0``, then all-gathers the per-shard
+    top-``tk_loc`` lists and merges to the global top-``topk``
+    (``merge_topk``).  One collective moves everything: the f32 values
+    are bitcast to int32 (exact) and packed beside the ids so the
+    gather ships a single ``(M, 2·tk_loc)`` block per shard, and the
+    displacement mask rides back replicated (a ``(C,)`` bool gather) so
+    the host pull is one local copy instead of D shard reads.
+    """
+    c_loc = emb_l.shape[0]
+    row0 = (jax.lax.axis_index(axes) * c_loc).astype(jnp.int32)
+    tk_loc = min(topk, c_loc)  # D·tk_loc ≥ topk either way: coverage holds
+    if backend == "pallas":
+        val, idx, disp = _argkmin_pallas_impl(
+            emb_l, valid_l, kth_l, batch, bvalid, base_id, slack, row0,
+            tk_loc, block_rows, interpret)
+    else:
+        val, idx, disp = _argkmin_xla_impl(
+            emb_l, valid_l, kth_l, batch, bvalid, base_id, slack, row0,
+            tk_loc)
+    packed = jnp.concatenate(
+        [jax.lax.bitcast_convert_type(val, jnp.int32), idx], axis=1)
+    packed_g = jax.lax.all_gather(packed, axes, axis=1, tiled=True)
+    n_sh = packed_g.shape[1] // (2 * tk_loc)
+    packed_g = packed_g.reshape(packed.shape[0], n_sh, 2, tk_loc)
+    val_g = jax.lax.bitcast_convert_type(
+        packed_g[:, :, 0, :], jnp.float32).reshape(packed.shape[0], -1)
+    idx_g = packed_g[:, :, 1, :].reshape(packed.shape[0], -1)
+    mval, midx = merge_topk(val_g, idx_g, topk)
+    disp_g = jax.lax.all_gather(disp, axes, axis=0, tiled=True)
+    return mval, midx, disp_g
 
 
 def argkmin_candidates(
@@ -179,10 +265,11 @@ def argkmin_candidates(
         if interpret is None:
             interpret = not _on_tpu()
         return _argkmin_pallas(store, valid, kth, batch, batch_valid,
-                               base_id, slack, topk, block_rows, interpret)
+                               base_id, slack, 0, topk, block_rows, interpret)
     if backend == "xla":
         return _argkmin_xla(store, valid, kth, batch, batch_valid,
-                            jnp.int32(base_id), jnp.float32(slack), topk)
+                            jnp.int32(base_id), jnp.float32(slack),
+                            jnp.int32(0), topk)
     raise ValueError(f"unknown argkmin backend {backend!r}")
 
 

@@ -189,7 +189,10 @@ class LandmarkState:
         """Normalized embedding rows [lo, hi) as a (hi-lo, dp) device
         block — from the ingest store when one is attached (already
         device-resident and dim-padded), else staged from the host
-        graph's ``embn``."""
+        graph's ``embn``.  A ``ShardedEmbeddingStore`` serves these and
+        ``landmark_gather`` as mesh-replicated blocks, so the landmark
+        assignment kernels below run unchanged over a row-sharded
+        ladder."""
         if store is not None and store.count >= hi:
             return store.landmark_rows(lo, hi)
         block = np.zeros((hi - lo, self.dp), np.float32)

@@ -32,7 +32,9 @@ Registered backends:
                        dense (U, U) intermediate).  Sharded under both
                        transports; auto-eligible on TPU when the
                        post-reorder block fill factor clears
-                       ``BSR_AUTO_FILL_MIN``.
+                       ``bsr_auto_fill_min`` (a
+                       per-hardware registry property, like the tile
+                       edge ``bsr_block_size``).
   * ``"landmark"``   — the APPROXIMATE hot/cold split for beyond-HBM
                        graphs (``kernels.landmark_propagate``): exact
                        barriered Jacobi on the hot working set, a
@@ -96,15 +98,9 @@ def on_tpu() -> bool:
 # seen here is the padded one, so a smaller threshold would never fire.
 _PALLAS_MIN_ROWS = 512
 
-# BSR tile edge. 8 keeps interpret-mode CI cheap while mapping onto the
-# MXU's (8, 128) native lane tiling; the engine pads row buckets to a
-# multiple of it whenever bsr is selectable.
-BSR_BLOCK_SIZE = 8
-
-# auto may pick bsr only when at least this fraction of the touched
-# tiles' entries carry a real edge — below it the MXU multiplies mostly
-# zeros and the VPU ELL kernel wins.
-BSR_AUTO_FILL_MIN = 0.25
+# The BSR tile edge and auto fill threshold are per-hardware registry
+# properties now — see ``bsr_block_size`` / ``bsr_auto_fill_min`` below
+# (8 interpret-friendly on CPU, the MXU's native 128 on real TPU).
 
 # auto may pick the approximate landmark backend only at row counts
 # where exact staging pressure is real — below this the whole problem
@@ -145,6 +141,9 @@ class BackendSpec:
     auto_eligible: Callable[[ProblemInfo, str], bool]  # (info, hw) -> bool
     run: Callable  # single-device entry point
     cache_entry_points: tuple[Callable[[], object], ...]
+    # per-hardware tile edge for backends that tile their aggregation
+    # (hw string -> edge length); None for untiled backends
+    block_size: Callable[[str], int] | None = None
 
 
 _REGISTRY: dict[str, BackendSpec] = {}
@@ -168,6 +167,25 @@ def backend_spec(name: str) -> BackendSpec:
         raise ValueError(
             f"unknown backend {name!r}; want one of {backend_names()}")
     return spec
+
+
+def bsr_block_size(hw: str | None = None) -> int:
+    """The bsr backend's tile edge on ``hw`` (default: this process's
+    backend) — a registry property, not a module constant: 8 keeps
+    interpret-mode CI cheap while still mapping onto the MXU's (8, 128)
+    lane tiling; on real TPU the (128, 128) MXU systolic array wants the
+    full native edge."""
+    return backend_spec("bsr").block_size(hw or jax.default_backend())
+
+
+def bsr_auto_fill_min(hw: str | None = None) -> float:
+    """Minimum touched-tile fill fraction for auto to pick bsr on ``hw``,
+    re-derived from the tile edge: one (B, B) tile pays a fixed MXU pass
+    regardless of how many of its entries carry a real edge, while the
+    VPU ELL kernel pays per edge lane — so the break-even density scales
+    as ~2/B (0.25 at the interpret-friendly edge of 8, ~0.016 at the MXU's
+    128, where even sparse tiles amortize the systolic pass)."""
+    return 2.0 / bsr_block_size(hw)
 
 
 def _auto_select(info: ProblemInfo, hw: str) -> str:
@@ -396,7 +414,7 @@ def propagate_bsr(
     if interpret is None:
         interpret = not on_tpu()
     if block_size is None:
-        block_size = BSR_BLOCK_SIZE
+        block_size = bsr_block_size()
     if slot is not None:
         if num_slots is None:
             raise ValueError("propagate_bsr with slot= needs num_slots= "
@@ -557,10 +575,11 @@ register_backend(BackendSpec(
     auto_priority=30,  # MXU path outranks the VPU kernel when eligible
     auto_eligible=lambda info, hw: hw == "tpu"
     and info.block_fill is not None
-    and info.block_fill >= BSR_AUTO_FILL_MIN
+    and info.block_fill >= bsr_auto_fill_min(hw)
     and (info.num_rows is None or info.num_rows >= _PALLAS_MIN_ROWS),
     run=_run_bsr,
     cache_entry_points=(lambda: _bsr_solve, lambda: _bsr_donating),
+    block_size=lambda hw: 128 if hw == "tpu" else 8,
 ))
 
 register_backend(BackendSpec(
@@ -650,7 +669,7 @@ def run_propagation(
                         "from kernels.bsr_spmv.ell_bsr_layout)")
                 bsr_kw = dict(
                     block_size=(block_size if block_size is not None
-                                else BSR_BLOCK_SIZE),
+                                else bsr_block_size()),
                     num_slots=num_slots)
             if transport == "halo":
                 if export_max is None:

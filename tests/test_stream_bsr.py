@@ -74,6 +74,26 @@ def test_registry_auto_eligibility_rules(monkeypatch):
     assert ops.select_backend("auto", num_rows=4096, block_fill=0.9) == "ref"
 
 
+def test_bsr_block_size_is_per_hardware_registry_property():
+    """Block edge comes from the bsr BackendSpec per hardware — MXU-sized
+    on TPU, interpret-friendly elsewhere — and the auto fill threshold
+    re-derives from it (break-even density ~ 2/edge)."""
+    assert ops.bsr_block_size("tpu") == 128
+    assert ops.bsr_block_size("cpu") == 8
+    assert ops.bsr_block_size("gpu") == 8
+    # the process default resolves through jax.default_backend()
+    import jax
+    assert ops.bsr_block_size() == ops.bsr_block_size(jax.default_backend())
+    assert ops.bsr_auto_fill_min("cpu") == 2.0 / 8
+    assert ops.bsr_auto_fill_min("tpu") == 2.0 / 128
+    # eligibility tracks the per-hardware threshold: a fill that is too
+    # sparse for 8-wide blocks clears the 128-wide TPU break-even
+    bsr = ops.backend_spec("bsr")
+    info = ops.ProblemInfo(num_rows=4096, block_fill=0.05)
+    assert bsr.auto_eligible(info, "tpu")
+    assert 0.05 < ops.bsr_auto_fill_min("cpu")
+
+
 # ------------------------------------------------------------------ #
 # stream parity
 # ------------------------------------------------------------------ #

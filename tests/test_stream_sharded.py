@@ -113,7 +113,7 @@ def test_mesh_accepts_bsr_backend():
     rng = np.random.default_rng(0)
     p = random_problem(rng, 64, 2)
     f0, fr = jnp.full((64,), 0.5), jnp.ones(64, bool)
-    layout = ell_bsr_layout(np.asarray(p.nbr), ops.BSR_BLOCK_SIZE)
+    layout = ell_bsr_layout(np.asarray(p.nbr), ops.bsr_block_size())
     res = ops.run_propagation(
         p, f0, fr, backend="bsr", mesh=make_stream_mesh(1),
         slot=layout.slot, num_slots=layout.num_slots)
